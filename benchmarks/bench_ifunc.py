@@ -1,0 +1,203 @@
+"""Paper §4 microbenchmarks: ifunc vs UCX-AM latency (Fig. 3) and message
+throughput (Fig. 4), plus the first-arrival link cost (§3.4 hash table).
+
+Same protocol as the paper: the benchmark ifunc bumps a counter on the
+target; the throughput bench fills a ring with frames, flushes, and waits
+for the consumer; ping-pong halves a round trip.  Payload sizes sweep
+1B..1MB.  Reported: us/msg and the ifunc-vs-AM ratio (the paper's
+"latency reduction" / "throughput increase" curves).
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import time
+
+os.environ.setdefault("REPRO_IFUNC_LIB_DIR", str(pathlib.Path(__file__).resolve().parents[1] / "ifunc_libs"))
+
+from repro.core import (AmContext, AmEndpoint, Context, RingBuffer, Status,
+                        ifunc_msg_create, ifunc_msg_send_nbix, poll_ifunc,
+                        poll_ring, register_ifunc)
+
+SIZES = [1, 16, 256, 1 << 10, 2 << 10, 4 << 10, 8 << 10, 16 << 10, 64 << 10,
+         256 << 10, 1 << 20]
+
+
+def _pair(link_mode="remote"):
+    libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
+    src = Context("src", lib_dir=libdir)
+    dst = Context("dst", lib_dir=libdir, link_mode=link_mode)
+    ep = src.nic.connect(dst.nic)
+    return src, dst, ep
+
+
+def bench_ifunc_latency(n_iters: int = 300) -> list[dict]:
+    """One-way latency (ping-pong/2) per payload size."""
+    rows = []
+    src, dst, ep = _pair()
+    back = dst.nic.connect(src.nic)
+    h_src = register_ifunc(src, "counter_bump")
+    h_dst = register_ifunc(dst, "counter_bump")
+    r_dst = dst.nic.mem_map(4 << 20)
+    r_src = src.nic.mem_map(4 << 20)
+    for size in SIZES:
+        payload = b"x" * size
+        targs_s, targs_d = {}, {}
+        # warm the link caches (exclude first-arrival cost — measured separately)
+        m = ifunc_msg_create(h_src, payload)
+        ifunc_msg_send_nbix(ep, m, r_dst.base, r_dst.rkey)
+        poll_ifunc(dst, r_dst.view(), None, targs_d)
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            m = ifunc_msg_create(h_src, payload)
+            ifunc_msg_send_nbix(ep, m, r_dst.base, r_dst.rkey)
+            while poll_ifunc(dst, r_dst.view(), None, targs_d) != Status.OK:
+                pass
+            m2 = ifunc_msg_create(h_dst, payload)
+            ifunc_msg_send_nbix(back, m2, r_src.base, r_src.rkey)
+            while poll_ifunc(src, r_src.view(), None, targs_s) != Status.OK:
+                pass
+        dt = (time.perf_counter() - t0) / n_iters / 2
+        rows.append({"bench": "latency", "api": "ifunc", "size": size,
+                     "us": dt * 1e6})
+    return rows
+
+
+def bench_am_latency(n_iters: int = 300) -> list[dict]:
+    rows = []
+    a, b = AmContext("a"), AmContext("b")
+    a.register(1, lambda p, n, t: None)
+    b.register(1, lambda p, n, t: None)
+    ab, ba = AmEndpoint(a, b), AmEndpoint(b, a)
+    for size in SIZES:
+        payload = b"x" * size
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            ab.send(1, payload)
+            while b.progress() == 0:
+                pass
+            ba.send(1, payload)
+            while a.progress() == 0:
+                pass
+        dt = (time.perf_counter() - t0) / n_iters / 2
+        rows.append({"bench": "latency", "api": "am", "size": size, "us": dt * 1e6})
+    return rows
+
+
+def bench_ifunc_throughput(n_msgs: int = 512) -> list[dict]:
+    """Messages/s: fill the ring, flush, wait for consumer (paper §4.1)."""
+    rows = []
+    src, dst, ep = _pair()
+    h = register_ifunc(src, "counter_bump")
+    for size in SIZES:
+        payload = b"x" * size
+        msg = ifunc_msg_create(h, payload)
+        slot = 1 << max(msg.nbytes - 1, 1).bit_length()
+        region = dst.nic.mem_map(slot * 64)
+        ring = RingBuffer(region, slot)
+        targs = {}
+        sent = 0
+        t0 = time.perf_counter()
+        while sent < n_msgs:
+            burst = min(ring.n_slots, n_msgs - sent)
+            for _ in range(burst):   # source fills the buffer ...
+                m = ifunc_msg_create(h, payload)
+                ifunc_msg_send_nbix(ep, m, ring.slot_addr(ring.tail), region.rkey)
+                ring.tail += 1
+            ep.flush()               # ... flushes ...
+            done = 0
+            while done < burst:      # ... and waits on the target's notification
+                if poll_ring(dst, ring, targs) == Status.OK:
+                    done += 1
+            sent += burst
+        dt = time.perf_counter() - t0
+        rows.append({"bench": "throughput", "api": "ifunc", "size": size,
+                     "msgs_per_s": n_msgs / dt, "us": dt / n_msgs * 1e6})
+    return rows
+
+
+def bench_am_throughput(n_msgs: int = 512) -> list[dict]:
+    rows = []
+    for size in SIZES:
+        a, b = AmContext("a", n_slots=256), AmContext("b", n_slots=256)
+        b.register(1, lambda p, n, t: None)
+        ab = AmEndpoint(a, b)
+        payload = b"x" * size
+        done = 0
+        t0 = time.perf_counter()
+        sent = 0
+        while sent < n_msgs:
+            burst = min(128, n_msgs - sent)
+            for _ in range(burst):   # AM: runtime-internal buffers, just send
+                ab.send(1, payload)
+            ab.flush()
+            done += b.progress()
+            sent += burst
+        dt = time.perf_counter() - t0
+        rows.append({"bench": "throughput", "api": "am", "size": size,
+                     "msgs_per_s": n_msgs / dt, "us": dt / n_msgs * 1e6})
+    return rows
+
+
+def bench_link_cost(n_names: int = 50) -> list[dict]:
+    """First-arrival (link+verify) vs cached dispatch (§3.4 hash table)."""
+    import shutil
+    import tempfile
+
+    srcdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
+    tmp = pathlib.Path(tempfile.mkdtemp())
+    names = []
+    base = (srcdir / "counter_bump.py").read_text()
+    for i in range(n_names):
+        nm = f"cb_{i:03d}"
+        (tmp / f"{nm}.py").write_text(base.replace("counter_bump", nm))
+        names.append(nm)
+    src = Context("src", lib_dir=tmp)
+    dst = Context("dst", lib_dir=tmp, link_mode="remote")
+    ep = src.nic.connect(dst.nic)
+    region = dst.nic.mem_map(1 << 20)
+    targs = {}
+    first, cached = [], []
+    for nm in names:
+        h = register_ifunc(src, nm)
+        m = ifunc_msg_create(h, b"p")
+        ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+        t0 = time.perf_counter()
+        assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+        first.append(time.perf_counter() - t0)
+        m = ifunc_msg_create(h, b"p")
+        ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+        t0 = time.perf_counter()
+        assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+        cached.append(time.perf_counter() - t0)
+    shutil.rmtree(tmp)
+    med = lambda xs: sorted(xs)[len(xs) // 2]
+    return [
+        {"bench": "link_cost", "api": "ifunc-first-arrival", "size": 1,
+         "us": med(first) * 1e6},
+        {"bench": "link_cost", "api": "ifunc-cached", "size": 1,
+         "us": med(cached) * 1e6},
+    ]
+
+
+def bench_uvm(n_tiles: int = 8, iters: int = 5) -> list[dict]:
+    """Device-tier μVM execution cost per injected program (interpret mode)."""
+    import numpy as np
+
+    from repro.core.codegen import assemble
+    from repro.kernels import ops as K
+
+    prog = assemble([
+        ("loadp", 0), ("loade", 1, 0), ("matmul", 2, 0, 1),
+        ("relu", 2, 2), ("store", 0, 2),
+    ], symbols=("W",))
+    pay = np.random.default_rng(0).standard_normal((n_tiles, 128, 128)).astype("float32")
+    W = np.eye(128, dtype="float32")
+    K.uvm_execute(prog, pay, [W])  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        K.uvm_execute(prog, pay, [W])
+    dt = (time.perf_counter() - t0) / iters
+    return [{"bench": "uvm", "api": "ifunc-vm", "size": n_tiles * 128 * 128 * 4,
+             "us": dt * 1e6}]

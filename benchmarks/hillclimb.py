@@ -1,0 +1,26 @@
+"""Hillclimb driver (EXPERIMENTS.md §Perf tool): compile one cell under a
+policy, print the three roofline terms.
+
+    PYTHONPATH=src python benchmarks/hillclimb.py <arch> <shape> <policy>
+"""
+import sys
+sys.path.insert(0, "/root/repo")
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+from benchmarks.roofline import analyze_cell  # noqa: E402
+import json, pathlib  # noqa: E402
+
+arch, shape, policy = sys.argv[1], sys.argv[2], sys.argv[3]
+tag = policy.replace("+", "_")
+rec = run_cell(arch, shape, "pod", policy=policy, tag=tag)
+if rec["status"] != "ok":
+    print(json.dumps(rec, indent=1)[:3000])
+    sys.exit(1)
+cell_json = pathlib.Path(f"/root/repo/experiments/dryrun/{rec['cell']}.json")
+r = analyze_cell(cell_json)
+print(f"POLICY {policy}  compile={rec['compile_s']}s temp={rec['memory']['temp_bytes']/2**30:.1f}GiB")
+print(f"  compute_s={r['compute_s']:.4f} memory_s={r['memory_s']:.4f} "
+      f"collective_s={r['collective_s']:.4f} dominant={r['dominant']}")
+print(f"  useful_flops_ratio={r['useful_flops_ratio']:.3f} "
+      f"roofline_fraction={r['roofline_fraction']:.2%}")
+print(f"  coll_by_type={{", ", ".join(f"{k}:{v/2**30:.1f}GiB" for k, v in r['coll_bytes_by_type'].items()), "}")

@@ -1,0 +1,627 @@
+"""Per-op cost walk over optimized HLO text, with loop trip-count handling.
+
+Why: on this XLA build, ``compiled.cost_analysis()`` counts a ``while``
+(scan) body exactly once, so any scanned-layers model under-reports FLOPs
+by ~num_layers (verified in DESIGN.md §7).  This parser rebuilds the cost
+from the partitioned module text:
+
+* computations + per-op result shapes (symbol table incl. parameters);
+* dot FLOPs from ``lhs_contracting_dims`` x operand shapes;
+* elementwise / reduce / transcendental element counts;
+* bytes = operands + outputs per op (fusions opaque, call-plumbing free);
+* collective wire bytes per type with replica-group sizes and ring
+  multipliers;
+* while bodies multiplied by trip counts parsed from their condition's
+  limit constant; conditionals take the max branch.
+
+All numbers are **per device** (the module is the per-device SPMD program).
+Validated against cost_analysis() on unrolled modules (tests/test_hlo_cost).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_TRANSCENDENTAL = {"exponential", "exp", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "erf", "exponential-minus-one",
+                   "log-plus-one", "atan2", "cbrt"}
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "reshape", "after-all", "opt-barrier", "custom-call", "while",
+             "conditional", "call", "iota", "partition-id", "replica-id",
+             "get-dimension-size", "rng-bit-generator", "domain"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclass
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+    is_tuple: bool = False
+    elems_override: int | None = None
+
+    @property
+    def elems(self) -> int:
+        if self.elems_override is not None:
+            return self.elems_override
+        return math.prod(self.dims) if self.dims else 1
+
+    @property
+    def bytes(self) -> int:
+        if self.elems_override is not None:  # tuple: pre-summed
+            return self.elems_override
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def parse_shape(s: str) -> Shape:
+    """'bf16[16,4096]{1,0:T(8,128)}' or '(f32[2], s32[])' -> Shape.
+    Tuples collapse to a byte-sum pseudo-shape."""
+    s = s.strip()
+    if s.startswith("("):
+        total = 0
+        for part in _split_top(s[1:-1]):
+            if part.strip():
+                total += parse_shape(part).bytes
+        return Shape("tuple", (), True, elems_override=total)
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", s)
+    if not m:
+        return Shape("opaque", ())
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return Shape(m.group(1), dims)
+
+
+def _split_top(s: str) -> list[str]:
+    """Split on commas at bracket depth 0."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    shape: Shape
+    operands: list[str]
+    attrs: str
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(rf"{key}=([%\w\.\-]+)", self.attrs)
+        return m.group(1) if m else None
+
+    def attr_dims(self, key: str) -> tuple[int, ...]:
+        m = re.search(rf"{key}={{([\d,]*)}}", self.attrs)
+        return tuple(int(x) for x in m.group(1).split(",") if x) if m else ()
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict[str, Shape]
+    ops: list[Op] = field(default_factory=list)
+    shapes: dict[str, Shape] = field(default_factory=dict)
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _scan_balanced(s: str, i: int, open_ch: str, close_ch: str) -> int:
+    """Index just past the bracketed region starting at s[i] == open_ch."""
+    depth = 0
+    while i < len(s):
+        if s[i] == open_ch:
+            depth += 1
+        elif s[i] == close_ch:
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def _parse_op_line(line: str) -> tuple[str, str, str, list[str], str] | None:
+    """'  ROOT %n = TYPE opcode(operands), attrs' -> fields (bracket-aware:
+    tuple types contain nested parens/braces that defeat regexes)."""
+    s = _COMMENT_RE.sub("", line).strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    m = re.match(r"%?([\w\.\-]+)\s*=\s*", s)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    # type: '(tuple...)' or 'dtype[dims]{layout}'
+    if i < len(s) and s[i] == "(":
+        j = _scan_balanced(s, i, "(", ")")
+        type_s = s[i:j]
+    else:
+        tm = re.match(r"[a-z0-9]+\[[\d,]*\]", s[i:])
+        if not tm:
+            return None
+        j = i + tm.end()
+        if j < len(s) and s[j] == "{":
+            j = _scan_balanced(s, j, "{", "}")
+        type_s = s[i:j]
+    rest = s[j:].lstrip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    k = _scan_balanced(rest, om.end() - 1, "(", ")")
+    operands_s = rest[om.end():k - 1]
+    attrs = rest[k:]
+    operands = []
+    for o in _split_top(operands_s):
+        o = o.strip()
+        mm = re.search(r"%?([\w\.\-]+)\s*$", o)
+        if mm:
+            operands.append(mm.group(1))
+    return name, type_s, opcode, operands, attrs
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(_COMMENT_RE.sub("", line).strip())
+            if m:
+                is_entry, name, params_s, _ret = m.groups()
+                params = {}
+                for p in _split_top(params_s):
+                    if ":" in p:
+                        pname, ptype = p.split(":", 1)
+                        params[pname.strip().lstrip("%")] = parse_shape(ptype)
+                cur = Computation(name, params)
+                cur.shapes.update(params)
+                if is_entry:
+                    entry = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, type_s, opcode, operands, attrs = parsed
+        op = Op(name, opcode, parse_shape(type_s), operands, attrs)
+        cur.ops.append(op)
+        cur.shapes[name] = op.shape
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# cost model
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict[str, float] = field(default_factory=dict)       # raw operand bytes
+    coll_wire: float = 0.0                                           # ring-model per-device
+    coll_counts: dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        self.coll_wire += other.coll_wire * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + int(v * mult)
+
+
+_COLL_LOWERING_RE = re.compile(
+    r'op_name="[^"]*/(all_to_all|all_gather|psum_scatter|psum|all-reduce|'
+    r'reduce_scatter|ppermute|collective_permute)[/"]')
+_COLL_HELPER_OPS = {"convert", "concatenate", "copy", "slice", "bitcast",
+                    "reshape", "transpose", "fusion", "add"}
+
+
+def _is_collective_lowering(op: "Op") -> bool:
+    """True for data-movement helper ops the CPU backend materializes when
+    emulating a collective (convert/concat chains around all-to-all etc.).
+    On the TPU target the collective is one ICI DMA whose HBM traffic is the
+    operand+result bytes already charged on the collective op itself."""
+    return (op.opcode in _COLL_HELPER_OPS
+            and _COLL_LOWERING_RE.search(op.attrs) is not None)
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))                      # [n_groups, group_size]
+    m = re.search(r"replica_groups={{([\d,]+)}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _dot_flops(op: Op, shapes: dict[str, Shape]) -> float:
+    lhs = shapes.get(op.operands[0]) if op.operands else None
+    contract = op.attr_dims("lhs_contracting_dims")
+    k = 1
+    if lhs is not None and contract:
+        for d in contract:
+            if d < len(lhs.dims):
+                k *= lhs.dims[d]
+    return 2.0 * op.shape.elems * k
+
+
+def _op_cost(op: Op, comp: Computation, trip_of: dict[str, float]) -> Cost:
+    c = Cost()
+    oc = op.opcode
+    if oc in _FREE_OPS:
+        return c
+    if _is_collective_lowering(op):
+        return c
+    out_b = op.shape.bytes
+    in_b = sum(comp.shapes[o].bytes for o in op.operands if o in comp.shapes)
+    if oc == "fusion":
+        # operand/output bytes refined in module_cost (slice-aware)
+        c.bytes = 0.0
+        return c
+    if oc in _COLLECTIVES:
+        g = _group_size(op.attrs)
+        size = max(in_b, out_b)
+        mult = {"all-gather": (g - 1) / g, "reduce-scatter": (g - 1) / g,
+                "all-reduce": 2 * (g - 1) / g, "all-to-all": (g - 1) / g,
+                "collective-permute": 1.0}[oc]
+        c.coll_bytes[oc] = c.coll_bytes.get(oc, 0.0) + size
+        c.coll_counts[oc] = c.coll_counts.get(oc, 0) + 1
+        c.coll_wire += size * mult
+        c.bytes += in_b + out_b
+        return c
+    # touched-region accounting for slicing ops (full-operand counting would
+    # claim the whole array is read each scan iteration)
+    if oc in ("dynamic-slice", "slice"):
+        idx_b = sum(comp.shapes[o].bytes for o in op.operands[1:] if o in comp.shapes)
+        c.bytes = 2 * out_b + idx_b
+        return c
+    if oc == "dynamic-update-slice":
+        upd_b = (comp.shapes[op.operands[1]].bytes
+                 if len(op.operands) > 1 and op.operands[1] in comp.shapes else out_b)
+        c.bytes = 2 * upd_b
+        return c
+    if oc == "gather":
+        idx_b = (comp.shapes[op.operands[1]].bytes
+                 if len(op.operands) > 1 and op.operands[1] in comp.shapes else 0)
+        c.bytes = 2 * out_b + idx_b
+        return c
+    if oc == "scatter":
+        upd_b = (comp.shapes[op.operands[2]].bytes
+                 if len(op.operands) > 2 and op.operands[2] in comp.shapes else out_b)
+        c.bytes = 2 * upd_b + out_b
+        return c
+    c.bytes = in_b + out_b
+    if oc == "dot":
+        c.flops = _dot_flops(op, comp.shapes)
+    elif oc == "convolution":
+        # window elems x output elems x 2 (approximate; rare in this codebase)
+        c.flops = 2.0 * op.shape.elems * 64
+    elif oc in _TRANSCENDENTAL:
+        c.transcendentals = op.shape.elems
+        c.flops = op.shape.elems
+    elif oc in ("reduce", "reduce-window"):
+        c.flops = sum(comp.shapes[o].elems for o in op.operands[:1]
+                      if o in comp.shapes)
+    else:
+        c.flops = op.shape.elems   # elementwise default
+    return c
+
+
+def _fusion_operand_bytes(op: Op, caller: Computation, called: Computation) -> float:
+    """Bytes read by a fusion from each operand: full operand size unless the
+    corresponding parameter is consumed exclusively by slicing ops inside the
+    fusion (then only the sliced regions are touched)."""
+    # parameter(i) name -> positional index
+    pidx: dict[str, int] = {}
+    for o in called.ops:
+        if o.opcode == "parameter" and o.operands:
+            try:
+                pidx[o.name] = int(o.operands[0])
+            except ValueError:
+                pass
+    touched: dict[int, float] = {}
+    full: set[int] = set()
+    for o in called.ops:
+        for j, src in enumerate(o.operands):
+            if src not in pidx:
+                continue
+            i = pidx[src]
+            if o.opcode in ("dynamic-slice", "slice", "gather") and j == 0:
+                touched[i] = touched.get(i, 0.0) + o.shape.bytes
+            elif o.opcode == "dynamic-update-slice" and j == 0:
+                # in-place update of a loop-carried buffer: only the updated
+                # region is written/read, not the whole stacked array
+                upd = (called.shapes[o.operands[1]].bytes
+                       if len(o.operands) > 1 and o.operands[1] in called.shapes
+                       else o.shape.bytes)
+                touched[i] = touched.get(i, 0.0) + upd
+            elif o.opcode == "parameter":
+                continue
+            else:
+                full.add(i)
+    total = 0.0
+    for i, name in enumerate(op.operands):
+        sz = caller.shapes[name].bytes if name in caller.shapes else 0
+        if i in full or i not in touched:
+            total += sz
+        else:
+            total += min(touched[i], sz)
+    return total
+
+
+def _fusion_output_bytes(op: Op, called: Computation) -> float:
+    """Fusion output bytes, slice-aware: if the fusion's result is produced
+    by dynamic-update-slice(s) (stacking into a loop-carried buffer), only
+    the update regions are actually written."""
+    dus_out = 0.0
+    dus_shapes = 0.0
+    for o in called.ops:
+        if o.opcode == "dynamic-update-slice":
+            upd = (called.shapes[o.operands[1]].bytes
+                   if len(o.operands) > 1 and o.operands[1] in called.shapes
+                   else o.shape.bytes)
+            dus_out += upd
+            dus_shapes += o.shape.bytes
+    out_b = op.shape.bytes
+    if dus_shapes > 0 and dus_shapes >= 0.5 * out_b:
+        return dus_out + max(0.0, out_b - dus_shapes)
+    return out_b
+
+
+def _while_trip(op: Op, cond: Computation | None) -> float:
+    """Trip count: XLA's ``backend_config known_trip_count`` when present
+    (authoritative), else the largest integer constant in the condition."""
+    m = re.search(r'known_trip_count[\\"]*:{[\\"]*n[\\"]*:[\\"]*(\d+)', op.attrs)
+    if m:
+        return float(m.group(1))
+    best = 1
+    if cond is not None:
+        for o in cond.ops:
+            if o.opcode == "constant" and o.operands:
+                try:
+                    best = max(best, int(o.operands[0]))
+                except ValueError:
+                    pass
+    return float(best)
+
+
+def module_cost(text: str) -> Cost:
+    comps, entry = parse_module(text)
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps[name]
+        total = Cost()
+        for op in comp.ops:
+            total.add(_op_cost(op, comp, {}))
+            if op.opcode == "while":
+                body, cond = op.attr("body"), op.attr("condition")
+                body = body.lstrip("%") if body else None
+                cond = cond.lstrip("%") if cond else None
+                trip = _while_trip(op, comps.get(cond))
+                if body in comps:
+                    total.add(comp_cost(body), trip)
+                if cond in comps:
+                    total.add(comp_cost(cond), trip + 1)
+            elif op.opcode == "fusion":
+                called = op.attr("calls")
+                called = called.lstrip("%") if called else None
+                if called in comps:
+                    sub = comp_cost(called)
+                    fc = Cost()   # fusion: flops yes, internal bytes no
+                    fc.flops, fc.transcendentals = sub.flops, sub.transcendentals
+                    fc.coll_bytes, fc.coll_wire = sub.coll_bytes, sub.coll_wire
+                    fc.coll_counts = sub.coll_counts
+                    if not _is_collective_lowering(op):
+                        fc.bytes = (_fusion_operand_bytes(op, comp, comps[called])
+                                    + _fusion_output_bytes(op, comps[called]))
+                    total.add(fc)
+            elif op.opcode == "conditional":
+                branches = re.findall(r"(?:true_computation|false_computation|"
+                                      r"branch_computations={[^}]*)=?%([\w\.\-]+)",
+                                      op.attrs)
+                if branches:
+                    subs = [comp_cost(b) for b in branches if b in comps]
+                    if subs:
+                        total.add(max(subs, key=lambda s: s.flops))
+            elif op.opcode == "call":
+                called = op.attr("to_apply")
+                called = called.lstrip("%") if called else None
+                if called in comps:
+                    total.add(comp_cost(called))
+        memo[name] = total
+        return total
+
+    return comp_cost(entry)
+
+
+def cost_from_file(path: str) -> Cost:
+    with open(path) as f:
+        return module_cost(f.read())
+
+
+def _call_multipliers(comps, entry) -> dict[str, float]:
+    """Execution count of every non-fused computation (trip-aware)."""
+    mult = {entry: 1.0}
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        for op in comps[name].ops:
+            if op.opcode == "while":
+                body = (op.attr("body") or "").lstrip("%")
+                cond = (op.attr("condition") or "").lstrip("%")
+                trip = _while_trip(op, comps.get(cond))
+                for c, m in ((body, trip), (cond, trip + 1)):
+                    if c in comps:
+                        mult[c] = mult.get(c, 0.0) + mult[name] * m
+                        if c not in seen:
+                            seen.add(c)
+                            order.append(c)
+            elif op.opcode == "call":
+                c = (op.attr("to_apply") or "").lstrip("%")
+                if c in comps:
+                    mult[c] = mult.get(c, 0.0) + mult[name]
+                    if c not in seen:
+                        seen.add(c)
+                        order.append(c)
+    return mult
+
+
+def score_traffic(text: str, seq_len: int, q_chunk: int,
+                  scope: str = "attnscore") -> float:
+    """Per-device HBM bytes moved by attention-score-class ops.
+
+    Classification is primarily by the ``jax.named_scope`` tag the model
+    emits around the per-chunk attention body (robust: survives fusion since
+    the metadata op_name carries the scope), with a shape-based fallback
+    ({seq, q_chunk} minor dims) for ops whose metadata was dropped.  This is
+    the traffic the flash-attention kernel keeps in VMEM; the roofline's
+    kernel-path memory term subtracts it (see flash_attn.flash_hbm_bytes)."""
+    comps, entry = parse_module(text)
+    mult = _call_multipliers(comps, entry)
+    fused = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fused.add((op.attr("calls") or "").lstrip("%"))
+
+    C = min(q_chunk, seq_len)
+
+    def scorelike(sh: Shape) -> bool:
+        d = sh.dims
+        if len(d) < 3:
+            return False
+        lo, hi = sorted(d[-2:])
+        return hi == seq_len and lo in (C, seq_len)
+
+    def in_scope(op: Op, comp: Computation) -> bool:
+        if scope in op.attrs:
+            return True
+        if op.opcode == "fusion":
+            called = (op.attr("calls") or "").lstrip("%")
+            if called in comps:
+                return any(scope in o.attrs for o in comps[called].ops)
+        return False
+
+    total = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0 or name in fused:
+            continue
+        for op in comp.ops:
+            if (op.opcode in _FREE_OPS or op.opcode in _COLLECTIVES
+                    or _is_collective_lowering(op)):
+                continue
+            c = _op_cost(op, comp, {})
+            b = c.bytes
+            if op.opcode == "fusion":
+                called = (op.attr("calls") or "").lstrip("%")
+                if called in comps:
+                    b = (_fusion_operand_bytes(op, comp, comps[called])
+                         + _fusion_output_bytes(op, comps[called]))
+            tensors = [comp.shapes[o] for o in op.operands if o in comp.shapes]
+            tensors.append(op.shape)
+            if in_scope(op, comp) or any(scorelike(t) for t in tensors):
+                total += m * b
+    return total
+
+
+# ---------------------------------------------------------------------------
+# diagnostics: per-opcode breakdown with trip multiplication (hillclimb tool)
+
+
+def module_breakdown(text: str, top: int = 25) -> list[tuple[str, float, float]]:
+    """[(opcode, bytes, flops)] aggregated over the executed call graph."""
+    comps, entry = parse_module(text)
+    agg: dict[str, list[float]] = {}
+    seen: dict[str, dict[str, list[float]]] = {}
+
+    def comp_agg(name: str) -> dict[str, list[float]]:
+        if name in seen:
+            return seen[name]
+        comp = comps[name]
+        out: dict[str, list[float]] = {}
+
+        def add(key, b, f, mult=1.0):
+            e = out.setdefault(key, [0.0, 0.0])
+            e[0] += b * mult
+            e[1] += f * mult
+
+        for op in comp.ops:
+            c = _op_cost(op, comp, {})
+            add(op.opcode, c.bytes, c.flops)
+            if op.opcode == "while":
+                body, cond = op.attr("body"), op.attr("condition")
+                body = body.lstrip("%") if body else None
+                cond = cond.lstrip("%") if cond else None
+                trip = _while_trip(op, comps.get(cond))
+                if body in comps:
+                    for k, (b, f) in comp_agg(body).items():
+                        add(k, b, f, trip)
+            elif op.opcode == "fusion":
+                called = op.attr("calls")
+                called = called.lstrip("%") if called else None
+                if called in comps:
+                    sub = comp_agg(called)
+                    add("fusion", _fusion_operand_bytes(op, comp, comps[called])
+                        + _fusion_output_bytes(op, comps[called]), 0.0)
+                    for k, (b, f) in sub.items():
+                        add(f"f:{k}", 0.0, f)   # fused flops only
+            elif op.opcode == "call":
+                called = op.attr("to_apply")
+                called = called.lstrip("%") if called else None
+                if called in comps:
+                    for k, (b, f) in comp_agg(called).items():
+                        add(k, b, f)
+        seen[name] = out
+        return out
+
+    total = comp_agg(entry)
+    rows = sorted(((k, v[0], v[1]) for k, v in total.items()),
+                  key=lambda r: -(r[1] + r[2] / 1e3))
+    return rows[:top]
+
+
+def print_breakdown(path: str, top: int = 25) -> None:
+    with open(path) as f:
+        rows = module_breakdown(f.read(), top)
+    print(f"{'opcode':28s} {'GiB':>10s} {'GFLOP':>10s}")
+    for k, b, fl in rows:
+        print(f"{k:28s} {b/2**30:10.2f} {fl/1e9:10.1f}")

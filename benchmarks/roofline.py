@@ -1,0 +1,209 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+For every compiled cell (see launch/dryrun.py) this derives, per device:
+
+    compute_s    = parsed_HLO_FLOPs / peak_FLOPs      (197 TFLOP/s bf16)
+    memory_s     = parsed_HLO_bytes / HBM_bw          (819 GB/s)
+    collective_s = ring-model wire bytes / ICI link   (50 GB/s)
+
+FLOPs/bytes come from benchmarks/hlo_cost.py (per-op walk with while-loop
+trip multiplication — cost_analysis() counts loop bodies once on this
+build).  MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D (prefill,
+decode) with N_active for MoE; the usefulness ratio and the step-time
+fraction (ideal model time / dominant term) are what §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.hlo_cost import cost_from_file
+
+PEAK_FLOPS = 197e12          # TPU v5e-class bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+OUT = ROOT / "experiments" / "roofline.json"
+
+
+def model_flops(rec: dict, cfg=None) -> float:
+    """Global useful FLOPs per step (standard MFU accounting)."""
+    from repro import configs as C
+
+    cfg = cfg or C.get_config(rec["arch"])
+    sp = C.SHAPES[rec["shape"]]
+    pc = cfg.param_counts()
+    n = pc["active"]
+    if sp.kind == "train":
+        return 6.0 * n * sp.global_batch * sp.seq_len
+    if sp.kind == "prefill":
+        return 2.0 * n * sp.global_batch * sp.seq_len
+    return 2.0 * n * sp.global_batch        # decode: one token per sequence
+
+
+def useful_bytes(rec: dict, cfg=None) -> float:
+    """Per-device lower bound on HBM traffic: weights (+opt state traffic
+    for train) + serving cache must each move once per step."""
+    from repro import configs as C
+    from repro.models import transformer as T
+
+    cfg = cfg or C.get_config(rec["arch"])
+    sp = C.SHAPES[rec["shape"]]
+    dev = rec.get("devices", 256)
+    pc = cfg.param_counts()
+    pbytes = pc["total"] * 2                     # bf16 weights
+    if sp.kind == "train":
+        # read params+m+v+grads, write params+m+v  (f32 opt states by default)
+        opt_mult = 4.0
+        return (pbytes * (1 + opt_mult)) / dev
+    if sp.kind == "prefill":
+        return pbytes / dev
+    cache = sum(s.shape and __import__("math").prod(s.shape) * s.dtype.itemsize or 0
+                for s in T.cache_shapes(cfg, sp.global_batch, sp.seq_len).values())
+    return (pc["active"] * 2 + cache) / dev
+
+
+def _flash_adjustment(rec: dict, hlo_text: str) -> dict:
+    """Kernel-path memory accounting: subtract the measured score-class
+    traffic, add the flash kernel's analytic HBM bytes (DESIGN.md §7;
+    kernel validated in tests/test_kernels.py)."""
+    from repro import configs as C
+    from repro.kernels.flash_attn import flash_hbm_bytes
+    from benchmarks.hlo_cost import score_traffic
+
+    cfg = C.get_config(rec["arch"])
+    sp = C.SHAPES[rec["shape"]]
+    score_b = score_traffic(hlo_text, sp.seq_len, cfg.q_chunk)
+    pattern = list(cfg.block_pattern) * cfg.n_super + list(cfg.trailing)
+    n_attn = sum(k.startswith("attn") for k in pattern)
+    fwd = flash_hbm_bytes(sp.global_batch, cfg.num_heads, sp.seq_len,
+                          cfg.head_dim, train=False)
+    if sp.kind == "train":
+        per_layer = flash_hbm_bytes(sp.global_batch, cfg.num_heads, sp.seq_len,
+                                    cfg.head_dim, train=True) + fwd  # remat refwd
+    else:
+        per_layer = fwd
+    flash_b = n_attn * per_layer / rec["devices"]
+    return {"score_bytes_per_dev": score_b, "flash_bytes_per_dev": flash_b}
+
+
+def _ssdk_adjustment(rec: dict, hlo_text: str) -> dict:
+    """SSD-kernel memory accounting: subtract the 'ssdscan'-scoped traffic
+    ([Q,Q] decay/score tensors), add kernels/ssd_scan.py's analytic bytes."""
+    from repro import configs as C
+    from repro.kernels.ssd_scan import ssd_hbm_bytes
+    from benchmarks.hlo_cost import score_traffic
+
+    cfg = C.get_config(rec["arch"])
+    sp = C.SHAPES[rec["shape"]]
+    ssd_b = score_traffic(hlo_text, -1, -1, scope="ssdscan")  # scope-only
+    pattern = list(cfg.block_pattern) * cfg.n_super + list(cfg.trailing)
+    n_ssd = sum(k == "ssd" for k in pattern)
+    per_layer = ssd_hbm_bytes(sp.global_batch, cfg.ssm_heads, sp.seq_len,
+                              cfg.ssm_head_dim, cfg.ssm_state,
+                              train=sp.kind == "train")
+    kern_b = n_ssd * per_layer / rec["devices"]
+    return {"ssd_bytes_per_dev": ssd_b, "ssdk_bytes_per_dev": kern_b}
+
+
+def analyze_cell(json_path: pathlib.Path) -> dict | None:
+    rec = json.loads(json_path.read_text())
+    if rec.get("status") != "ok":
+        return rec if rec.get("status") == "skipped" else None
+    hlo = rec.get("hlo_path")
+    if not hlo or not pathlib.Path(hlo).exists():
+        return None
+    hlo_text = pathlib.Path(hlo).read_text()
+    cost = cost_from_file(hlo)
+    dev = rec["devices"]
+    mf = model_flops(rec)
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes / HBM_BW
+    coll_s = cost.coll_wire / ICI_BW
+    tokens = rec.get("policy", "").split("+")
+    adj = {}
+    if "flash" in tokens or "ssdk" in tokens:
+        adj["memory_s_xla"] = memory_s
+        mem_bytes = cost.bytes
+        if "flash" in tokens:
+            adj.update(_flash_adjustment(rec, hlo_text))
+            mem_bytes = max(mem_bytes - adj["score_bytes_per_dev"], 0.0) \
+                + adj["flash_bytes_per_dev"]
+        if "ssdk" in tokens:
+            adj.update(_ssdk_adjustment(rec, hlo_text))
+            mem_bytes = max(mem_bytes - adj["ssd_bytes_per_dev"], 0.0) \
+                + adj["ssdk_bytes_per_dev"]
+        memory_s = mem_bytes / HBM_BW
+    dom = max((compute_s, "compute"), (memory_s, "memory"), (coll_s, "collective"))
+    ideal_s = mf / dev / PEAK_FLOPS
+    ub = useful_bytes(rec)
+    out = {
+        **{k: rec[k] for k in ("cell", "arch", "shape", "mesh", "devices", "policy")},
+        "flops_per_dev": cost.flops,
+        "bytes_per_dev": cost.bytes,
+        "coll_wire_per_dev": cost.coll_wire,
+        "coll_bytes_by_type": cost.coll_bytes,
+        "coll_counts": cost.coll_counts,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom[1],
+        "bound_s": dom[0],
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / dev) / max(cost.flops, 1.0),
+        "useful_bytes_per_dev": ub,
+        "useful_bytes_ratio": ub / max(cost.bytes, 1.0),
+        "roofline_fraction": (mf / dev / PEAK_FLOPS) / max(dom[0], 1e-30),
+        "memory_gib": {k: v / 2**30 for k, v in rec["memory"].items()},
+        **adj,
+    }
+    return out
+
+
+def analyze_all(mesh: str = "pod", tag: str = "") -> list[dict]:
+    rows = []
+    suffix = f"__{mesh}" + (f"__{tag}" if tag else "")
+    for p in sorted(DRYRUN_DIR.glob(f"*{suffix}.json")):
+        if not p.name.endswith(f"{suffix}.json"):
+            continue
+        r = analyze_cell(p)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| cell | compute_s | memory_s | collective_s | dominant | "
+           "MODEL/HLO flops | roofline frac |\n|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['cell']} | — | — | — | skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.2%} |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = analyze_all(args.mesh, args.tag)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    out_path = OUT if not args.tag else OUT.with_name(f"roofline_{args.tag}.json")
+    out_path.write_text(json.dumps(rows, indent=1))
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} cells -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

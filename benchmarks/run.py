@@ -1,0 +1,102 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  fig3_latency     ifunc vs UCX-AM one-way latency across payload sizes
+  fig4_throughput  ifunc vs UCX-AM message rate across payload sizes
+  s34_link_cost    first-arrival link+verify vs hash-table-cached dispatch
+  tierB_uvm        device-tier μVM injected-program execution
+  roofline         summary of the dry-run roofline terms (if artifacts exist)
+
+Prints ``name,us_per_call,derived`` CSV rows; full rows land in
+experiments/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import bench_ifunc as B  # noqa: E402
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
+
+
+def _emit(rows: list[dict]) -> None:
+    for r in rows:
+        if "msgs_per_s" in r:
+            derived = f"{r['msgs_per_s']:.0f}msg/s"
+        elif "reduction" in r:
+            derived = f"{r['reduction']:+.1%}_vs_am"
+        elif "increase" in r:
+            derived = f"{r['increase']:+.1%}_vs_am"
+        elif "fraction" in r:
+            derived = f"{r['fraction']:.2%}_of_roofline"
+        else:
+            derived = ""
+        name = r.get("cell") or f"{r['api']}/{r['size']}B"
+        print(f"{r['bench']}/{name},{r['us']:.2f},{derived}")
+
+
+def fig3_latency() -> list[dict]:
+    rows = B.bench_ifunc_latency() + B.bench_am_latency()
+    by = {(r["size"], r["api"]): r["us"] for r in rows}
+    for size in B.SIZES:
+        if (size, "ifunc") in by and (size, "am") in by:
+            red = 1 - by[(size, "ifunc")] / by[(size, "am")]
+            rows.append({"bench": "latency_reduction_vs_am", "api": "ifunc",
+                         "size": size, "us": by[(size, "ifunc")],
+                         "reduction": round(red, 3)})
+    return rows
+
+
+def fig4_throughput() -> list[dict]:
+    rows = B.bench_ifunc_throughput() + B.bench_am_throughput()
+    by = {(r["size"], r["api"]): r["msgs_per_s"] for r in rows}
+    for size in B.SIZES:
+        if (size, "ifunc") in by and (size, "am") in by:
+            inc = by[(size, "ifunc")] / by[(size, "am")] - 1
+            rows.append({"bench": "throughput_increase_vs_am", "api": "ifunc",
+                         "size": size, "us": 0.0, "increase": round(inc, 3)})
+    return rows
+
+
+def s34_link_cost() -> list[dict]:
+    return B.bench_link_cost()
+
+
+def tierB_uvm() -> list[dict]:
+    return B.bench_uvm()
+
+
+def roofline_summary() -> list[dict]:
+    path = OUT.parent / "roofline.json"
+    if not path.exists():
+        return []
+    rows = []
+    for r in json.loads(path.read_text()):
+        if "bound_s" not in r:
+            continue
+        rows.append({"bench": "roofline", "api": r["dominant"],
+                     "size": r["devices"], "cell": r["cell"],
+                     "us": r["bound_s"] * 1e6,
+                     "fraction": round(r["roofline_fraction"], 4)})
+    return rows
+
+
+def main() -> None:
+    all_rows = []
+    for fn in (fig3_latency, fig4_throughput, s34_link_cost, tierB_uvm,
+               roofline_summary):
+        rows = fn()
+        _emit(rows)
+        all_rows += rows
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(all_rows, indent=1))
+    print(f"# {len(all_rows)} rows -> {OUT}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

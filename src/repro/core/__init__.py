@@ -1,0 +1,16 @@
+"""The paper's primary contribution: the ifunc API (remote function
+injection & invocation) plus its UCX-AM baseline, over an emulated RDMA
+fabric — and the TPU device-tier analogue (mailbox + μVM).  See DESIGN.md.
+"""
+
+from repro.core.api import (  # noqa: F401
+    Context, IfuncHandle, IfuncMsg, Status,
+    register_ifunc, deregister_ifunc,
+    ifunc_msg_create, ifunc_msg_free, ifunc_msg_send_nbix,
+    poll_ifunc, poll_ring,
+)
+from repro.core.active_message import AmContext, AmEndpoint  # noqa: F401
+from repro.core.codegen import SymbolSpace, assemble, LinkError  # noqa: F401
+from repro.core.frame import CodeKind, FrameError  # noqa: F401
+from repro.core.rdma import Access, AccessDenied, Nic, RingBuffer  # noqa: F401
+from repro.core.security import SecurityPolicy, PERMISSIVE, DEVICE_ONLY  # noqa: F401

@@ -1,0 +1,235 @@
+"""The ifunc API (paper Listing 1.1), UCP-style.
+
+    register_ifunc(ctx, name)            ~ ucp_register_ifunc
+    deregister_ifunc(ctx, handle)        ~ ucp_deregister_ifunc
+    ifunc_msg_create(handle, args)       ~ ucp_ifunc_msg_create
+    ifunc_msg_free(msg)                  ~ ucp_ifunc_msg_free
+    ifunc_msg_send_nbix(ep, msg, addr, rkey) ~ ucp_ifunc_msg_send_nbix
+    poll_ifunc(ctx, buf, size, target_args)  ~ ucp_poll_ifunc
+
+Differences from UCX AM are the paper's: registration happens at the
+*source*; the frame carries the code; the target auto-links first-seen
+names (hash-table cached) and rejects ill-formed frames.
+"""
+
+from __future__ import annotations
+
+import enum
+import pathlib
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import codegen as CG
+from repro.core import frame as F
+from repro.core import rdma as R
+from repro.core.registry import IfuncLibrary, LinkCache, RegistryError
+from repro.core.security import PERMISSIVE, PolicyViolation, SecurityPolicy
+
+
+class Status(enum.Enum):
+    OK = 0
+    NO_MESSAGE = 1         # nothing at this address yet
+    IN_PROGRESS = 2        # header here, trailer not yet (put in flight)
+    REJECTED = 3           # ill-formed / policy violation (frame cleared)
+
+
+def _default_wait_mem(spins: int) -> None:
+    """ucs_arch_wait_mem analogue: cheap backoff while spinning on the
+    trailer signal (WFE on Arm; sched-yield here)."""
+    if spins & 0x3F == 0:
+        time.sleep(0)
+
+
+@dataclass
+class Context:
+    """ucp_context analogue for one emulated process."""
+
+    name: str
+    nic: R.Nic = None
+    policy: SecurityPolicy = PERMISSIVE
+    lib_dir: pathlib.Path | None = None      # target-side library search dir
+    link_mode: str = "remote"                # "remote" (GOT reconstruction) |
+                                             # "local" (paper prototype: lib on fs)
+    symbol_space: CG.SymbolSpace = field(default_factory=CG.SymbolSpace)
+    link_cache: LinkCache = field(default_factory=LinkCache)
+    handles: dict[str, "IfuncHandle"] = field(default_factory=dict)
+    wait_mem = staticmethod(_default_wait_mem)
+    max_trailer_spins: int = 1_000_000
+    stats: dict = field(default_factory=lambda: {
+        "executed": 0, "rejected": 0, "links": 0, "bytes_in": 0})
+
+    def __post_init__(self):
+        if self.nic is None:
+            self.nic = R.Nic(self.name)
+
+
+@dataclass
+class IfuncHandle:
+    ctx: Context
+    lib: IfuncLibrary
+
+    @property
+    def name(self) -> str:
+        return self.lib.name
+
+
+@dataclass
+class IfuncMsg:
+    handle: IfuncHandle
+    frame: bytearray
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.frame)
+
+    @property
+    def payload_view(self) -> memoryview:
+        hdr = F.peek_header(self.frame)
+        return memoryview(self.frame)[hdr.payload_offset:hdr.frame_len - F.TRAILER_LEN]
+
+
+# ---------------------------------------------------------------------------
+# source side
+
+
+def register_ifunc(ctx: Context, name: str,
+                   search_dir: pathlib.Path | None = None) -> IfuncHandle:
+    lib = IfuncLibrary.load(name, search_dir or ctx.lib_dir,
+                            hmac_key=ctx.policy.hmac_key)
+    h = IfuncHandle(ctx, lib)
+    ctx.handles[name] = h
+    return h
+
+
+def deregister_ifunc(ctx: Context, handle: IfuncHandle) -> None:
+    ctx.handles.pop(handle.name, None)
+
+
+def ifunc_msg_create(handle: IfuncHandle, source_args,
+                     source_args_size: int | None = None) -> IfuncMsg:
+    """Build a frame.  payload_init writes *directly into the frame buffer*
+    (zero-copy, paper §3.1 'eliminate unnecessary memory copies')."""
+    lib = handle.lib
+    if source_args_size is None:
+        try:
+            source_args_size = len(source_args)
+        except TypeError:
+            source_args_size = 0
+    max_size = int(lib.payload_get_max_size(source_args, source_args_size))
+    frame = F.pack_frame(lib.name, lib.code, bytes(max_size), lib.kind)
+    hdr = F.peek_header(frame)
+    pv = memoryview(frame)[hdr.payload_offset:hdr.payload_offset + max_size]
+    used = lib.payload_init(pv, max_size, source_args, source_args_size)
+    used = max_size if used in (None, 0) else int(used)
+    if used < max_size:  # shrink: repack with exact payload
+        frame = F.pack_frame(lib.name, lib.code, bytes(pv[:used]), lib.kind)
+    return IfuncMsg(handle, frame)
+
+
+def ifunc_msg_free(msg: IfuncMsg) -> None:
+    msg.frame = bytearray()
+
+
+def ifunc_msg_send_nbix(ep: R.Endpoint, msg: IfuncMsg, remote_addr: int,
+                        rkey: int, **kw) -> Status:
+    ep.put_nbi(msg.frame, remote_addr, rkey, **kw)
+    return Status.OK
+
+
+# ---------------------------------------------------------------------------
+# target side
+
+
+def _link(ctx: Context, hdr: F.FrameHeader, code: bytes):
+    """First-arrival linking — the clear_cache/GOT-reconstruction moment."""
+    if hdr.code_kind == F.CodeKind.PYBC:
+        if ctx.link_mode == "remote":
+            if not ctx.policy.allow_remote_link:
+                raise PolicyViolation("remote linking disabled by policy")
+            return CG.link_pybc(code, ctx.symbol_space, hmac_key=ctx.policy.hmac_key)
+        # paper-prototype mode: auto-register the local library by name and
+        # patch to the local GOT (here: use the locally loaded main).
+        if not ctx.policy.allow_auto_register:
+            raise PolicyViolation("auto-registration disabled by policy")
+        lib = IfuncLibrary.load(hdr.name, ctx.lib_dir, hmac_key=ctx.policy.hmac_key)
+        return lib.main
+    if hdr.code_kind == F.CodeKind.HLO:
+        call = CG.link_hlo(code)
+
+        def run_hlo(payload, payload_size, target_args, _call=call):
+            arr = np.frombuffer(payload, np.uint8)
+            out = _call(arr)
+            if isinstance(target_args, dict):
+                target_args["result"] = out
+            return out
+        return run_hlo
+    if hdr.code_kind == F.CodeKind.UVM:
+        prog = CG.deserialize_uvm(code)
+
+        def run_uvm(payload, payload_size, target_args, _prog=prog):
+            from repro.kernels import ops as K  # lazy: core must not require kernels
+
+            tiles = np.frombuffer(payload, np.float32)
+            t = CG.UVM_TILE
+            tiles = tiles.reshape(-1, t, t)
+            ext_map = target_args.get("externals", {}) if isinstance(target_args, dict) else {}
+            ext = [np.asarray(ext_map[s], np.float32) for s in _prog.symbols]
+            out = K.uvm_execute(_prog, tiles, ext)
+            if isinstance(target_args, dict):
+                target_args["result"] = out
+            return out
+        return run_uvm
+    raise PolicyViolation(f"unsupported code kind {hdr.code_kind}")
+
+
+def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
+               *, clear: bool = True) -> Status:
+    """Poll one frame slot (paper §3.1).  Executes at most one message."""
+    buf = buffer if buffer_size is None else memoryview(buffer)[:buffer_size]
+    try:
+        hdr = F.peek_header(buf, ctx.policy.max_frame_len)
+        if hdr is None:
+            return Status.NO_MESSAGE
+        ctx.policy.check_header(hdr)
+        spins = 0
+        while not F.trailer_arrived(buf, hdr):
+            spins += 1
+            if spins > ctx.max_trailer_spins:
+                return Status.IN_PROGRESS
+            ctx.wait_mem(spins)
+        code, payload = F.frame_sections(buf, hdr)
+        import hashlib
+
+        chash = hashlib.sha256(code).hexdigest()
+        fn = ctx.link_cache.lookup(hdr.name, chash)
+        if fn is None:
+            fn = _link(ctx, hdr, code)
+            ctx.link_cache.insert(hdr.name, chash, fn)
+            ctx.stats["links"] += 1
+    except (F.FrameError, PolicyViolation, CG.LinkError, CG.CodeVerifyError,
+            RegistryError) as e:
+        ctx.stats["rejected"] += 1
+        ctx.stats["last_reject"] = f"{type(e).__name__}: {e}"
+        try:
+            bad = F.peek_header(buf)  # best-effort clear of the bad slot
+            if bad and clear:
+                F.clear_frame(buf, bad)
+        except F.FrameError:
+            buf[:F.HEADER_LEN] = b"\0" * F.HEADER_LEN
+        return Status.REJECTED
+    fn(payload, len(payload), target_args)
+    ctx.stats["executed"] += 1
+    ctx.stats["bytes_in"] += hdr.frame_len
+    if clear:
+        F.clear_frame(buf, hdr)
+    return Status.OK
+
+
+def poll_ring(ctx: Context, ring: R.RingBuffer, target_args) -> Status:
+    """Consume the next ring slot; advances head on OK/REJECTED."""
+    st = poll_ifunc(ctx, ring.slot_view(ring.head), None, target_args)
+    if st in (Status.OK, Status.REJECTED):
+        ring.head += 1
+    return st

@@ -1,0 +1,100 @@
+"""On-device ifunc mailbox: ring buffers in device memory, deposits over
+the ICI via ``ppermute`` (the RDMA-put analogue), polled/validated by the
+``ring_poll`` Pallas kernel — paper Fig. 2 realized inside an SPMD program.
+
+Word-frame layout (uint32, matches kernels/ring_poll.py):
+
+    w0 magic | w1 frame_words | w2 code_kind | w3 name_hash | w4 hdr_check
+    w5..5+frame_words-1 body (f32 payload bit-cast) | then trailer word
+
+The μVM program itself is *bound at poll-step build time* (the device-side
+hash-table-cached link): one compiled sweep handles any number of arriving
+frames of that ifunc kind.  Payload tiles are carried in the frame body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.codegen import UvmProgram
+from repro.kernels.ifunc_vm import ifunc_vm
+from repro.kernels.ring_poll import BAD, EMPTY, HDR_WORDS, INFLIGHT, MAGIC, READY, TRAILER
+from repro.kernels.ring_poll import ring_poll
+from repro.models.moe import shard_map  # version-shimmed shard_map
+
+
+def pack_word_frame(payload_f32: np.ndarray, slot_words: int, kind: int = 3,
+                    name_hash: int = 0xABC, *, corrupt: bool = False,
+                    no_trailer: bool = False) -> np.ndarray:
+    """Host-side framing of one device frame into a slot's word array."""
+    body = np.asarray(payload_f32, np.float32).reshape(-1).view(np.uint32)
+    fw = len(body)
+    assert fw <= slot_words - HDR_WORDS - 1, "payload too long for slot"
+    s = np.zeros(slot_words, np.uint32)
+    s[0], s[1], s[2], s[3] = MAGIC, fw, kind, name_hash
+    s[4] = (int(s[0]) ^ int(s[1]) ^ int(s[2]) ^ int(s[3])) ^ (1 if corrupt else 0)
+    s[HDR_WORDS:HDR_WORDS + fw] = body
+    if not no_trailer:
+        s[HDR_WORDS + fw] = TRAILER
+    return s
+
+
+def empty_mailbox(n_shards: int, n_slots: int, slot_words: int) -> jnp.ndarray:
+    return jnp.zeros((n_shards, n_slots, slot_words), jnp.uint32)
+
+
+def make_deposit(mesh, axis: str):
+    """Build ``deposit(mailbox, outgoing, shift)``: every shard one-sided
+    'puts' its outgoing slot-frames into the ring buffer of the shard
+    ``shift`` hops along ``axis`` (collective_permute == the ICI RDMA put)."""
+    n = mesh.shape[axis]
+
+    def deposit(mailbox, outgoing, shift: int):
+        def f(mb, out):
+            perm = [(i, (i + shift) % n) for i in range(n)]
+            arrived = jax.lax.ppermute(out, axis, perm)
+            # write into the first free slots (here: slots [0, k) of the ring)
+            k = arrived.shape[1]
+            return jax.lax.dynamic_update_slice(mb, arrived, (0, 0, 0))
+        return shard_map(f, mesh, in_specs=(P(axis, None, None), P(axis, None, None)),
+                         out_specs=P(axis, None, None))(mailbox, outgoing)
+
+    return deposit
+
+
+def make_sweep(mesh, axis: str, prog: UvmProgram, n_tiles: int, tile: int = 128,
+               *, interpret: bool = True):
+    """Build ``sweep(mailbox, externals)`` -> (status, results, cleared_mb).
+
+    Validates every slot with the ring_poll kernel, bit-casts READY frame
+    bodies back to f32 payload tiles, runs the bound μVM program over them
+    (masked by readiness), and clears consumed slots.
+    """
+    body_words = n_tiles * tile * tile
+
+    def sweep(mailbox, ext):
+        def f(mb, ext_l):
+            mb2 = mb[0]                      # [n_slots, slot_words]
+            status = ring_poll(mb2, interpret=interpret)
+            body = mb2[:, HDR_WORDS:HDR_WORDS + body_words]
+            tiles = jax.lax.bitcast_convert_type(body, jnp.float32)
+            tiles = tiles.reshape(mb2.shape[0] * n_tiles, tile, tile)
+            out = ifunc_vm(prog, tiles, ext_l[0], interpret=interpret)
+            out = out.reshape(mb2.shape[0], n_tiles, tile, tile)
+            ready = (status == READY)
+            out = out * ready[:, None, None, None].astype(out.dtype)
+            cleared = jnp.where(ready[:, None], jnp.zeros_like(mb2), mb2)
+            return status[None], out[None], cleared[None]
+        return shard_map(
+            f, mesh,
+            in_specs=(P(axis, None, None), P(axis, None, None, None)),
+            out_specs=(P(axis, None), P(axis, None, None, None), P(axis, None, None)),
+        )(mailbox, ext)
+
+    return sweep

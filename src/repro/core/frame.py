@@ -1,0 +1,133 @@
+"""ifunc message frame (paper Fig. 1).
+
+Layout (little-endian), mirroring the paper's
+``FRAME_LEN | GOT_OFFSET | PAYLOAD_OFFSET | IFUNC_NAME | SIGNAL | CODE |
+PAYLOAD | SIGNAL``:
+
+    offset  size  field
+    0       4     magic            0x1F5C0DE5
+    4       8     frame_len        total bytes incl. trailer
+    12      4     code_offset      start of code section (== HEADER_LEN)
+    16      8     payload_offset   start of payload section
+    24      4     code_kind        CodeKind enum (pybc | hlo | uvm)
+    28      32    ifunc_name       NUL-padded ascii
+    60      4     header_signal    fletcher32 over bytes [0, 60)
+    64      ...   code             serialized code section (+ symbol table)
+    ...     ...   payload
+    last 4        trailer_signal   0xD0E1F2A3 — written last; its arrival
+                                   means the whole frame has been delivered
+
+The header signal authenticates header *integrity* (reject ill-formed);
+the trailer signal is the delivery barrier the target spins on (paper §3.4,
+Fig. 2).  The one-sided put deposits bytes in order, so header-valid +
+trailer-present ⇒ frame complete.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from enum import IntEnum
+
+MAGIC = 0x1F5C0DE5
+TRAILER = 0xD0E1F2A3
+HEADER_LEN = 64
+NAME_LEN = 32
+TRAILER_LEN = 4
+
+_HEADER_FMT = "<IQIQI32s"  # magic, frame_len, code_off, payload_off, kind, name
+assert struct.calcsize(_HEADER_FMT) == 60
+
+
+class CodeKind(IntEnum):
+    PYBC = 1       # marshalled CPython bytecode + symbol table (host tier)
+    HLO = 2        # jax.export serialized StableHLO (host tier, jit-executed)
+    UVM = 3        # μVM bytecode for the Pallas interpreter (device tier)
+
+
+class FrameError(Exception):
+    """Ill-formed frame — poll_ifunc rejects (paper: 'will be rejected')."""
+
+
+def fletcher32(data: bytes) -> int:
+    a = b = 0xFFFF
+    for i in range(0, len(data) - 1, 2):
+        a = (a + (data[i] | (data[i + 1] << 8))) % 0xFFFF
+        b = (b + a) % 0xFFFF
+    if len(data) % 2:
+        a = (a + data[-1]) % 0xFFFF
+        b = (b + a) % 0xFFFF
+    return (b << 16) | a
+
+
+@dataclass(frozen=True)
+class FrameHeader:
+    frame_len: int
+    code_offset: int
+    payload_offset: int
+    code_kind: CodeKind
+    name: str
+
+
+def pack_frame(name: str, code: bytes, payload: bytes | bytearray,
+               kind: CodeKind) -> bytearray:
+    if len(name.encode()) >= NAME_LEN:
+        raise FrameError(f"ifunc name too long (>{NAME_LEN - 1}): {name!r}")
+    code_off = HEADER_LEN
+    payload_off = code_off + len(code)
+    frame_len = payload_off + len(payload) + TRAILER_LEN
+    hdr = struct.pack(_HEADER_FMT, MAGIC, frame_len, code_off, payload_off,
+                      int(kind), name.encode().ljust(NAME_LEN, b"\0"))
+    buf = bytearray(frame_len)
+    buf[:60] = hdr
+    buf[60:64] = struct.pack("<I", fletcher32(hdr))
+    buf[code_off:payload_off] = code
+    buf[payload_off:payload_off + len(payload)] = payload
+    buf[frame_len - TRAILER_LEN:frame_len] = struct.pack("<I", TRAILER)
+    return buf
+
+
+def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
+    """Validate + parse the header at buf[0:].  Returns None if no message
+    has arrived (zeroed magic); raises FrameError on corruption/bounds."""
+    if len(buf) < HEADER_LEN:
+        return None
+    raw = bytes(buf[:60])
+    magic = struct.unpack_from("<I", raw, 0)[0]
+    if magic == 0:
+        return None  # nothing written here yet
+    if magic != MAGIC:
+        raise FrameError(f"bad magic {magic:#x}")
+    (sig,) = struct.unpack_from("<I", bytes(buf[60:64]))
+    if sig != fletcher32(raw):
+        raise FrameError("header signal mismatch (corrupt header)")
+    magic, frame_len, code_off, payload_off, kind, name = struct.unpack(_HEADER_FMT, raw)
+    if max_frame is not None and frame_len > max_frame:
+        raise FrameError(f"frame too long ({frame_len} > {max_frame})")
+    if not (HEADER_LEN <= code_off <= payload_off <= frame_len - TRAILER_LEN):
+        raise FrameError("inconsistent offsets")
+    try:
+        kind = CodeKind(kind)
+    except ValueError as e:
+        raise FrameError(f"unknown code kind {kind}") from e
+    return FrameHeader(frame_len, code_off, payload_off, kind,
+                       name.rstrip(b"\0").decode(errors="strict"))
+
+
+def trailer_arrived(buf, hdr: FrameHeader) -> bool:
+    end = hdr.frame_len
+    if len(buf) < end:
+        raise FrameError("frame exceeds buffer")
+    (t,) = struct.unpack_from("<I", bytes(buf[end - 4:end]))
+    return t == TRAILER
+
+
+def frame_sections(buf, hdr: FrameHeader) -> tuple[bytes, bytes]:
+    code = bytes(buf[hdr.code_offset:hdr.payload_offset])
+    payload = bytes(buf[hdr.payload_offset:hdr.frame_len - TRAILER_LEN])
+    return code, payload
+
+
+def clear_frame(buf, hdr: FrameHeader) -> None:
+    """Zero a consumed frame slot so the next poll sees 'empty'."""
+    buf[:hdr.frame_len] = b"\0" * hdr.frame_len

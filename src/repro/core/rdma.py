@@ -1,0 +1,169 @@
+"""RDMA fabric emulation: mapped memory regions, rkeys, one-sided puts.
+
+Models the IBTA semantics the paper relies on (§3.5): memory must be
+registered (``mem_map``) to be remotely accessible; the NIC generates a
+32-bit RKEY from the registration; every inbound one-sided access is
+checked against rkey + permissions + bounds *before any byte moves* and
+rejected "at the hardware level" otherwise.
+
+Delivery semantics match what the frame protocol needs: bytes of a put
+land in order, but a put may be observed *partially complete* until the
+endpoint is flushed — this is why the trailer signal exists, and the tests
+exercise exactly that window (``deliver_bytes`` knob).
+"""
+
+from __future__ import annotations
+
+
+import secrets
+from dataclasses import dataclass, field
+from enum import Flag, auto
+
+
+class RdmaError(Exception):
+    pass
+
+
+class AccessDenied(RdmaError):
+    """Invalid rkey / permission / bounds — request rejected by the 'HCA'."""
+
+
+class Access(Flag):
+    READ = auto()
+    WRITE = auto()
+    ATOMIC = auto()
+    RW = READ | WRITE
+
+
+@dataclass
+class MemRegion:
+    nic: "Nic"
+    base: int
+    buf: bytearray
+    rkey: int
+    access: Access
+
+    @property
+    def size(self) -> int:
+        return len(self.buf)
+
+    def view(self, off: int = 0, ln: int | None = None) -> memoryview:
+        ln = self.size - off if ln is None else ln
+        return memoryview(self.buf)[off:off + ln]
+
+
+@dataclass
+class _PendingPut:
+    region: MemRegion
+    offset: int
+    data: bytes
+    delivered: int = 0  # bytes already visible at the target
+
+
+class Endpoint:
+    """One-sided channel from a local NIC to a remote NIC."""
+
+    def __init__(self, nic: "Nic", remote: "Nic"):
+        self.nic, self.remote = nic, remote
+        self._pending: list[_PendingPut] = []
+        self.stats = {"puts": 0, "bytes": 0, "flushes": 0, "rejected": 0}
+
+    # -- the ucp_put_nbi analogue ------------------------------------------
+    def put_nbi(self, data: bytes | bytearray | memoryview, remote_addr: int,
+                rkey: int, *, deliver_bytes: int | None = None) -> None:
+        """Non-blocking one-sided write.  ``deliver_bytes`` (tests only)
+        makes just a prefix visible until flush — modelling in-flight puts."""
+        region, off = self.remote.check_access(remote_addr, len(data), rkey, Access.WRITE,
+                                               ep=self)
+        data = bytes(data)
+        p = _PendingPut(region, off, data)
+        n = len(data) if deliver_bytes is None else min(deliver_bytes, len(data))
+        region.buf[off:off + n] = data[:n]
+        p.delivered = n
+        if n < len(data):
+            self._pending.append(p)
+        self.stats["puts"] += 1
+        self.stats["bytes"] += len(data)
+
+    def get(self, remote_addr: int, ln: int, rkey: int) -> bytes:
+        region, off = self.remote.check_access(remote_addr, ln, rkey, Access.READ, ep=self)
+        return bytes(region.buf[off:off + ln])
+
+    def flush(self) -> None:
+        """Complete all in-flight puts (ucp_ep_flush)."""
+        for p in self._pending:
+            p.region.buf[p.offset + p.delivered:p.offset + len(p.data)] = \
+                p.data[p.delivered:]
+            p.delivered = len(p.data)
+        self._pending.clear()
+        self.stats["flushes"] += 1
+
+
+class Nic:
+    """A simulated host adapter; one per emulated process."""
+
+    _addr_cursor = 0x10_0000
+
+    def __init__(self, name: str):
+        self.name = name
+        self.regions: dict[int, MemRegion] = {}  # base -> region
+
+    @classmethod
+    def _alloc_va(cls, size: int) -> int:
+        base = cls._addr_cursor
+        cls._addr_cursor += (size + 0xFFFF) & ~0xFFFF  # 64K-aligned, no overlap
+        return base
+
+    # -- the ucp_mem_map analogue ------------------------------------------
+    def mem_map(self, size: int, access: Access = Access.RW) -> MemRegion:
+        base = self._alloc_va(size)
+        rkey = secrets.randbits(32) or 1
+        region = MemRegion(self, base, bytearray(size), rkey, access)
+        self.regions[base] = region
+        return region
+
+    def mem_unmap(self, region: MemRegion) -> None:
+        self.regions.pop(region.base, None)
+
+    def connect(self, remote: "Nic") -> Endpoint:
+        return Endpoint(self, remote)
+
+    def check_access(self, addr: int, ln: int, rkey: int, need: Access,
+                     ep: Endpoint | None = None):
+        for base, region in self.regions.items():
+            if base <= addr and addr + ln <= base + region.size:
+                if region.rkey != rkey:
+                    break
+                if need not in region.access:
+                    break
+                return region, addr - base
+        if ep is not None:
+            ep.stats["rejected"] += 1
+        raise AccessDenied(
+            f"{self.name}: {need} x{ln} @ {addr:#x} rejected (rkey {rkey:#x})")
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer over a region (the paper's throughput-bench message layout)
+
+
+@dataclass
+class RingBuffer:
+    """Fixed-slot ring over a mapped region.  The source computes slot
+    addresses locally (one-sided!); the target polls slot by slot."""
+
+    region: MemRegion
+    slot_size: int
+    head: int = 0  # target-side consume index
+    tail: int = 0  # source-side produce index
+
+    @property
+    def n_slots(self) -> int:
+        return self.region.size // self.slot_size
+
+    def slot_addr(self, i: int) -> int:
+        return self.region.base + (i % self.n_slots) * self.slot_size
+
+    def slot_view(self, i: int) -> memoryview:
+        off = (i % self.n_slots) * self.slot_size
+        return self.region.view(off, self.slot_size)

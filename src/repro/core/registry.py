@@ -1,0 +1,108 @@
+"""ifunc library loading + target-side auto-registration (paper §3.1/§3.4).
+
+An *ifunc library* is a Python module ``<name>.py`` in the directory named
+by ``$REPRO_IFUNC_LIB_DIR`` (the ``UCX_IFUNC_LIB_DIR`` analogue), defining
+the three routines of paper Listing 1.2:
+
+    <name>_main(payload: memoryview, payload_size: int, target_args) -> None
+    <name>_payload_get_max_size(source_args, source_args_size) -> int
+    <name>_payload_init(payload: memoryview, payload_size,
+                        source_args, source_args_size) -> int   # used bytes
+
+Optionally: ``IFUNC_KIND = "pybc" | "hlo" | "uvm"`` (default pybc),
+``HLO_ARG_SPECS`` (for hlo), ``UVM_PROGRAM`` (an assembled UvmProgram).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import importlib.util
+import os
+import pathlib
+import sys
+from dataclasses import dataclass, field
+
+from repro.core import codegen as CG
+from repro.core.frame import CodeKind
+
+ENV_LIB_DIR = "REPRO_IFUNC_LIB_DIR"
+
+
+class RegistryError(Exception):
+    pass
+
+
+def lib_dir() -> pathlib.Path:
+    d = os.environ.get(ENV_LIB_DIR)
+    if not d:
+        raise RegistryError(f"{ENV_LIB_DIR} not set")
+    return pathlib.Path(d)
+
+
+def _load_module(name: str, search_dir: pathlib.Path | None = None):
+    d = search_dir or lib_dir()
+    path = d / f"{name}.py"
+    if not path.exists():
+        raise RegistryError(f"ifunc library {name!r} not found in {d}")
+    spec = importlib.util.spec_from_file_location(f"_ifunc_lib_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@dataclass
+class IfuncLibrary:
+    """A loaded ifunc library (source side: all three routines; target side
+    the main is what matters)."""
+
+    name: str
+    main: object
+    payload_get_max_size: object
+    payload_init: object
+    kind: CodeKind
+    code: bytes            # serialized code section
+    code_hash: str
+
+    @classmethod
+    def load(cls, name: str, search_dir: pathlib.Path | None = None,
+             hmac_key: bytes | None = None) -> "IfuncLibrary":
+        mod = _load_module(name, search_dir)
+        try:
+            main = getattr(mod, f"{name}_main")
+            gms = getattr(mod, f"{name}_payload_get_max_size")
+            init = getattr(mod, f"{name}_payload_init")
+        except AttributeError as e:
+            raise RegistryError(f"library {name!r} missing required routine: {e}")
+        kind = {"pybc": CodeKind.PYBC, "hlo": CodeKind.HLO, "uvm": CodeKind.UVM}[
+            getattr(mod, "IFUNC_KIND", "pybc")]
+        if kind == CodeKind.PYBC:
+            code = CG.serialize_pybc(main, hmac_key=hmac_key)
+        elif kind == CodeKind.HLO:
+            specs = getattr(mod, "HLO_ARG_SPECS")
+            code = CG.serialize_hlo(main, specs)
+        else:
+            prog = getattr(mod, "UVM_PROGRAM")
+            code = CG.serialize_uvm(prog)
+        return cls(name, main, gms, init, kind, code,
+                   hashlib.sha256(code).hexdigest())
+
+
+@dataclass
+class LinkCache:
+    """Target-side hash table (paper §3.4): name -> linked entry, so only
+    the *first* arrival of an ifunc pays the link cost.  Keyed additionally
+    by code hash — the paper lets code change under the same name."""
+
+    entries: dict[tuple[str, str], object] = field(default_factory=dict)
+    link_events: int = 0
+
+    def lookup(self, name: str, code_hash: str):
+        return self.entries.get((name, code_hash))
+
+    def insert(self, name: str, code_hash: str, fn) -> None:
+        self.entries[(name, code_hash)] = fn
+        self.link_events += 1
+
+    def invalidate(self, name: str) -> None:
+        for k in [k for k in self.entries if k[0] == name]:
+            del self.entries[k]

@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenDataset, Loader, synthetic_batch  # noqa: F401

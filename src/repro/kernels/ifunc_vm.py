@@ -1,0 +1,121 @@
+"""μVM interpreter kernel — the device-tier ifunc executor (Pallas/TPU).
+
+A TPU core cannot receive machine code at runtime, so injected "code"
+arrives as *data*: a μcode program (see ``core.codegen.OPS``) interpreted
+by this fixed, pre-compiled kernel.  Registers are (128,128) f32 VMEM
+tiles; ``matmul`` drives the MXU; the external table (``loade``) is the
+device GOT — operands name model-resident tensors by slot, bound at launch.
+
+Grid: one step per payload tile; the whole program runs per tile
+(data-parallel μcode).  Instruction streams live in SMEM; register file is
+VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codegen import N_OPS, OPS, UVM_REGS, UVM_TILE
+
+T = UVM_TILE
+R = UVM_REGS
+
+
+def _branches(va, vb, vd, pt, ev, imm):
+    """Tile-valued result per opcode (indexed by core.codegen.OPS)."""
+    z = jnp.zeros_like(va)
+    return [
+        lambda: vd,                                   # halt  (nop)
+        lambda: pt,                                   # loadp
+        lambda: ev,                                   # loade
+        lambda: vd,                                   # store (side effect below)
+        lambda: va + vb,                              # add
+        lambda: va - vb,                              # sub
+        lambda: va * vb,                              # mul
+        lambda: vd + va * vb,                         # fma
+        lambda: jnp.maximum(va, 0.0),                 # relu
+        lambda: jax.nn.gelu(va),                      # gelu
+        lambda: jnp.exp(va),                          # exp
+        lambda: va * imm,                             # scale
+        lambda: jnp.dot(va, vb, preferred_element_type=jnp.float32),  # matmul
+        lambda: jnp.maximum(va, vb),                  # max
+        lambda: va,                                   # copy
+        lambda: z,                                    # zero
+        lambda: jnp.tanh(va),                         # tanh
+        lambda: jax.lax.rsqrt(jnp.abs(va) + 1e-12),   # rsqrt
+        lambda: va + imm,                             # addi
+        lambda: va * imm,                             # muli
+    ]
+
+
+def _vm_kernel(op_ref, dst_ref, a_ref, b_ref, imm_ref,  # SMEM instr stream
+               payload_ref, ext_ref,                     # VMEM in
+               out_ref,                                  # VMEM out
+               regs_ref):                                # VMEM scratch [R,T,T]
+    n_instr = op_ref.shape[0]
+    n_ext = ext_ref.shape[0]
+
+    # zero the register file at tile start
+    regs_ref[...] = jnp.zeros((R, T, T), jnp.float32)
+
+    def step(pc, _):
+        op = op_ref[pc]
+        d = dst_ref[pc]
+        a = a_ref[pc]
+        b = b_ref[pc]
+        imm = imm_ref[pc]
+        va = pl.load(regs_ref, (pl.ds(a, 1), slice(None), slice(None)))[0]
+        vb = pl.load(regs_ref, (pl.ds(b, 1), slice(None), slice(None)))[0]
+        vd = pl.load(regs_ref, (pl.ds(d, 1), slice(None), slice(None)))[0]
+        pt = payload_ref[0]
+        ea = jnp.minimum(a, n_ext - 1)
+        ev = pl.load(ext_ref, (pl.ds(ea, 1), slice(None), slice(None)))[0]
+        res = jax.lax.switch(op, _branches(va, vb, vd, pt, ev, imm))
+        pl.store(regs_ref, (pl.ds(d, 1), slice(None), slice(None)), res[None])
+
+        @pl.when(op == OPS["store"])
+        def _():
+            out_ref[0] = va
+        return 0
+
+    jax.lax.fori_loop(0, n_instr, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_instr", "n_tiles", "n_ext", "interpret"))
+def _vm_call(op, dst, a, b, imm, payload, ext, *, n_instr, n_tiles, n_ext,
+             interpret=True):
+    grid = (n_tiles,)
+    instr_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        _vm_kernel,
+        grid=grid,
+        in_specs=[instr_spec] * 5 + [
+            pl.BlockSpec((1, T, T), lambda i: (i, 0, 0)),          # payload tile
+            pl.BlockSpec((n_ext, T, T), lambda i: (0, 0, 0)),      # ext table
+        ],
+        out_specs=pl.BlockSpec((1, T, T), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, T, T), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((R, T, T), jnp.float32)],
+        interpret=interpret,
+    )(op, dst, a, b, imm, payload, ext)
+
+
+def ifunc_vm(prog, payload_tiles, externals, *, interpret=True):
+    """Execute μcode over payload tiles.  externals: [n_ext, T, T] f32."""
+    payload = jnp.asarray(payload_tiles, jnp.float32)
+    ext = jnp.asarray(externals, jnp.float32)
+    if ext.ndim == 2:
+        ext = ext[None]
+    if ext.shape[0] == 0:
+        ext = jnp.zeros((1, T, T), jnp.float32)
+    assert payload.ndim == 3 and payload.shape[1:] == (T, T), payload.shape
+    return _vm_call(jnp.asarray(prog.opcode), jnp.asarray(prog.dst),
+                    jnp.asarray(prog.a), jnp.asarray(prog.b),
+                    jnp.asarray(prog.imm), payload, ext,
+                    n_instr=len(prog.opcode), n_tiles=payload.shape[0],
+                    n_ext=ext.shape[0], interpret=interpret)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import OPS, UVM_REGS, UVM_TILE, UvmProgram
+from repro.kernels import ring_poll as RP
+
+
+def ifunc_vm_ref(prog: UvmProgram, payload_tiles, externals) -> np.ndarray:
+    """Interpret μcode with a plain Python loop (semantics oracle)."""
+    T = UVM_TILE
+    payload = np.asarray(payload_tiles, np.float32)
+    ext = np.asarray(externals, np.float32)
+    if ext.ndim == 2:
+        ext = ext[None]
+    if ext.shape[0] == 0:
+        ext = np.zeros((1, T, T), np.float32)
+    out = np.zeros_like(payload)
+    inv = {v: k for k, v in OPS.items()}
+    for i in range(payload.shape[0]):
+        regs = np.zeros((UVM_REGS, T, T), np.float32)
+        for pc in range(len(prog.opcode)):
+            op = inv[int(prog.opcode[pc])]
+            d, a, b = int(prog.dst[pc]), int(prog.a[pc]), int(prog.b[pc])
+            imm = float(prog.imm[pc])
+            va, vb, vd = regs[a], regs[b], regs[d]
+            if op == "halt":
+                continue
+            elif op == "loadp":
+                regs[d] = payload[i]
+            elif op == "loade":
+                regs[d] = ext[min(a, ext.shape[0] - 1)]
+            elif op == "store":
+                out[i] = va
+            elif op == "add":
+                regs[d] = va + vb
+            elif op == "sub":
+                regs[d] = va - vb
+            elif op == "mul":
+                regs[d] = va * vb
+            elif op == "fma":
+                regs[d] = vd + va * vb
+            elif op == "relu":
+                regs[d] = np.maximum(va, 0.0)
+            elif op == "gelu":
+                regs[d] = np.asarray(jax.nn.gelu(va))
+            elif op == "exp":
+                regs[d] = np.exp(va)
+            elif op in ("scale", "muli"):
+                regs[d] = va * imm
+            elif op == "matmul":
+                regs[d] = va @ vb
+            elif op == "max":
+                regs[d] = np.maximum(va, vb)
+            elif op == "copy":
+                regs[d] = va
+            elif op == "zero":
+                regs[d] = np.zeros_like(va)
+            elif op == "tanh":
+                regs[d] = np.tanh(va)
+            elif op == "rsqrt":
+                regs[d] = 1.0 / np.sqrt(np.abs(va) + 1e-12)
+            elif op == "addi":
+                regs[d] = va + imm
+            else:
+                raise ValueError(op)
+    return out
+
+
+def ring_poll_ref(slots) -> np.ndarray:
+    slots = np.asarray(slots, np.uint32)
+    n, W = slots.shape
+    out = np.zeros(n, np.int32)
+    for i, s in enumerate(slots):
+        magic, fw, kind, nh, chk = (int(x) for x in s[:5])
+        if magic == 0:
+            out[i] = RP.EMPTY
+            continue
+        hdr_ok = magic == RP.MAGIC and chk == (magic ^ fw ^ kind ^ nh)
+        if not hdr_ok or fw > W - RP.HDR_WORDS - 1:
+            out[i] = RP.BAD
+            continue
+        out[i] = RP.READY if int(s[RP.HDR_WORDS + fw]) == RP.TRAILER else RP.INFLIGHT
+    return out
+
+
+def ssd_scan_ref(x, la, Bm, Cm) -> jnp.ndarray:
+    """Chunked SSD in plain jnp (mirrors models/ssm.py math)."""
+    x = jnp.asarray(x, jnp.float32)
+    la = jnp.asarray(la, jnp.float32)
+    Bm = jnp.asarray(Bm, jnp.float32)
+    Cm = jnp.asarray(Cm, jnp.float32)
+    BH, nc, Q, hd = x.shape
+    ds = Bm.shape[-1]
+    cum = jnp.cumsum(la, axis=2)
+    seg = cum[..., :, None] - cum[..., None, :]
+    L = jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cm, Bm) * L
+    y_intra = jnp.einsum("bcqk,bckh->bcqh", scores, x)
+
+    tail = jnp.exp(cum[..., -1:] - cum)
+    states = jnp.einsum("bckh,bck,bckn->bchn", x, tail, Bm)
+    decay = jnp.exp(cum[..., -1])
+
+    def step(h, inp):
+        st, dec = inp
+        return h * dec[:, None, None] + st, h
+
+    h0 = jnp.zeros((BH, hd, ds))
+    _, h_prev = jax.lax.scan(step, h0, (states.transpose(1, 0, 2, 3),
+                                        decay.transpose(1, 0)))
+    h_prev = h_prev.transpose(1, 0, 2, 3)          # state BEFORE each chunk
+    y_inter = jnp.einsum("bcqn,bchn->bcqh", Cm, h_prev) * jnp.exp(cum)[..., None]
+    return (y_intra + y_inter).astype(x.dtype)

@@ -1,0 +1,61 @@
+"""Mailbox ring-poll kernel (Pallas/TPU): device-side frame validation.
+
+The device mailbox (core/device_mailbox.py) stores word-oriented frames in
+each ring slot:
+
+    w0 magic        0x1F5C0DE5
+    w1 frame_words  total payload words (<= slot_words - HDR - 1)
+    w2 code_kind
+    w3 name_hash
+    w4 hdr_check    = magic ^ frame_words ^ code_kind ^ name_hash (fletcher-lite)
+    w5..            body (code+payload words)
+    w[5+frame_words] trailer 0xD0E1F2A3
+
+For every slot the kernel emits a status: 0=EMPTY, 1=READY, 2=INFLIGHT
+(header ok, trailer missing), 3=BAD (corrupt header / bounds) — the
+device-side mirror of poll_ifunc's reject/progress logic (paper Fig. 2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAGIC = 0x1F5C0DE5
+TRAILER = 0xD0E1F2A3
+HDR_WORDS = 5
+
+EMPTY, READY, INFLIGHT, BAD = 0, 1, 2, 3
+
+
+def _poll_kernel(slots_ref, status_ref):
+    slot = slots_ref[0].astype(jnp.uint32)           # [slot_words]
+    W = slot.shape[0]
+    magic, fw, kind, nh, chk = slot[0], slot[1], slot[2], slot[3], slot[4]
+    hdr_ok = (magic == jnp.uint32(MAGIC)) & (chk == (magic ^ fw ^ kind ^ nh))
+    bounds_ok = fw <= jnp.uint32(W - HDR_WORDS - 1)
+    idx = jnp.minimum(HDR_WORDS + fw.astype(jnp.int32), W - 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (W,), 0)
+    trailer = jnp.sum(jnp.where(iota == idx, slot, jnp.uint32(0)))
+    st = jnp.where(
+        magic == jnp.uint32(0), EMPTY,
+        jnp.where(~(hdr_ok & bounds_ok), BAD,
+                  jnp.where(trailer == jnp.uint32(TRAILER), READY, INFLIGHT)))
+    status_ref[0] = st.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ring_poll(slots, *, interpret=True):
+    """slots: [n_slots, slot_words] uint32 -> status [n_slots] int32."""
+    n, w = slots.shape
+    return pl.pallas_call(
+        _poll_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(slots)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST stay first — jax locks the device count on
+# first init.  (This also means no `from __future__ import annotations` here.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent (GSPMD
+partitions without error), (b) the program fits per-device HBM
+(memory_analysis), and (c) yields the cost/collective numbers for the
+roofline analysis.  Results go to ``experiments/dryrun/<cell>.json`` plus
+the optimized HLO text for the per-op cost walk.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2_1_8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro import configs as C
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.parallel import sharding as SH
+from repro.train import serve as SRV
+from repro.train import step as ST
+from repro.train.optim import OptConfig
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def apply_policy(cfg, shape: str, policy: str = "baseline"):
+    """Policy = '+'-joined hillclimb tokens (EXPERIMENTS.md §Perf):
+
+      fused     flash-style fused-softmax attention (single f32 crossing)
+      msp       MoE shard_map input seq-sharded (no bwd psum of replicated dx)
+      resident  expert weights resident (E->model, F->data); tokens travel
+      dp_all    pure DP over every mesh axis; no TP (small models)
+      dots      remat policy 'dots'   | noremat   remat off
+      mb2/mb4   gradient-accumulation microbatches
+      statebf16 bf16 optimizer state
+
+    Returns (cfg, rules, microbatches).
+    """
+    rules = SH.DEFAULT_RULES
+    sp = C.SHAPES[shape]
+    if sp.kind == "decode" and sp.global_batch == 1:
+        # long-context single sequence: nothing to shard on batch
+        rules = rules.override(batch=(), cache_batch=())
+    mb = 1
+    for tok in policy.split("+"):
+        if tok in ("baseline", ""):
+            continue
+        elif tok == "fused":
+            cfg = cfg.with_(attn_impl="fused")
+        elif tok == "flash":
+            # TPU target runs kernels/flash_attn.py (validated interpret-mode);
+            # the XLA lowering uses the fused stand-in and the roofline
+            # substitutes the kernel's HBM traffic for the score-class bytes.
+            cfg = cfg.with_(attn_impl="fused")
+        elif tok == "ssdk":
+            # TPU target runs kernels/ssd_scan.py; roofline substitutes the
+            # kernel's HBM bytes for the 'ssdscan'-scoped [Q,Q] traffic.
+            pass
+        elif tok == "msp":
+            cfg = cfg.with_(moe_seq_shard=True)
+        elif tok == "resident":
+            cfg = cfg.with_(moe_expert_resident=True)
+            rules = rules.override(expert_ffn=("data",))
+        elif tok == "dp_all":
+            rules = rules.override(
+                batch=("pod", "data", "model"), embed=(), heads=(), kv_heads=(),
+                ffn=(), vocab=(), act_heads=(), act_ffn=(), act_vocab=())
+        elif tok == "serve_tp":
+            # serving: weights TP-sharded but NOT FSDP'd — an FSDP gather per
+            # decoded token costs ~the whole weight set per step
+            rules = rules.override(embed=())
+        elif tok == "cache_heads":
+            # decode: shard the KV cache on heads, not sequence — a dynamic-
+            # position update on a seq-sharded cache lowers to a full-cache
+            # select-rewrite per layer; head-sharded caches update in place
+            rules = rules.override(cache_seq=(), cache_kv_heads=("model",),
+                                   act_heads=())
+        elif tok == "dp_fsdp":
+            # pure DP batch over every axis + FSDP weight sharding over
+            # "data" (no TP): for models whose optimizer state cannot be
+            # replicated but whose per-layer compute is too small for TP
+            rules = rules.override(
+                batch=("pod", "data", "model"), heads=(), kv_heads=(),
+                ffn=(), vocab=(), act_heads=(), act_ffn=(), act_vocab=())
+        elif tok == "attn_dp":
+            # MoE-centric layout: attention/dense weights replicated over
+            # "model" (FSDP over data only), batch DP over every axis,
+            # experts stay EP over "model" — zero attention collectives
+            rules = rules.override(
+                batch=("pod", "data", "model"), heads=(), kv_heads=(),
+                vocab=(), act_heads=(), act_ffn=(), act_vocab=(), ffn=())
+        elif tok == "dots":
+            cfg = cfg.with_(remat="dots")
+        elif tok == "noremat":
+            cfg = cfg.with_(remat="none")
+        elif tok.startswith("mb"):
+            mb = int(tok[2:])
+        elif tok.startswith("qc"):
+            cfg = cfg.with_(q_chunk=int(tok[2:]))
+        elif tok == "statebf16":
+            pass  # handled in opt_for
+        else:
+            raise KeyError(f"unknown policy token {tok!r}")
+    return cfg, rules, mb
+
+
+def opt_for(arch: str, policy: str = "baseline") -> OptConfig:
+    kw = {}
+    if arch == "minicpm_2b":
+        kw["schedule"] = "wsd"
+    if arch == "llama4_maverick_400b_a17b" or "statebf16" in policy:
+        # 400B: bf16 optimizer state to fit one pod (DESIGN.md §6)
+        kw["state_dtype"] = "bfloat16"
+    return OptConfig(**kw)
+
+
+def build_lowerable(arch: str, shape: str, mesh, policy: str = "baseline",
+                    microbatches: int | None = None):
+    """Returns (fn_jitted, arg_specs tuple) ready for .lower(*arg_specs)."""
+    cfg = C.get_config(arch)
+    sp = C.SHAPES[shape]
+    cfg, rules, mb = apply_policy(cfg, shape, policy)
+    microbatches = microbatches or mb
+    ctx = SH.sharding_context(mesh, rules)
+
+    def shd(axes_tree, shapes_tree=None):
+        return SH.tree_shardings(axes_tree, shapes_tree, mesh, rules)
+
+    with ctx:
+        if sp.kind == "train":
+            opt_cfg = opt_for(arch, policy)
+            step = ST.make_train_step(cfg, opt_cfg, microbatches=microbatches)
+            shapes, axes = ST.train_state_specs(cfg, opt_cfg)
+            b_specs = C.input_specs(cfg, shape)
+            b_axes = C.batch_axes(cfg, shape)
+            state_sh, batch_sh = shd(axes, shapes), shd(b_axes, b_specs)
+            met_sh = shd(ST.metrics_axes())
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, met_sh), donate_argnums=0)
+            return ctx, fn, (shapes, b_specs)
+        if sp.kind == "prefill":
+            fn0 = SRV.make_prefill_step(cfg)
+            p_shapes, p_axes = T.param_shapes(cfg), T.param_axes(cfg)
+            b_specs, b_axes = C.input_specs(cfg, shape), C.batch_axes(cfg, shape)
+            cache_sh = shd(T.cache_axes(cfg, sp.global_batch, sp.seq_len),
+                           T.cache_shapes(cfg, sp.global_batch, sp.seq_len))
+            logit_sh = SH.logical_sharding(("batch", None, "act_vocab"), mesh, rules,
+                                           (sp.global_batch, 1, cfg.vocab_size))
+            fn = jax.jit(fn0, in_shardings=(shd(p_axes, p_shapes), shd(b_axes, b_specs)),
+                         out_shardings=(cache_sh, logit_sh))
+            return ctx, fn, (p_shapes, b_specs)
+        # decode
+        fn0 = SRV.make_decode_step(cfg)
+        p_shapes, p_axes = T.param_shapes(cfg), T.param_axes(cfg)
+        cache_shapes = T.cache_shapes(cfg, sp.global_batch, sp.seq_len)
+        cache_sh = shd(T.cache_axes(cfg, sp.global_batch, sp.seq_len), cache_shapes)
+        b = C.input_specs(cfg, shape)
+        tok_sh = shd(C.batch_axes(cfg, shape), b)
+        logit_sh = SH.logical_sharding(("cache_batch", None, "act_vocab"), mesh, rules,
+                                       (sp.global_batch, 1, cfg.vocab_size))
+        fn = jax.jit(fn0,
+                     in_shardings=(shd(p_axes, p_shapes), cache_sh, tok_sh["tokens"], tok_sh["pos"]),
+                     out_shardings=(cache_sh, logit_sh), donate_argnums=1)
+        return ctx, fn, (p_shapes, cache_shapes, b["tokens"], b["pos"])
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, policy: str = "baseline",
+             save_hlo: bool = True, tag: str = "") -> dict:
+    cfg = C.get_config(arch)
+    ok, why = C.applicable(cfg, shape)
+    cell = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    if not ok:
+        return {"cell": cell, "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    ctx, fn, arg_specs = build_lowerable(arch, shape, mesh, policy)
+    with ctx:
+        lowered = fn.lower(*arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    rec = {
+        "cell": cell, "status": "ok", "arch": arch, "shape": shape,
+        "mesh": mesh_kind, "policy": policy,
+        "devices": len(mesh.devices.flat),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "cost_analysis": {"flops": ca.get("flops", 0.0),
+                          "bytes_accessed": ca.get("bytes accessed", 0.0),
+                          "transcendentals": ca.get("transcendentals", 0.0)},
+        "param_counts": cfg.param_counts(),
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    if save_hlo:
+        hlo_path = OUT_DIR / f"{cell}.hlo.txt"
+        hlo_path.write_text(compiled.as_text())
+        rec["hlo_path"] = str(hlo_path)
+    (OUT_DIR / f"{cell}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def iter_cells(mesh_kinds):
+    for arch in C.ARCH_IDS:
+        for shape in C.SHAPES:
+            for mk in mesh_kinds:
+                yield arch, shape, mk
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--policy", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    mesh_kinds = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = list(iter_cells(mesh_kinds))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, mk) for mk in mesh_kinds]
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mk in cells:
+        try:
+            rec = run_cell(arch, shape, mk, args.policy,
+                           save_hlo=not args.no_hlo, tag=args.tag)
+        except Exception as e:  # noqa: BLE001 - record and continue
+            rec = {"cell": f"{arch}__{shape}__{mk}", "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            OUT_DIR.mkdir(parents=True, exist_ok=True)
+            (OUT_DIR / f"{rec['cell']}.json").write_text(json.dumps(rec, indent=1))
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_fail += st == "error"
+        extra = ""
+        if st == "ok":
+            extra = (f"compile={rec['compile_s']}s "
+                     f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                     f"flops={rec['cost_analysis']['flops']:.3g}")
+        elif st == "error":
+            extra = rec["error"][:200]
+        print(f"[{st:7s}] {rec['cell']} {extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,128 @@
+"""Serving driver: continuous batching over prefill + decode steps.
+
+A minimal production loop: requests enter a queue, get prefilled into a
+shared ring of cache slots, and a single compiled decode step advances every
+active sequence one token per tick.  Works on any mesh (pass
+``--mesh host`` locally; the production meshes are exercised through
+launch/dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.serve --steps 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import serve as SRV
+
+TINY = ModelConfig(name="serve-tiny", family="dense", num_layers=4, d_model=128,
+                   num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+                   q_chunk=128)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = field(default_factory=list)
+
+
+class Server:
+    """Fixed-slot continuous batcher (B slots, one sequence each)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int, cache_len: int):
+        self.cfg, self.params = cfg, params
+        self.B, self.W = batch_slots, cache_len
+        self.cache = T.init_cache(cfg, batch_slots, cache_len)
+        self.pos = np.zeros(batch_slots, np.int32)      # per-slot next position
+        self.active: dict[int, Request] = {}            # slot -> request
+        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self._decode = jax.jit(SRV.make_decode_step(cfg), donate_argnums=1)
+        self._prefill = jax.jit(SRV.make_prefill_step(cfg))
+
+    def admit(self, req: Request) -> bool:
+        """Wave batching: sequences in a wave advance in lockstep (shared
+        cache slot_pos).  Per-slot positions (true continuous batching) need
+        a vectorized ``pos`` through attention_decode — the production
+        extension; the batching/cache plumbing here is identical."""
+        free = [s for s in range(self.B) if s not in self.active]
+        if not free:
+            return False
+        slot = free[0]
+        # prefill the prompt into a fresh single-slot cache, splice it in
+        cache1, last = self._prefill(self.params, {"tokens": req.prompt[None]})
+        cache1 = SRV.pad_cache_to(cache1, T.cache_shapes(self.cfg, 1, self.W))
+        full = T.cache_shapes(self.cfg, self.B, self.W)
+        one = T.cache_shapes(self.cfg, 1, self.W)
+        for k in self.cache:
+            bdim = next((i for i, (a, b) in enumerate(
+                zip(full[k].shape, one[k].shape)) if a != b), None)
+            src = cache1[k].astype(self.cache[k].dtype)
+            if bdim is None:            # batch-free entry (slot_pos): shared
+                self.cache[k] = src
+            else:
+                idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
+                self.cache[k] = self.cache[k].at[idx].set(src)
+        self.tokens[slot, 0] = int(jnp.argmax(last[0, -1]))
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = req
+        req.out.append(int(self.tokens[slot, 0]))
+        return True
+
+    def tick(self) -> int:
+        """One decode step for all active slots; returns #tokens emitted."""
+        if not self.active:
+            return 0
+        pos = int(max(self.pos[s] for s in self.active))  # static-shape step
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          jnp.asarray(self.tokens), jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        emitted = 0
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.tokens[slot, 0] = tok
+            self.pos[slot] += 1
+            emitted += 1
+            if len(req.out) >= req.max_new:
+                del self.active[slot]
+        return emitted
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache", type=int, default=64)
+    args = ap.parse_args()
+    cfg = TINY
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    srv = Server(cfg, params, args.slots, args.cache)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32),
+                    max_new=args.steps) for i in range(args.slots + 2)]
+    pending = list(reqs)
+    t0 = time.time()
+    total = 0
+    while pending or srv.active:
+        while pending and srv.admit(pending[0]):
+            pending.pop(0)
+        total += srv.tick()
+    dt = time.time() - t0
+    print(f"served {len(reqs)} requests, {total} decode tokens in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots})")
+    for r in reqs[:2]:
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out[:args.steps]}")
+
+
+if __name__ == "__main__":
+    main()

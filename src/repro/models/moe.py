@@ -1,0 +1,271 @@
+"""Expert-parallel MoE FFN with explicit all-to-all (shard_map).
+
+Two dispatch paths:
+
+* ``a2a`` (train / prefill): tokens are split along the sequence over the
+  ``model`` axis, routed, binned into per-destination capacity buffers,
+  exchanged with a single ``lax.all_to_all`` over the expert-parallel axis,
+  processed by the local experts as one grouped einsum, and sent back with
+  the reverse all-to-all.  Collective volume is exactly
+  ``tokens x top_k x capacity_factor x d_model`` per direction — no GSPMD
+  surprises.
+
+* ``psum`` (decode, a handful of tokens): every shard sees all local tokens,
+  applies only its resident experts (ownership-masked) and a psum over the
+  expert axis combines contributions.  For tiny token counts this is cheaper
+  than an all-to-all round trip.
+
+Capacity-based dropping (GShard-style, factor ``cfg.capacity_factor``)
+keeps all shapes static; the load-balancing auxiliary loss pushes the
+router toward uniform load so drops stay rare.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Spec
+from repro.parallel.sharding import current_mesh
+
+# shard_map moved to jax.shard_map in recent versions
+try:  # pragma: no cover - version shim
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_vma=False)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                              check_rep=False)
+
+from jax.sharding import PartitionSpec as P
+
+
+def moe_specs(cfg, prefix: str = "") -> dict[str, Spec]:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_hidden
+    s: dict[str, Spec] = {
+        f"{prefix}router": ((D, E), ("embed", None)),
+        f"{prefix}we_gate": ((E, D, F), ("experts", "embed", "expert_ffn")),
+        f"{prefix}we_up": ((E, D, F), ("experts", "embed", "expert_ffn")),
+        f"{prefix}we_down": ((E, F, D), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.shared_expert:
+        s[f"{prefix}ws_gate"] = ((D, F), ("embed", "ffn"))
+        s[f"{prefix}ws_up"] = ((D, F), ("embed", "ffn"))
+        s[f"{prefix}ws_down"] = ((F, D), ("ffn", "embed"))
+    return s
+
+
+def _router(x_tok, w_router, cfg):
+    """x_tok: [T, D] -> (top-k probs [T,k], expert ids [T,k], full probs [T,E])."""
+    logits = jnp.einsum("td,de->te", x_tok.astype(jnp.float32), w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_e, probs
+
+
+def _aux_loss(probs, top_e, cfg):
+    """GShard load-balance loss: E * sum_e f_e * p_e."""
+    E = cfg.num_experts
+    f = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))
+    p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f * p)
+
+
+def _bin_tokens(x_tok, top_p, top_e, n_exp, cap):
+    """Scatter token copies into per-expert capacity bins.
+
+    Returns (buf [n_exp*cap, D], combine weights [T*k], slot index [T*k]).
+    Slots beyond an expert's capacity are dropped (scatter mode='drop' —
+    no extra overflow row, no copy on the way out).
+    """
+    T, k = top_e.shape
+    e_flat = top_e.reshape(-1)
+    p_flat = top_p.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    idx = jnp.arange(T * k, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), jnp.bool_), e_sorted[1:] != e_sorted[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank_sorted = idx - seg_start
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    keep = rank < cap
+    slot = jnp.where(keep, e_flat * cap + rank, n_exp * cap)  # OOB == dropped
+    tok_id = jnp.arange(T * k, dtype=jnp.int32) // k
+    buf = jnp.zeros((n_exp * cap, x_tok.shape[1]), x_tok.dtype)
+    buf = buf.at[slot].set(x_tok[tok_id] * keep[:, None].astype(x_tok.dtype),
+                           mode="drop")
+    return buf, jnp.where(keep, p_flat, 0.0), slot
+
+
+def _combine(out_buf, slot, comb_w, t, k):
+    """Gather expert outputs back per token-slot and weight-combine.
+    Dropped slots carry weight 0; their (clamped) gather reads are ignored."""
+    D = out_buf.shape[-1]
+    flat = out_buf.reshape(-1, D)
+    safe = jnp.minimum(slot, flat.shape[0] - 1)
+    return (flat[safe].reshape(t, k, D)
+            * comb_w.reshape(t, k, 1).astype(flat.dtype)).sum(axis=1)
+
+
+def _expert_ffn(recv, wg, wu, wd):
+    """recv: [..., E_loc, N, D]; weights [E_loc, D, F] / [E_loc, F, D].
+    Leading source-shard dims ride along (no transpose materialization)."""
+    g = jnp.einsum("...end,edf->...enf", recv, wg, preferred_element_type=recv.dtype)
+    u = jnp.einsum("...end,edf->...enf", recv, wu, preferred_element_type=recv.dtype)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...enf,efd->...end", h, wd, preferred_element_type=recv.dtype)
+
+
+def moe_ffn(p, x, cfg, prefix: str = ""):
+    """Expert-parallel MoE.  x: [B,S,D] (batch sharded over (pod,data),
+    replicated over model).  Returns (y [B,S,D], aux_loss scalar).
+
+    Variants (hillclimb levers, see EXPERIMENTS.md §Perf):
+    * ``cfg.moe_seq_shard``      — tokens enter the shard_map seq-sharded over
+      "model" (in_spec, not a manual slice), so the backward pass produces
+      sharded dx instead of an f32 psum of the replicated input.
+    * ``cfg.moe_expert_resident``— expert FFN weights shard (E -> model,
+      F -> data) and never move; tokens all-gather/reduce-scatter over "data"
+      to visit them.  Wins when expert bytes/layer >> token bytes/layer
+      (Llama-4-class experts) — the paper's move-compute-to-data.
+    """
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return _moe_dense_fallback(p, x, cfg, prefix)
+    B, S, D = x.shape
+    ep = mesh.shape["model"]
+    from repro.parallel.sharding import current_rules
+
+    batch_rule = current_rules().get("batch")
+    dp_over_model = "model" in batch_rule and B % _nshards(mesh, tuple(
+        a for a in batch_rule if a in mesh.axis_names)) == 0
+    if dp_over_model:
+        # DP-attention layout: the batch is already sharded over "model" too,
+        # so every model shard owns distinct tokens — no seq slicing needed.
+        batch_axes = tuple(a for a in batch_rule if a in mesh.axis_names)
+    else:
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    E, k = cfg.num_experts, cfg.experts_per_token
+    assert E % ep == 0, f"experts {E} must divide EP size {ep}"
+    e_loc = E // ep
+
+    use_a2a = dp_over_model or (
+        S % ep == 0 and (B * S) // max(1, _nshards(mesh, batch_axes)) >= ep)
+    seq_shard = use_a2a and cfg.moe_seq_shard and not dp_over_model
+    resident = (cfg.moe_expert_resident and "data" in mesh.axis_names
+                and cfg.moe_hidden % mesh.shape["data"] == 0)
+
+    xspec = P(batch_axes if batch_axes else None, "model" if seq_shard else None, None)
+    out_spec_y = P(batch_axes if batch_axes else None, None, None)
+    if resident:
+        wspec_gu, wspec_d = P("model", None, "data"), P("model", "data", None)
+    else:
+        wspec_gu = wspec_d = P("model", None, None)
+
+    def fn(xl, router, wg, wu, wd):
+        Bl, Sl, _ = xl.shape
+        if use_a2a and not seq_shard and not dp_over_model:
+            mi = jax.lax.axis_index("model")
+            xs = jax.lax.dynamic_slice_in_dim(xl, mi * (Sl // ep), Sl // ep, axis=1)
+            x_tok = xs.reshape(-1, D)
+        else:
+            x_tok = xl.reshape(-1, D)
+        t = x_tok.shape[0]
+        top_p, top_e, probs = _router(x_tok, router, cfg)
+        aux = _aux_loss(probs, top_e, cfg)
+
+        if use_a2a:
+            cap = max(4, int(-(-t * k * cfg.capacity_factor // E)))
+            buf, comb_w, slot = _bin_tokens(x_tok, top_p, top_e, E, cap)
+            send = buf.reshape(ep, e_loc * cap, D)
+            recv = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0, tiled=False)
+            recv = recv.reshape(ep, e_loc, cap, D)   # [src, e, cap, D]: no transpose
+            if resident:
+                # tokens visit the resident F-shards: AG over data, partial
+                # down-proj, RS back to the owning data shard
+                recv_all = jax.lax.all_gather(recv, "data", axis=2, tiled=True)
+                out_all = _expert_ffn(recv_all, wg, wu, wd)      # partial (F_loc)
+                out = jax.lax.psum_scatter(out_all, "data", scatter_dimension=2,
+                                           tiled=True)
+            else:
+                out = _expert_ffn(recv, wg, wu, wd)
+            out = out.reshape(ep, e_loc * cap, D)
+            back = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0, tiled=False)
+            y_tok = _combine(back, slot, comb_w, t, k)
+            if dp_over_model:
+                y = y_tok.reshape(Bl, Sl, D)      # tokens never left their owner
+            else:
+                ys = y_tok.reshape(Bl, Sl if seq_shard else Sl // ep, D)
+                y = jax.lax.all_gather(ys, "model", axis=1, tiled=True)
+        else:
+            # psum path: every shard applies its resident experts to all tokens
+            mi = jax.lax.axis_index("model")
+            cap = t * k  # no drops
+            owned = (top_e // e_loc) == mi
+            local_e = jnp.where(owned, top_e % e_loc, 0)
+            p_masked = jnp.where(owned, top_p, 0.0)
+            buf, comb_w, slot = _bin_tokens(x_tok, p_masked, local_e, e_loc, cap)
+            if resident:
+                h = _expert_ffn(jax.lax.all_gather(
+                    buf.reshape(e_loc, cap, D), "data", axis=1, tiled=True),
+                    wg, wu, wd)
+                out = jax.lax.psum_scatter(h, "data", scatter_dimension=1, tiled=True)
+            else:
+                out = _expert_ffn(buf.reshape(e_loc, cap, D), wg, wu, wd)
+            y_tok = _combine(out, slot, comb_w, t, k)
+            y = jax.lax.psum(y_tok.reshape(Bl, Sl, D), "model")
+        aux = jax.lax.pmean(aux, "model")
+        for a in batch_axes:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    y, aux = shard_map(
+        fn, mesh,
+        in_specs=(xspec, P(None, None), wspec_gu, wspec_gu, wspec_d),
+        out_specs=(out_spec_y, P()),
+    )(x, p[f"{prefix}router"], p[f"{prefix}we_gate"], p[f"{prefix}we_up"], p[f"{prefix}we_down"])
+
+    if cfg.shared_expert:
+        from repro.models.layers import mlp
+
+        sh = {f"{prefix}w_gate": p[f"{prefix}ws_gate"], f"{prefix}w_up": p[f"{prefix}ws_up"],
+              f"{prefix}w_down": p[f"{prefix}ws_down"]}
+        y = y + mlp(sh, x, cfg, prefix=prefix)
+    return y, aux
+
+
+def _nshards(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _moe_dense_fallback(p, x, cfg, prefix: str = ""):
+    """Single-device / no-mesh reference path (used by smoke tests & oracles)."""
+    B, S, D = x.shape
+    x_tok = x.reshape(-1, D)
+    top_p, top_e, probs = _router(x_tok, p[f"{prefix}router"], cfg)
+    aux = _aux_loss(probs, top_e, cfg)
+    t, k = top_e.shape
+    cap = max(4, int(-(-t * k * cfg.capacity_factor // cfg.num_experts)))
+    buf, comb_w, slot = _bin_tokens(x_tok, top_p, top_e, cfg.num_experts, cap)
+    out = _expert_ffn(buf.reshape(cfg.num_experts, cap, D),
+                      p[f"{prefix}we_gate"], p[f"{prefix}we_up"], p[f"{prefix}we_down"])
+    out = out.reshape(cfg.num_experts * cap, D)
+    out = jnp.concatenate([out, jnp.zeros((1, D), out.dtype)])
+    y_tok = (out[slot].reshape(t, k, D) * comb_w.reshape(t, k, 1).astype(out.dtype)).sum(axis=1)
+    y = y_tok.reshape(B, S, D)
+    if cfg.shared_expert:
+        from repro.models.layers import mlp
+
+        sh = {f"{prefix}w_gate": p[f"{prefix}ws_gate"], f"{prefix}w_up": p[f"{prefix}ws_up"],
+              f"{prefix}w_down": p[f"{prefix}ws_down"]}
+        y = y + mlp(sh, x, cfg, prefix=prefix)
+    return y, aux

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Train/prefill runs the diagonal linear recurrence with an associative scan;
+decode is the O(1) update.  The recurrence width shards over TP ("model").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Spec
+from repro.parallel.sharding import shard_act
+
+_C_FACTOR = 8.0  # Griffin's fixed gate exponent scale
+
+
+def rglru_specs(cfg) -> dict[str, Spec]:
+    D, w, cw = cfg.d_model, cfg.rnn_width, 4
+    return {
+        "wx_in": ((D, w), ("embed", "ffn")),
+        "wy_in": ((D, w), ("embed", "ffn")),
+        "conv_w": ((cw, w), (None, "ffn")),
+        "wa_gate": ((w, w), ("embed", "ffn")),
+        "wi_gate": ((w, w), ("embed", "ffn")),
+        "a_gate_b": ((w,), ("ffn",)),
+        "i_gate_b": ((w,), ("ffn",)),
+        "lam": ((w,), ("ffn",)),
+        "w_rg_out": ((w, D), ("ffn", "embed")),
+    }
+
+
+def rglru_cache_specs(cfg, batch: int) -> dict[str, Spec]:
+    w, cw = cfg.rnn_width, 4
+    return {
+        "h": ((batch, w), ("cache_batch", "ffn")),
+        "conv": ((batch, cw - 1, w), ("cache_batch", None, "ffn")),
+    }
+
+
+def _gates(p, xb):
+    """xb: [...,w] conv branch -> (log_a [...,w] f32, gated input [...,w] f32)."""
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa_gate"].astype(jnp.float32) + p["a_gate_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["wi_gate"].astype(jnp.float32) + p["i_gate_b"].astype(jnp.float32))
+    log_a = -_C_FACTOR * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a2 = jnp.exp(2.0 * log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, u
+
+
+def rglru_seq(p, x, cfg):
+    out, _ = rglru_seq_cached(p, x, cfg, want_cache=False)
+    return out
+
+
+def rglru_seq_cached(p, x, cfg, *, want_cache: bool = False):
+    """x: [B,S,D] -> ([B,S,D], cache|None) via conv + RG-LRU + output gate."""
+    from repro.models.ssm import _causal_conv
+
+    B, S, _ = x.shape
+    xb = jnp.einsum("bsd,dw->bsw", x, p["wx_in"], preferred_element_type=x.dtype)
+    yb = jnp.einsum("bsd,dw->bsw", x, p["wy_in"], preferred_element_type=x.dtype)
+    xb = shard_act(xb, "batch", "seq", "act_ffn")
+    conv_tail = None
+    if want_cache:
+        cw = p["conv_w"].shape[0]
+        raw = xb
+        pad = max(0, (cw - 1) - S)
+        if pad:
+            raw = jnp.concatenate([jnp.zeros((B, pad, raw.shape[-1]), raw.dtype), raw], axis=1)
+        conv_tail = raw[:, -(cw - 1):]
+    xb, _ = _causal_conv(xb, p["conv_w"])
+    log_a, u = _gates(p, xb)
+
+    # h_t = a_t h_{t-1} + u_t  via associative scan on (a, u)
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    a = jnp.exp(log_a)
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    hg = h.astype(x.dtype) * jax.nn.gelu(yb)
+    out = jnp.einsum("bsw,wd->bsd", hg, p["w_rg_out"], preferred_element_type=x.dtype)
+    out = shard_act(out, "batch", "seq", "act_embed")
+    if not want_cache:
+        return out, None
+    return out, {"h": h[:, -1], "conv": conv_tail}
+
+
+def rglru_decode(p, x, cfg, cache):
+    """x: [B,1,D]; cache {h [B,w], conv [B,3,w]}."""
+    from repro.models.ssm import _causal_conv
+
+    xb = jnp.einsum("bsd,dw->bsw", x, p["wx_in"], preferred_element_type=x.dtype)
+    yb = jnp.einsum("bsd,dw->bsw", x, p["wy_in"], preferred_element_type=x.dtype)
+    xb, new_conv = _causal_conv(xb, p["conv_w"], cache["conv"])
+    log_a, u = _gates(p, xb[:, 0])
+    h = cache["h"].astype(jnp.float32) * jnp.exp(log_a) + u
+    y = h[:, None, :].astype(x.dtype) * jax.nn.gelu(yb)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_rg_out"], preferred_element_type=x.dtype)
+    return out, {"h": h.astype(cache["h"].dtype), "conv": new_conv}

@@ -1,0 +1,294 @@
+"""Unified decoder stack for all assigned architectures.
+
+The stack is a repeating ``cfg.block_pattern`` super-block scanned
+``cfg.n_super`` times (plus an unrolled remainder), so heterogeneous
+patterns (RecurrentGemma's R-R-A, Llama-4's dense/MoE interleave) stay
+scan-compatible: every slot in the pattern has its own stacked params.
+
+Three modes share the block implementations:
+
+* ``train``   — full sequence, no cache.
+* ``prefill`` — full sequence, emits a serving cache.
+* ``decode``  — one token against the cache (functional update).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard_act
+
+ATTN_KINDS = ("attn", "attn_moe", "attn_local")
+
+
+# ---------------------------------------------------------------------------
+# specs
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> dict[str, L.Spec]:
+    D = cfg.d_model
+    s: dict[str, L.Spec] = {}
+    if kind in ATTN_KINDS:
+        s.update(L.norm_specs("ln1", D))
+        s.update(L.attn_specs(cfg))
+        s.update(L.norm_specs("ln2", D))
+        if kind == "attn_moe":
+            s.update(M.moe_specs(cfg))
+        else:
+            s.update(L.mlp_specs(cfg))
+    elif kind == "ssd":
+        s.update(L.norm_specs("ln1", D))
+        s.update(S.ssd_specs(cfg))
+    elif kind == "rglru":
+        s.update(L.norm_specs("ln1", D))
+        s.update(R.rglru_specs(cfg))
+        s.update(L.norm_specs("ln2", D))
+        s.update(L.mlp_specs(cfg))
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return s
+
+
+def _stack_specs(specs: dict[str, L.Spec], n: int) -> dict[str, L.Spec]:
+    return {k: ((n, *shape), ("stack", *axes)) for k, (shape, axes) in specs.items()}
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, L.Spec]:
+    D, V = cfg.d_model, cfg.vocab_size
+    out: dict[str, L.Spec] = {"tok_embed": ((V, D), ("vocab", "embed"))}
+    for slot, kind in enumerate(cfg.block_pattern):
+        bs = _block_specs(cfg, kind)
+        out.update({f"s{slot}_{k}": v for k, v in _stack_specs(bs, cfg.n_super).items()})
+    for ti, kind in enumerate(cfg.trailing):
+        bs = _block_specs(cfg, kind)
+        out.update({f"t{ti}_{k}": v for k, v in bs.items()})
+    out.update(L.norm_specs("final", D))
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ((D, V), ("embed", "vocab"))
+    return out
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    return L.specs_shapes(param_specs(cfg), cfg.w_dtype)
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    return L.specs_axes(param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return L.init_from_specs(param_specs(cfg), key, cfg.w_dtype)
+
+
+def _cache_entry_specs(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    if kind in ATTN_KINDS:
+        W = min(cache_len, cfg.attn_window) if (kind == "attn_local" and cfg.attn_window) else cache_len
+        return L.attn_cache_specs(cfg, batch, W)
+    if kind == "ssd":
+        return S.ssd_cache_specs(cfg, batch)
+    if kind == "rglru":
+        return R.rglru_cache_specs(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict[str, L.Spec]:
+    out: dict[str, L.Spec] = {}
+    for slot, kind in enumerate(cfg.block_pattern):
+        es = _cache_entry_specs(cfg, kind, batch, cache_len)
+        out.update({f"s{slot}_{k}": v for k, v in _stack_specs(es, cfg.n_super).items()})
+    for ti, kind in enumerate(cfg.trailing):
+        es = _cache_entry_specs(cfg, kind, batch, cache_len)
+        out.update({f"t{ti}_{k}": v for k, v in es.items()})
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    sp = cache_specs(cfg, batch, cache_len)
+    out = {}
+    for n, (shape, _) in sp.items():
+        if n.endswith("slot_pos"):
+            out[n] = jax.ShapeDtypeStruct(shape, jnp.int32)
+        elif n.endswith("state") or n.endswith("h"):
+            out[n] = jax.ShapeDtypeStruct(shape, jnp.float32)
+        else:
+            out[n] = jax.ShapeDtypeStruct(shape, cfg.act_dtype)
+    return out
+
+
+def cache_axes(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    return L.specs_axes(cache_specs(cfg, batch, cache_len))
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    out = {}
+    for n, sd in cache_shapes(cfg, batch, cache_len).items():
+        if n.endswith("slot_pos"):
+            out[n] = jnp.full(sd.shape, -1, jnp.int32)
+        else:
+            out[n] = jnp.zeros(sd.shape, sd.dtype)
+    return out
+
+
+def _sub(params: dict, prefix: str) -> dict:
+    return {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+# ---------------------------------------------------------------------------
+# block forward
+
+
+def _attn_seq_with_cache(p, x, cfg, kind, want_cache: bool):
+    window = cfg.attn_window if kind == "attn_local" else 0
+    y, kv = L.attention_seq_kv(p, x, cfg, window=window)
+    if not want_cache:
+        return y, None
+    k, v = kv
+    B, Sq = x.shape[0], x.shape[1]
+    W = min(Sq if not window else window, k.shape[1]) if window else Sq
+    if window and Sq > window:
+        k, v = k[:, -window:], v[:, -window:]
+        slot_pos = jnp.arange(Sq - window, Sq, dtype=jnp.int32)
+    else:
+        slot_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    return y, {"k": k, "v": v, "slot_pos": slot_pos}
+
+
+def block_fwd(kind: str, cfg: ModelConfig, p: dict, x, *, mode: str, pos=None, cache=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        window = cfg.attn_window if kind == "attn_local" else 0
+        h = L.rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+        if mode == "decode":
+            a, new_cache = L.attention_decode(p, h, cfg, cache, pos, window=window)
+        else:
+            a, new_cache = _attn_seq_with_cache(p, h, cfg, kind, mode == "prefill")
+        x = x + a
+        h = L.rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        if kind == "attn_moe":
+            y, aux = M.moe_ffn(p, h, cfg)
+        else:
+            y = L.mlp(p, h, cfg)
+        x = x + y
+        return x, new_cache, aux
+    if kind == "ssd":
+        h = L.rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+        if mode == "decode":
+            y, new_cache = S.ssd_decode(p, h, cfg, cache)
+        else:
+            y, new_cache = S.ssd_seq_cached(p, h, cfg, want_cache=mode == "prefill")
+        return x + y, new_cache, aux
+    if kind == "rglru":
+        h = L.rmsnorm(x, p["ln1_scale"], cfg.norm_eps)
+        if mode == "decode":
+            y, new_cache = R.rglru_decode(p, h, cfg, cache)
+        else:
+            y, new_cache = R.rglru_seq_cached(p, h, cfg, want_cache=mode == "prefill")
+        x = x + y
+        h = L.rmsnorm(x, p["ln2_scale"], cfg.norm_eps)
+        return x + L.mlp(p, h, cfg), new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack forward
+
+
+def _embed_inputs(params, inputs, cfg: ModelConfig):
+    x = jnp.take(params["tok_embed"], inputs["tokens"], axis=0).astype(cfg.act_dtype)
+    if cfg.ext_embed_len and "ext_embed" in inputs:  # decode past the prefix: tokens only
+        ext = inputs["ext_embed"].astype(cfg.act_dtype)
+        x = jnp.concatenate([ext, x], axis=1)
+    return shard_act(x, "batch", "seq", "act_embed")
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "block": save block boundaries only
+
+
+def forward(params: dict, inputs: dict, cfg: ModelConfig, *, mode: str = "train",
+            cache: dict | None = None, pos=None):
+    """Run the stack.  Returns (logits, new_cache, aux_loss).
+
+    inputs: {"tokens": [B,S] int32, optional "ext_embed": [B,L,D]}.
+    decode mode: tokens is [B,1]; ``pos`` is a scalar int32 position.
+    """
+    x = _embed_inputs(params, inputs, cfg)
+    pattern = cfg.block_pattern
+    n_super = cfg.n_super
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    def super_fwd(x, slot_params, slot_caches):
+        aux_sum = jnp.zeros((), jnp.float32)
+        outs = {}
+        for slot, kind in enumerate(pattern):
+            c = slot_caches.get(f"s{slot}") if slot_caches else None
+            x, nc, aux = block_fwd(kind, cfg, slot_params[f"s{slot}"], x,
+                                   mode=mode, pos=pos, cache=c)
+            if nc is not None:
+                outs[f"s{slot}"] = nc
+            aux_sum = aux_sum + aux
+        return x, outs, aux_sum
+
+    if n_super > 0:
+        stacked = {f"s{slot}": _sub(params, f"s{slot}_") for slot in range(len(pattern))}
+        cache_stacked = None
+        if mode == "decode":
+            cache_stacked = {f"s{slot}": _sub(cache, f"s{slot}_") for slot in range(len(pattern))}
+
+        body_fn = _maybe_remat(super_fwd, cfg)
+
+        def scan_body(carry, xs):
+            x, aux = carry
+            sp = xs["params"]
+            sc = xs.get("cache")
+            x, outs, aux_d = body_fn(x, sp, sc)
+            return (x, aux + aux_d), outs
+
+        xs = {"params": stacked}
+        if cache_stacked is not None:
+            xs["cache"] = cache_stacked
+        if cfg.scan_layers and n_super > 1:
+            (x, aux_total), cache_out = jax.lax.scan(scan_body, (x, aux_total), xs)
+        else:
+            cache_parts = []
+            for i in range(n_super):
+                sl = jax.tree.map(lambda a: a[i], xs)
+                (x, aux_total), co = scan_body((x, aux_total), sl)
+                cache_parts.append(co)
+            cache_out = (jax.tree.map(lambda *a: jnp.stack(a), *cache_parts)
+                         if cache_parts and cache_parts[0] else {})
+        if cache_out:
+            for slot_name, sub in cache_out.items():
+                for k, v in sub.items():
+                    new_cache[f"{slot_name}_{k}"] = v
+
+    for ti, kind in enumerate(cfg.trailing):
+        c = _sub(cache, f"t{ti}_") if (cache and mode == "decode") else None
+        x, nc, aux = block_fwd(kind, cfg, _sub(params, f"t{ti}_"), x,
+                               mode=mode, pos=pos, cache=c)
+        aux_total = aux_total + aux
+        if nc is not None:
+            for k, v in nc.items():
+                new_cache[f"t{ti}_{k}"] = v
+
+    x = L.rmsnorm(x, params["final_scale"], cfg.norm_eps)
+    head = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = shard_act(logits, "batch", "seq", "act_vocab")
+    return logits, (new_cache if new_cache else None), aux_total

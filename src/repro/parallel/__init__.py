@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_sharding,
+    shard_act,
+    sharding_context,
+    tree_shardings,
+)

@@ -1,0 +1,78 @@
+"""Error-feedback int8 gradient compression for DCN-crossing reductions.
+
+The pod axis rides the data-center network (25-100x slower than ICI), so
+the cross-pod gradient all-reduce is the one collective worth compressing.
+``compressed_psum_mean`` implements the standard EF-int8 scheme:
+
+    s      = g + err_carry          (error feedback)
+    scale  = max|s| / 127           (per-tensor)
+    q      = round(s / scale) int8
+    err'   = s - q * scale
+    out    = mean over axis of dequantized q
+
+Wire bytes drop 4x vs f32 (2x vs bf16); the error carry makes the scheme
+unbiased over time (Karimireddy et al., 2019).  The reduce itself is a
+reduce-scatter of int8 chunks + local sum + all-gather int8, so the
+compressed representation is what crosses the wire in both phases.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_ef(g, err):
+    s = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(s)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(s / scale), -127, 127).astype(jnp.int8)
+    new_err = s - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _ring_mean_int8(q, scale, axis: str):
+    """Mean over ``axis`` moving int8 (+ one f32 scale) per hop:
+    reduce-scatter int8 chunks, local dequant-sum, all-gather int8."""
+    n = jax.lax.axis_size(axis)
+    flat = q.reshape(n, -1)                                   # chunk per peer
+    # phase 1: all_to_all = reduce-scatter wire pattern (int8 on the wire)
+    chunks = jax.lax.all_to_all(flat[:, None], axis, split_axis=0, concat_axis=1)
+    scales = jax.lax.all_gather(scale, axis)                  # n scalars
+    part = jnp.sum(chunks[:, 0].astype(jnp.float32)
+                   * scales[:, None], axis=0) / n             # my chunk, reduced
+    # phase 2: re-quantize the reduced chunk, all-gather int8
+    pscale = jnp.maximum(jnp.max(jnp.abs(part)), 1e-12) / 127.0
+    pq = jnp.clip(jnp.round(part / pscale), -127, 127).astype(jnp.int8)
+    allq = jax.lax.all_gather(pq, axis)                       # [n, chunk] int8 wire
+    alls = jax.lax.all_gather(pscale, axis)
+    return (allq.astype(jnp.float32) * alls[:, None]).reshape(q.shape)
+
+
+def compressed_psum_mean(grads, err_tree, mesh, axis: str = "pod"):
+    """Compressed mean of a grads pytree over one mesh axis (shard_map'd;
+    other axes stay auto/GSPMD).  Returns (mean_grads_f32, new_err_tree)."""
+
+    def one(g, err):
+        def f(gl, el):
+            ql, sl, ne = quantize_ef(gl, el)
+            pad = (-ql.size) % jax.lax.axis_size(axis)
+            qf = jnp.pad(ql.reshape(-1), (0, pad))
+            mean = _ring_mean_int8(qf, sl, axis)
+            mean = mean[:ql.size].reshape(gl.shape)
+            return mean, ne
+
+        fn = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+                           axis_names={axis}, check_vma=False)
+        return fn(g, err)
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(err_tree)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (td.unflatten([o[0] for o in outs]), td.unflatten([o[1] for o in outs]))

@@ -1,0 +1,66 @@
+"""Pipeline parallelism over a mesh axis (GPipe schedule, ppermute hops).
+
+For models whose optimizer state cannot fit one pod, the ``pod`` axis can
+carry pipeline stages instead of pure DP: each pod holds a contiguous layer
+range; microbatches stream through with ``collective_permute`` hops (the
+DCN-friendly point-to-point pattern — no all-reduce crosses pods).
+
+``pipeline_apply`` is schedule-only and model-agnostic: it runs a stage
+function under shard_map with the classic (m + n_stages - 1)-tick GPipe
+loop, bubbles included.  1F1B ordering is a schedule permutation left as a
+perf iteration (§Perf candidates).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.moe import shard_map  # version shim
+
+
+def pipeline_apply(stage_fn, stage_params, x_mb, mesh, axis: str = "pod"):
+    """Run microbatches through pipeline stages laid out along ``axis``.
+
+    stage_fn(params_i, x) -> y           (one stage's compute)
+    stage_params: pytree with leading dim n_stages (sharded over ``axis``)
+    x_mb: [m, ...] microbatches (replicated over ``axis``)
+    Returns stacked outputs [m, ...] (from the last stage, replicated).
+    """
+    n = mesh.shape[axis]
+    m = x_mb.shape[0]
+    ticks = m + n - 1
+
+    def f(params, xs):
+        params = jax.tree.map(lambda a: a[0], params)   # my stage's slice
+        idx = jax.lax.axis_index(axis)
+        buf = jnp.zeros_like(xs[0])                     # inbound activation
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (when valid)
+            mb = jnp.clip(t, 0, m - 1)
+            x_in = jnp.where(idx == 0, xs[mb], buf)
+            active = (t - idx >= 0) & (t - idx < m)
+            y = stage_fn(params, x_in)
+            y = jnp.where(active, y, buf)
+            # last stage emits at slot (t - n + 1)
+            slot = jnp.clip(t - n + 1, 0, m - 1)
+            emit = active & (idx == n - 1)
+            outs = jax.lax.dynamic_update_slice(
+                outs, jnp.where(emit, y, outs[slot])[None], (slot,) + (0,) * (outs.ndim - 1))
+            # hop right (stage i -> i+1); ring wrap is harmless (ignored at 0)
+            buf = jax.lax.ppermute(y, axis, [(i, (i + 1) % n) for i in range(n)])
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # replicate final outputs to all stages (so callers see one value)
+        outs = jax.lax.ppermute(outs, axis,
+                                [(n - 1, i) for i in range(n)])
+        return outs
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params,
+                             is_leaf=lambda x: hasattr(x, "shape")), P())
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=P())(stage_params, x_mb)

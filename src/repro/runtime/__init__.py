@@ -1,0 +1,3 @@
+from repro.runtime.checkpoint import CheckpointManager  # noqa: F401
+from repro.runtime.elastic import FleetState, StragglerMitigator  # noqa: F401
+from repro.runtime.controller import PodController, WorkerAgent  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pod controller: the ifunc API as the fleet's control plane.
+
+The controller holds an endpoint + mapped mailbox region per worker and
+*injects* control functions — checkpoint triggers, LR updates, probes,
+data-pipeline transforms — as ifunc messages.  Workers poll their mailbox
+between train steps.  New control verbs deploy by dropping a library into
+the ifunc lib dir: no restart, no redeploy (the paper's §1 motivation).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.core import api as A
+from repro.core import rdma as R
+
+
+@dataclass
+class WorkerAgent:
+    """Target-side agent: a mailbox ring + the runner hooks control verbs use."""
+
+    name: str
+    ctx: A.Context
+    slot_size: int = 64 << 10
+    n_slots: int = 64
+    hooks: dict = field(default_factory=dict)   # exposed to ifunc target_args
+
+    def __post_init__(self):
+        self.region = self.ctx.nic.mem_map(self.n_slots * self.slot_size)
+        self.ring = R.RingBuffer(self.region, self.slot_size)
+        self.hooks.setdefault("acks", [])
+
+    def poll(self, max_msgs: int = 16) -> int:
+        """Drain up to max_msgs control messages (called between steps)."""
+        n = 0
+        while n < max_msgs:
+            st = A.poll_ring(self.ctx, self.ring, self.hooks)
+            if st != A.Status.OK:
+                break
+            n += 1
+        return n
+
+
+class PodController:
+    def __init__(self, ctx: A.Context):
+        self.ctx = ctx
+        self.workers: dict[str, tuple] = {}   # name -> (ep, agent ring info)
+
+    def attach(self, agent: WorkerAgent) -> None:
+        ep = self.ctx.nic.connect(agent.ctx.nic)
+        self.workers[agent.name] = (ep, agent)
+
+    def inject(self, name: str, source_args=b"", workers=None) -> int:
+        """Send ifunc ``name`` to (all) workers' mailboxes; returns #sent."""
+        h = self.ctx.handles.get(name) or A.register_ifunc(self.ctx, name)
+        sent = 0
+        for wname, (ep, agent) in self.workers.items():
+            if workers is not None and wname not in workers:
+                continue
+            msg = A.ifunc_msg_create(h, source_args)
+            if msg.nbytes > agent.ring.slot_size:
+                raise ValueError(f"control frame {msg.nbytes}B exceeds slot")
+            ep.put_nbi(msg.frame, agent.ring.slot_addr(agent.ring.tail),
+                       agent.region.rkey)
+            agent.ring.tail += 1
+            sent += 1
+        return sent
+
+    def broadcast_until_acked(self, name: str, source_args=b"",
+                              timeout_s: float = 5.0) -> bool:
+        """inject + wait for every worker's ack hook (probe round-trip)."""
+        want = {w: len(a.hooks["acks"]) + 1 for w, (_, a) in self.workers.items()}
+        self.inject(name, source_args)
+        t0 = time.time()
+        while time.time() - t0 < timeout_s:
+            done = all(len(a.hooks["acks"]) >= want[w]
+                       for w, (_, a) in self.workers.items())
+            if done:
+                return True
+            for _, a in self.workers.values():
+                a.poll()
+        return False

@@ -1,0 +1,108 @@
+"""Elastic fleet membership, heartbeats, straggler detection & mitigation.
+
+Policy layer for 1000+-node runs (the mechanisms the multi-pod launcher
+invokes between steps):
+
+* heartbeats + deadline -> dead-worker detection; data shards of dead
+  workers are reassigned round-robin to survivors (deterministic, so every
+  survivor computes the same assignment without coordination);
+* per-step duration tracking -> straggler flagging (median + k·MAD rule)
+  and backup-task dispatch (Dean-style duplicate work for the tail);
+* on membership change the runner restores the latest checkpoint onto the
+  surviving mesh (see CheckpointManager.restore with new shardings) — the
+  control messages themselves travel as ifuncs (runtime/controller.py).
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+
+@dataclass
+class WorkerInfo:
+    worker_id: str
+    last_heartbeat: float = 0.0
+    alive: bool = True
+    step_times: list[float] = field(default_factory=list)
+    backup_of: str | None = None
+
+
+class FleetState:
+    def __init__(self, workers: list[str], heartbeat_deadline: float = 30.0):
+        self.workers = {w: WorkerInfo(w) for w in workers}
+        self.deadline = heartbeat_deadline
+        self.generation = 0            # bumps on every membership change
+
+    # -- membership ---------------------------------------------------------
+    def heartbeat(self, worker_id: str, now: float) -> None:
+        w = self.workers.get(worker_id)
+        if w is None:                   # late join
+            self.workers[worker_id] = w = WorkerInfo(worker_id)
+            self.generation += 1
+        w.last_heartbeat = now
+        if not w.alive:
+            w.alive = True
+            self.generation += 1
+
+    def sweep_dead(self, now: float) -> list[str]:
+        dead = []
+        for w in self.workers.values():
+            if w.alive and now - w.last_heartbeat > self.deadline:
+                w.alive = False
+                dead.append(w.worker_id)
+        if dead:
+            self.generation += 1
+        return dead
+
+    def alive(self) -> list[str]:
+        return sorted(w.worker_id for w in self.workers.values() if w.alive)
+
+    # -- deterministic shard reassignment ------------------------------------
+    def shard_assignment(self, n_shards: int) -> dict[str, list[int]]:
+        """Round-robin data-shard ownership over live workers; every worker
+        computes this identically from (generation, membership)."""
+        live = self.alive()
+        if not live:
+            return {}
+        out = {w: [] for w in live}
+        for s in range(n_shards):
+            out[live[s % len(live)]].append(s)
+        return out
+
+
+class StragglerMitigator:
+    """Median + k·MAD outlier rule over recent step durations."""
+
+    def __init__(self, window: int = 32, k: float = 4.0, min_samples: int = 8):
+        self.window, self.k, self.min_samples = window, k, min_samples
+        self.times: dict[str, list[float]] = {}
+
+    def record(self, worker_id: str, step_s: float) -> None:
+        t = self.times.setdefault(worker_id, [])
+        t.append(step_s)
+        del t[:-self.window]
+
+    def stragglers(self) -> list[str]:
+        last = {w: t[-1] for w, t in self.times.items() if t}
+        if len(last) < self.min_samples:
+            return []
+        med = statistics.median(last.values())
+        mad = statistics.median(abs(v - med) for v in last.values()) or 1e-9
+        return sorted(w for w, v in last.items() if v > med + self.k * mad)
+
+    def backup_plan(self, n_shards: int, fleet: FleetState) -> dict[str, int]:
+        """Assign each straggler's current shard *also* to the fastest
+        non-straggler (duplicate dispatch; first result wins)."""
+        strag = set(self.stragglers())
+        if not strag:
+            return {}
+        speed = sorted((t[-1], w) for w, t in self.times.items()
+                       if w not in strag and t)
+        plan = {}
+        assign = fleet.shard_assignment(n_shards)
+        fast = [w for _, w in speed]
+        for i, s in enumerate(sorted(strag)):
+            if i < len(fast) and assign.get(s):
+                plan[fast[i]] = assign[s][0]
+        return plan

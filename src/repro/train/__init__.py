@@ -1,0 +1,3 @@
+from repro.train.optim import OptConfig, adamw_init, adamw_update, lr_at  # noqa: F401
+from repro.train.step import TrainState, make_train_step, train_state_specs  # noqa: F401
+from repro.train import serve  # noqa: F401

@@ -1,0 +1,140 @@
+"""Optimizers and LR schedules (AdamW with optional bf16 state, Adafactor-lite,
+WSD / cosine schedules).
+
+All state is a pytree mirroring params, so it inherits the params' sharding
+(FSDP over "data" x TP over "model") — optimizer math is fully sharded.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"             # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"    # "bfloat16" halves optimizer HBM (large MoE)
+    schedule: str = "cosine"        # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1         # WSD: trailing fraction spent decaying
+
+
+def lr_at(cfg: OptConfig, step):
+    """Schedule value at ``step`` (traced-safe)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        # warmup -> stable -> decay (MiniCPM): inverse-sqrt-free linear decay tail
+        decay_start = cfg.total_steps * (1.0 - cfg.decay_frac)
+        frac = (step - decay_start) / jnp.maximum(cfg.total_steps - decay_start, 1.0)
+        decay = 1.0 - jnp.clip(frac, 0.0, 1.0) * 0.9  # decay to 10%
+        return cfg.lr * warm * decay
+    # cosine
+    t = jnp.clip(step / cfg.total_steps, 0.0, 1.0)
+    return cfg.lr * warm * (0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+
+def adamw_init(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        step_ = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step_ + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor-lite (factored second moment; for very large embeddings/experts)
+
+
+def adafactor_init(params, cfg: OptConfig):
+    def fac(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(fac, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    count = state["count"] + 1
+    lr = lr_at(cfg, count)
+    d = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, f):
+        g = g.astype(jnp.float32)
+        if p.ndim >= 2:
+            vr = cfg.b2 * f["vr"] + (1 - cfg.b2) * jnp.mean(jnp.square(g), axis=-1)
+            vc = cfg.b2 * f["vc"] + (1 - cfg.b2) * jnp.mean(jnp.square(g), axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30) / d)
+            step_ = g / jnp.maximum(denom, 1e-30)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = cfg.b2 * f["v"] + (1 - cfg.b2) * jnp.square(g)
+            step_ = g / (jnp.sqrt(v / d) + cfg.eps)
+            nf = {"v": v}
+        # update clipping (Adafactor's RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(step_)) + 1e-30)
+        step_ = step_ / jnp.maximum(1.0, rms)
+        p32 = p.astype(jnp.float32) - lr * (step_ + cfg.weight_decay * p.astype(jnp.float32))
+        return p32.astype(p.dtype), nf
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_f = treedef.flatten_up_to(state["f"])
+    out = [upd(p, g, f) for p, g, f in zip(leaves_p, leaves_g, leaves_f)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"f": treedef.unflatten([o[1] for o in out]), "count": count},
+            {"lr": lr})

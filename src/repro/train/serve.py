@@ -1,0 +1,43 @@
+"""Serving steps: prefill (full sequence -> cache) and decode (one token)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, inputs):
+        logits, cache, _ = T.forward(params, inputs, cfg, mode="prefill")
+        return cache, logits[:, -1:]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens, pos):
+        """tokens [B,1] int32; pos scalar int32 -> (cache, logits [B,1,V])."""
+        logits, new_cache, _ = T.forward(params, {"tokens": tokens}, cfg,
+                                         mode="decode", cache=cache, pos=pos)
+        return new_cache, logits
+    return decode_step
+
+
+def greedy_token(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+def pad_cache_to(cache: dict, target: dict):
+    """Pad a prefill cache (seq width S) into the decode cache layout (width W>=S)."""
+    out = {}
+    for k, tgt in target.items():
+        src = cache[k]
+        if src.shape == tgt.shape:
+            out[k] = src.astype(tgt.dtype)
+            continue
+        pads = [(0, t - s) for s, t in zip(src.shape, tgt.shape)]
+        fill = -1 if k.endswith("slot_pos") else 0
+        out[k] = jnp.pad(src.astype(tgt.dtype), pads, constant_values=fill)
+    return out

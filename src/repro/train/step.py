@@ -1,0 +1,120 @@
+"""Train step: masked LM loss, microbatched gradient accumulation, AdamW/Adafactor."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import optim as O
+
+TrainState = dict[str, Any]  # {"params":…, "opt":…, "step": int32[]}
+
+IGNORE = -100
+
+
+def cross_entropy(logits, labels, z_weight: float = 1e-4):
+    """logits [B,S,V] f32, labels [B,S] int32 (IGNORE = masked)."""
+    mask = (labels != IGNORE).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0] - lse
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    zl = z_weight * ((lse * mask) ** 2).sum() / denom
+    return ce + zl, ce
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        logits, _, aux = T.forward(params, inputs, cfg, mode="train")
+        loss, ce = cross_entropy(logits, batch["labels"])
+        loss = loss + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig, microbatches: int = 1):
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``microbatches > 1`` accumulates grads over batch slices with a scan —
+    each microbatch's backward overlaps the next's collectives under XLA's
+    scheduler, and live activation memory drops by the microbatch factor.
+    """
+    loss_fn = make_loss_fn(cfg)
+    upd_init, upd_fn = {
+        "adamw": (O.adamw_init, O.adamw_update),
+        "adafactor": (O.adafactor_init, O.adafactor_update),
+    }[opt_cfg.name]
+
+    def grads_of(params, batch):
+        (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, extras, grads
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+        if microbatches == 1:
+            loss, extras, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                loss, extras, grads = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                                   acc, grads)
+                return acc, (loss, extras)
+
+            grads, (losses, extra_stack) = jax.lax.scan(body, g0, mbs)
+            loss = losses.mean()
+            extras = jax.tree.map(lambda x: x.mean(), extra_stack)
+        new_params, new_opt, om = upd_fn(params, grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, **extras, **om, "step": state["step"] + 1}
+        return {"params": new_params, "opt": new_opt, "step": state["step"] + 1}, metrics
+
+    train_step.init_opt = lambda params: upd_init(params, opt_cfg)
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# specs for lowering (dry-run) — shapes + logical axes for the whole state
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: O.OptConfig):
+    p_shapes = T.param_shapes(cfg)
+    p_axes = T.param_axes(cfg)
+    sdt = jnp.dtype(opt_cfg.state_dtype)
+    if opt_cfg.name == "adafactor":
+        def fac_shape(sd):
+            if len(sd.shape) >= 2:
+                return {"vr": jax.ShapeDtypeStruct(sd.shape[:-1], jnp.float32),
+                        "vc": jax.ShapeDtypeStruct(sd.shape[:-2] + sd.shape[-1:], jnp.float32)}
+            return {"v": jax.ShapeDtypeStruct(sd.shape, jnp.float32)}
+
+        def fac_axes(ax):
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+
+        opt_shapes = {"f": {k: fac_shape(v) for k, v in p_shapes.items()},
+                      "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_axes = {"f": {k: fac_axes(v) for k, v in p_axes.items()}, "count": ()}
+    else:
+        mv = {k: jax.ShapeDtypeStruct(v.shape, sdt) for k, v in p_shapes.items()}
+        opt_shapes = {"m": mv, "v": dict(mv), "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_axes = {"m": dict(p_axes), "v": dict(p_axes), "count": ()}
+    shapes = {"params": p_shapes, "opt": opt_shapes,
+              "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"params": p_axes, "opt": opt_axes, "step": ()}
+    return shapes, axes
+
+
+def metrics_axes():
+    return {"loss": (), "ce": (), "aux": (), "grad_norm": (), "lr": (), "step": ()}

@@ -1,0 +1,28 @@
+import os
+import pathlib
+import sys
+
+# tests see ONE device (the dry-run sets its own 512-device flag in a
+# subprocess); keep kernels in interpret mode.
+os.environ.setdefault("REPRO_IFUNC_LIB_DIR",
+                      str(pathlib.Path(__file__).resolve().parents[1] / "ifunc_libs"))
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+for p in (str(REPO / "src"), str(REPO)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import pytest  # noqa: E402
+
+# Initialize the backend NOW (1 device), before test collection imports any
+# module that sets --xla_force_host_platform_device_count (launch/dryrun.py
+# must set it in its first two lines per the dry-run contract; the dry-run
+# itself always runs in a subprocess).
+import jax  # noqa: E402
+
+jax.devices()
+
+
+@pytest.fixture(scope="session")
+def lib_dir():
+    return pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])

@@ -1,0 +1,115 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward /
+train step on CPU, shape + finiteness asserts (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as C
+from repro.models import transformer as T
+from repro.train.optim import OptConfig
+from repro.train.step import make_train_step
+
+# reduced config of the same family for every assigned arch
+REDUCERS = dict(num_layers=None, d_model=64, d_ff=128, vocab_size=512)
+
+
+def reduced(cfg):
+    pat = cfg.block_pattern
+    n_layers = max(len(pat) * 2, 2)
+    kw = dict(
+        num_layers=n_layers + (1 if cfg.trailing else 0),
+        d_model=64, d_ff=128 if cfg.d_ff else 0, vocab_size=512,
+        num_heads=4, num_kv_heads=max(1, min(cfg.num_kv_heads, 2)), head_dim=16,
+        q_chunk=16, ssm_chunk=8,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=8, experts_per_token=min(cfg.experts_per_token, 2),
+                  moe_d_ff=32)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16)
+    if cfg.attn_window:
+        kw.update(attn_window=8)
+    if cfg.lru_width:
+        kw.update(lru_width=64)
+    if cfg.ext_embed_len:
+        kw.update(ext_embed_len=5)
+    return cfg.with_(**kw)
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_forward_and_train(arch):
+    cfg = reduced(C.get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S - cfg.ext_embed_len), 0, cfg.vocab_size)
+    inputs = {"tokens": toks}
+    if cfg.ext_embed_len:
+        inputs["ext_embed"] = jax.random.normal(
+            key, (B, cfg.ext_embed_len, cfg.d_model), cfg.act_dtype)
+    logits, cache, aux = jax.jit(
+        lambda p, i: T.forward(p, i, cfg, mode="train"))(params, inputs)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: non-finite logits"
+    assert cache is None
+
+    # one optimizer step must run and stay finite
+    step = make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    state = {"params": params, "opt": step.init_opt(params),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = dict(inputs, labels=jax.random.randint(key, (B, S), 0, cfg.vocab_size))
+    state, metrics = jax.jit(step)(state, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: loss NaN"
+    assert int(metrics["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["internlm2_1_8b", "qwen3_moe_30b_a3b",
+                                  "mamba2_780m", "recurrentgemma_2b"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = reduced(C.get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, _, _ = jax.jit(lambda p, i: T.forward(p, i, cfg, mode="train"))(
+        params, {"tokens": toks})
+    cache = T.init_cache(cfg, B, 32)
+    dec = jax.jit(lambda p, t, pos, c: T.forward(
+        p, {"tokens": t}, cfg, mode="decode", cache=c, pos=pos))
+    errs = []
+    for t in range(S):
+        lg, cache, _ = dec(params, toks[:, t:t + 1], jnp.int32(t), cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - logits[:, t]))))
+    assert max(errs) < 0.05, f"{arch}: decode diverges from train ({max(errs)})"
+
+
+def test_prefill_then_decode_continues(lib_dir):
+    from repro.train import serve as SRV
+
+    cfg = reduced(C.get_config("internlm2_1_8b"))
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(cfg, key)
+    B, S, W = 2, 8, 16
+    toks = jax.random.randint(key, (B, S + 4), 0, cfg.vocab_size)
+    full_logits, _, _ = T.forward(params, {"tokens": toks}, cfg, mode="train")
+
+    prefill = SRV.make_prefill_step(cfg)
+    decode = SRV.make_decode_step(cfg)
+    cache, last = prefill(params, {"tokens": toks[:, :S]})
+    cache = SRV.pad_cache_to(cache, T.cache_shapes(cfg, B, W))
+    assert jnp.max(jnp.abs(last[:, 0] - full_logits[:, S - 1])) < 0.05
+    for t in range(S, S + 4):
+        cache, lg = decode(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        assert jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t])) < 0.05
+
+
+def test_param_counts_match_names():
+    expect = {"internlm2_1_8b": 1.9, "smollm_360m": 0.36, "qwen1_5_4b": 4.0,
+              "minicpm_2b": 2.7, "mamba2_780m": 0.78,
+              "llama4_maverick_400b_a17b": 400.0, "qwen3_moe_30b_a3b": 30.5,
+              "phi3_vision_4_2b": 3.8, "recurrentgemma_2b": 2.9,
+              "musicgen_large": 2.4}
+    for arch, bn in expect.items():
+        total = C.get_config(arch).param_counts()["total"] / 1e9
+        assert abs(total - bn) / bn < 0.15, f"{arch}: {total:.2f}B vs {bn}B"

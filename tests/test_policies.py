@@ -1,0 +1,53 @@
+"""Hillclimb policy tokens (launch/dryrun.apply_policy) — the §Perf knobs."""
+
+import pytest
+
+from repro import configs as C
+from repro.launch.dryrun import apply_policy, opt_for
+
+
+def test_tokens_compose():
+    cfg0 = C.get_config("qwen3_moe_30b_a3b")
+    cfg, rules, mb = apply_policy(cfg0, "train_4k", "flash+attn_dp+mb2")
+    assert cfg.attn_impl == "fused"            # XLA stand-in for the kernel
+    assert rules.get("heads") == ()            # attention DP
+    assert "model" in rules.get("batch")
+    assert mb == 2
+
+
+def test_resident_sets_expert_rules():
+    cfg0 = C.get_config("llama4_maverick_400b_a17b")
+    cfg, rules, _ = apply_policy(cfg0, "train_4k", "resident")
+    assert cfg.moe_expert_resident
+    assert rules.get("expert_ffn") == ("data",)
+
+
+def test_long_decode_unshards_batch():
+    cfg0 = C.get_config("mamba2_780m")
+    _, rules, _ = apply_policy(cfg0, "long_500k", "baseline")
+    assert rules.get("batch") == ()
+    assert rules.get("cache_batch") == ()
+
+
+def test_unknown_token_raises():
+    cfg0 = C.get_config("smollm_360m")
+    with pytest.raises(KeyError):
+        apply_policy(cfg0, "train_4k", "flash+bogus")
+
+
+def test_opt_for_statebf16_and_wsd():
+    assert opt_for("minicpm_2b").schedule == "wsd"
+    assert opt_for("llama4_maverick_400b_a17b").state_dtype == "bfloat16"
+    assert opt_for("smollm_360m", "flash+statebf16").state_dtype == "bfloat16"
+
+
+def test_kernel_byte_models_beat_xla_floor():
+    from repro.kernels.flash_attn import flash_hbm_bytes
+    from repro.kernels.ssd_scan import ssd_hbm_bytes
+
+    # one f32 materialization of the scores is already worse than the kernel
+    assert flash_hbm_bytes(1, 15, 4096, 64, train=False) < 15 * 4096 * 4096 * 4
+    # SSD kernel traffic is linear in S (vs quadratic-in-Q chunk tensors)
+    b1 = ssd_hbm_bytes(1, 48, 4096, 64, 128, train=True)
+    b2 = ssd_hbm_bytes(1, 48, 8192, 64, 128, train=True)
+    assert 1.8 < b2 / b1 < 2.2

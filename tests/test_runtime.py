@@ -1,0 +1,141 @@
+"""Fault-tolerance substrate: checkpointing, elasticity, stragglers, data."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import TokenDataset, Loader
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.elastic import FleetState, StragglerMitigator
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.arange(4.0)},
+            "opt": {"m": {"w": jnp.zeros((8, 8)), "b": jnp.zeros(4)}},
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    st = _state()
+    cm.save(7, st)
+    back = cm.restore(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    st = _state()
+    for s in (1, 2, 3):
+        cm.save(s, st, blocking=False)
+        cm.wait()
+    assert cm.steps() == [2, 3]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    st = _state()
+    cm.save(1, st)
+    target = next((tmp_path / "step_1").glob("params__w.npy"))
+    raw = bytearray(target.read_bytes())
+    raw[-1] ^= 0xFF
+    target.write_bytes(raw)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    with pytest.raises(IOError):
+        cm.restore(like, verify=True)
+
+
+def test_checkpoint_missing_leaf_init(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    st = _state()
+    cm.save(1, st)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    like["params"]["new"] = jax.ShapeDtypeStruct((2,), jnp.float32)
+    out = cm.restore(like, init_missing=lambda key, sds: np.ones(sds.shape, np.float32))
+    np.testing.assert_allclose(np.asarray(out["params"]["new"]), [1, 1])
+
+
+def test_torn_write_never_visible(tmp_path):
+    """A checkpoint dir without manifest (torn write) is ignored."""
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, _state())
+    (tmp_path / "step_2").mkdir()
+    (tmp_path / "step_2" / "params__w.npy").write_bytes(b"junk")
+    assert cm.latest_step() == 1
+
+
+# --- elastic ----------------------------------------------------------------
+
+def test_fleet_membership_and_reassignment():
+    f = FleetState([f"w{i}" for i in range(4)], heartbeat_deadline=1.0)
+    now = 100.0
+    for w in list(f.workers):
+        f.heartbeat(w, now)
+    assert f.sweep_dead(now + 0.5) == []
+    f.heartbeat("w0", now + 2.0)
+    dead = f.sweep_dead(now + 2.0)
+    assert set(dead) == {"w1", "w2", "w3"}
+    a = f.shard_assignment(8)
+    assert sorted(sum(a.values(), [])) == list(range(8))
+    assert set(a) == {"w0"}
+    g1 = f.generation
+    f.heartbeat("w1", now + 2.5)      # rejoin
+    assert f.generation > g1
+    a2 = f.shard_assignment(8)
+    assert set(a2) == {"w0", "w1"}
+    # determinism: same membership -> same assignment
+    assert a2 == f.shard_assignment(8)
+
+
+def test_straggler_detection_and_backup():
+    sm = StragglerMitigator(k=3.0, min_samples=4)
+    f = FleetState([f"w{i}" for i in range(8)])
+    for w in f.workers:
+        f.heartbeat(w, 0.0)
+    for i in range(8):
+        for w in f.workers:
+            sm.record(w, 1.0 + (5.0 if w == "w3" and i >= 4 else 0.0))
+    assert sm.stragglers() == ["w3"]
+    plan = sm.backup_plan(8, f)
+    assert plan and all(v in range(8) for v in plan.values())
+    assert "w3" not in plan           # backups go to non-stragglers
+
+
+# --- data -------------------------------------------------------------------
+
+def test_data_determinism_and_disjoint_streams():
+    ds = TokenDataset(1000, seed=1)
+    b1 = ds.batch(step=5, shard_id=2, n_shards=8, batch_per_shard=4, seq_len=16)
+    b2 = ds.batch(step=5, shard_id=2, n_shards=8, batch_per_shard=4, seq_len=16)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = ds.batch(step=5, shard_id=3, n_shards=8, batch_per_shard=4, seq_len=16)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # next-token alignment
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_file_backed_dataset(tmp_path):
+    toks = np.arange(10_000, dtype=np.uint16) % 512
+    p = tmp_path / "tokens.bin"
+    toks.tofile(p)
+    ds = TokenDataset(512, path=str(p))
+    b = ds.batch(0, 0, 1, 2, 8)
+    assert b["tokens"].shape == (2, 8)
+    assert b["tokens"].max() < 512
+
+
+def test_loader_prefetch():
+    ds = TokenDataset(100, seed=2)
+    ld = Loader(ds, shard_id=0, n_shards=1, batch_per_shard=2, seq_len=8)
+    s0, b0 = next(ld)
+    s1, b1 = next(ld)
+    assert (s0, s1) == (0, 1)
+    ld.close()
+    ref = ds.batch(0, 0, 1, 2, 8)
+    np.testing.assert_array_equal(b0["tokens"], ref["tokens"])

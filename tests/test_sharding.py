@@ -1,0 +1,73 @@
+"""Logical-axis rules -> NamedShardings (divisibility + axis dropping)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as SH
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_missing_mesh_axis_dropped(mesh2d):
+    # "pod" not in this mesh -> dropped from batch
+    sh = SH.logical_sharding(("batch", None), mesh2d)
+    assert sh.spec == P("data") or sh.spec == P(("data",))
+
+
+def test_divisibility_dropping(mesh2d):
+    rules = SH.DEFAULT_RULES
+    # dim 7 not divisible by data size unless data == 1 or 7
+    n = mesh2d.shape["data"]
+    sh = SH.logical_sharding(("batch",), mesh2d, rules, shape=(7,))
+    if 7 % n == 0:
+        assert sh.spec != P()
+    else:
+        assert sh.spec == P()
+
+
+def test_no_axis_reuse(mesh2d):
+    rules = SH.DEFAULT_RULES.override(seq=("data",))
+    sh = SH.logical_sharding(("batch", "seq"), mesh2d, rules)
+    flat = []
+    for part in sh.spec:
+        if part is None:
+            continue
+        flat.extend([part] if isinstance(part, str) else list(part))
+    assert len(flat) == len(set(flat))
+
+
+def test_tree_shardings_with_shapes(mesh2d):
+    axes = {"a": ("batch", None), "b": ("vocab", "embed")}
+    shapes = {"a": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+              "b": jax.ShapeDtypeStruct((13, 16), jnp.float32)}
+    tree = SH.tree_shardings(axes, shapes, mesh2d)
+    assert set(tree) == {"a", "b"}
+
+
+def test_shard_act_noop_outside_context():
+    x = jnp.ones((4, 4))
+    assert SH.shard_act(x, "batch", None) is x
+
+
+def test_context_installs_mesh(mesh2d):
+    with SH.sharding_context(mesh2d):
+        assert SH.current_mesh() is mesh2d
+        x = SH.shard_act(jnp.ones((len(jax.devices()), 2)), "batch", None)
+        assert x.shape == (len(jax.devices()), 2)
+    assert SH.current_mesh() is None
+
+
+def test_override():
+    r = SH.DEFAULT_RULES.override(heads=None, embed="model", batch=("data",))
+    assert r.get("heads") == ()
+    assert r.get("embed") == ("model",)
+    assert r.get("batch") == ("data",)
+    # original untouched
+    assert SH.DEFAULT_RULES.get("heads") == ("model",)
