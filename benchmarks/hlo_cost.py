@@ -45,6 +45,14 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()`` (see repro.compat — shared
+    with the dry-run machinery in src/)."""
+    from repro.compat import xla_cost_analysis as _impl
+
+    return _impl(compiled)
+
+
 @dataclass
 class Shape:
     dtype: str

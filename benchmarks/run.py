@@ -71,6 +71,10 @@ def tierB_uvm() -> list[dict]:
     return B.bench_uvm()
 
 
+def transport_fanout() -> list[dict]:
+    return B.bench_dispatcher_fanout()
+
+
 def roofline_summary() -> list[dict]:
     path = OUT.parent / "roofline.json"
     if not path.exists():
@@ -89,7 +93,7 @@ def roofline_summary() -> list[dict]:
 def main() -> None:
     all_rows = []
     for fn in (fig3_latency, fig4_throughput, s34_link_cost, tierB_uvm,
-               roofline_summary):
+               transport_fanout, roofline_summary):
         rows = fn()
         _emit(rows)
         all_rows += rows

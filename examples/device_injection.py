@@ -1,63 +1,65 @@
-"""Tier-B demo: inject a μVM program into on-device mailboxes over the ICI.
+"""Tier-B demo: inject a μVM program into on-device mailboxes over the ICI,
+through the unified transport layer.
 
-Eight (emulated) TPU shards each one-sided-deposit a frame into their right
-neighbor's ring buffer via collective_permute; a single compiled sweep
-validates headers/trailers (ring_poll kernel) and runs the injected
-program — here ``y = relu(x @ W_resident)`` where W is bound from the
-target's external table (the device GOT).
+Eight (emulated) TPU shards form a ``DeviceMeshFabric``; a host-side
+dispatcher sends ordinary ifunc frames (``uvm_affine``: y = relu(x @ W),
+W bound from the target's external table — the device GOT).  The fabric
+transcodes each wire frame into the device word-frame layout, one-sided-
+deposits it into the *right neighbor's* ring buffer via collective_permute
+(shift=1), and a single compiled sweep validates headers/trailers
+(ring_poll kernel) and runs the injected program on every shard.
 
     PYTHONPATH=src python examples/device_injection.py
 """
 
 import os
+import pathlib
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("REPRO_IFUNC_LIB_DIR",
+                      str(pathlib.Path(__file__).resolve().parents[1] / "ifunc_libs"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codegen import assemble
-from repro.core.device_mailbox import (empty_mailbox, make_deposit, make_sweep,
-                                       pack_word_frame)
-from repro.kernels.ring_poll import READY
+from repro.core import Context, ifunc_msg_create, register_ifunc
+from repro.core.codegen import deserialize_uvm
+from repro.transport import Dispatcher, ProgressEngine
+from repro.transport.device_fabric import DeviceMeshFabric
 
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.sharding import make_mesh
 
-# the injected function, as μcode (assembled on the "host", shipped as data)
-prog = assemble([
-    ("loadp", 0),            # r0 <- payload tile
-    ("loade", 1, 0),         # r1 <- external 0 ("W", resident on target)
-    ("matmul", 2, 0, 1),     # MXU
-    ("relu", 2, 2),
-    ("store", 0, 2),
-], symbols=("W",))
+T, NT, SHARDS = 128, 2, 8
 
-T, NT, NS = 128, 2, 4
-slot_words = 5 + NT * T * T + 1
+mesh = make_mesh((SHARDS,), ("model",))
+source = Context("host-source")
+handle = register_ifunc(source, "uvm_affine")
+
 rng = np.random.default_rng(0)
-payloads = rng.standard_normal((8, NT * T * T)).astype(np.float32)
-frames = np.zeros((8, NS, slot_words), np.uint32)
-for d in range(8):
-    frames[d, 0] = pack_word_frame(payloads[d], slot_words)
-
-mailbox = empty_mailbox(8, NS, slot_words)
-deposit = make_deposit(mesh, "model")
-mailbox = deposit(mailbox, jnp.asarray(frames), shift=1)
-print("deposited 8 frames via collective_permute (ICI one-sided put)")
-
 W = rng.standard_normal((T, T)).astype(np.float32) * 0.05
-ext = jnp.broadcast_to(jnp.asarray(W)[None, None], (8, 1, T, T))
-sweep = make_sweep(mesh, "model", prog, NT)
-status, out, mailbox = sweep(mailbox, ext)
-status = np.asarray(status)
-print("slot status per shard:", status[:, 0], "(1 = READY)")
-assert (status[:, 0] == READY).all()
 
-out = np.asarray(out)
-for d in range(8):
-    src = (d - 1) % 8
-    ref = np.maximum(payloads[src].reshape(NT, T, T) @ W, 0)
-    np.testing.assert_allclose(out[d, 0], ref, rtol=1e-4, atol=1e-5)
+dispatcher = Dispatcher(source, ProgressEngine(inflight_window="trailer"))
+dispatcher.add_peer(
+    "tpu-mesh", DeviceMeshFabric(mesh, "model", shift=1), None,
+    n_slots=2, slot_size=640 << 10,
+    prog=deserialize_uvm(handle.lib.code), n_tiles=NT,
+    externals=jnp.broadcast_to(jnp.asarray(W)[None, None], (SHARDS, 1, T, T)))
+
+payloads = rng.standard_normal((SHARDS, NT, T, T)).astype(np.float32)
+for d in range(SHARDS):
+    assert dispatcher.send("tpu-mesh", ifunc_msg_create(handle, payloads[d]))
+print(f"posted {SHARDS} ifunc frames; flush deposits them via "
+      f"collective_permute (ICI one-sided put, shift=1)")
+
+n = dispatcher.drain()
+print(f"swept {n} frames in one compiled ring_poll + ifunc_vm pass")
+
+results = dispatcher.peers["tpu-mesh"].target_args["results"]
+assert len(results) == SHARDS
+for d in range(SHARDS):
+    src = (d - 1) % SHARDS                     # neighbor's payload arrived
+    ref = np.maximum(payloads[src] @ W, 0)
+    np.testing.assert_allclose(np.asarray(results[d]), ref, rtol=1e-4, atol=1e-5)
+dispatcher.print_stats()
 print("all shards executed the injected program against their resident W — OK")

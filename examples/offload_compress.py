@@ -1,7 +1,9 @@
 """Paper §3.2 scenario at (small) scale: a storage node accepts records in a
-codec it has never seen — the codec ships inside each ifunc message.  Then
-the codec is UPGRADED mid-stream under the same name (paper §3.3: 'the code
-can be modified anytime'), with zero restarts.
+codec it has never seen — the codec ships inside each ifunc message, and the
+messages travel through the unified transport layer (Dispatcher over the
+RDMA fabric, credit-based ring).  Then the codec is UPGRADED mid-stream
+under the same name (paper §3.3: 'the code can be modified anytime'), with
+zero restarts.
 
     PYTHONPATH=src python examples/offload_compress.py
 """
@@ -15,8 +17,8 @@ import time
 os.environ.setdefault("REPRO_IFUNC_LIB_DIR",
                       str(pathlib.Path(__file__).resolve().parents[1] / "ifunc_libs"))
 
-from repro.core import (Context, RingBuffer, Status, ifunc_msg_create,
-                        ifunc_msg_send_nbix, poll_ring, register_ifunc)
+from repro.core import Context, ifunc_msg_create, register_ifunc
+from repro.transport import Dispatcher, ProgressEngine, RdmaFabric
 
 libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
 
@@ -24,46 +26,50 @@ libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
 stage = pathlib.Path(tempfile.mkdtemp())
 shutil.copy(libdir / "rle_insert.py", stage / "rle_insert.py")
 
-ingest = Context("ingest", lib_dir=stage)
 storage = Context("storage", lib_dir=stage, link_mode="remote")
-region = storage.nic.mem_map(1 << 20)
-ring = RingBuffer(region, 8 << 10)
-ep = ingest.nic.connect(storage.nic)
-
 db = {"db": []}
 records = [bytes([i % 7]) * 400 for i in range(64)]
 
-h = register_ifunc(ingest, "rle_insert")
+
+def sender(name: str) -> Dispatcher:
+    """A fresh ingest node: its own context, dispatcher, and ring into the
+    storage target (batched flushing via the progress engine)."""
+    d = Dispatcher(Context(name, lib_dir=stage),
+                   ProgressEngine(flush_threshold=4))
+    d.add_peer("storage", RdmaFabric(), storage, n_slots=8,
+               slot_size=8 << 10, target_args=db)
+    return d
+
+
+ingest = sender("ingest")
+h = register_ifunc(ingest.src_ctx, "rle_insert")
 t0 = time.time()
 for r in records[:32]:
-    m = ifunc_msg_create(h, r)
-    ifunc_msg_send_nbix(ep, m, ring.slot_addr(ring.tail), region.rkey)
-    ring.tail += 1
-    while poll_ring(storage, ring, db) != Status.OK:
-        pass
+    while not ingest.send("storage", ifunc_msg_create(h, r)):
+        ingest.drain()                  # ring full -> storage catches up
+ingest.drain()
 v1_links = storage.stats["links"]
 print(f"v1 codec: {len(db['db'])} records ingested, "
       f"{storage.stats['executed']} executions, {v1_links} link event(s)")
 
-# --- hot upgrade: v2 codec doubles-checks integrity (new code, same name) ---
+# --- hot upgrade: v2 codec double-checks integrity (new code, same name) ----
 v2 = (stage / "rle_insert.py").read_text().replace(
     'target_args["db"].append(record)',
     'target_args["db"].append(record)\n    target_args["v2_count"] = '
     'target_args.get("v2_count", 0) + 1')
 (stage / "rle_insert.py").write_text(v2)
-ingest_v2 = Context("ingest2", lib_dir=stage)
-ep2 = ingest_v2.nic.connect(storage.nic)
-h2 = register_ifunc(ingest_v2, "rle_insert")
+ingest_v2 = sender("ingest2")
+h2 = register_ifunc(ingest_v2.src_ctx, "rle_insert")
 for r in records[32:]:
-    m = ifunc_msg_create(h2, r)
-    ifunc_msg_send_nbix(ep2, m, ring.slot_addr(ring.tail), region.rkey)
-    ring.tail += 1
-    while poll_ring(storage, ring, db) != Status.OK:
-        pass
+    while not ingest_v2.send("storage", ifunc_msg_create(h2, r)):
+        ingest_v2.drain()
+ingest_v2.drain()
 
 assert db["db"] == records
 assert db.get("v2_count") == 32
+s = ingest_v2.per_peer_stats()["storage"]
 print(f"v2 codec hot-swapped under the same name: {db['v2_count']} records via v2, "
       f"{storage.stats['links'] - v1_links} new link event(s), "
-      f"{time.time()-t0:.3f}s total, storage never restarted")
+      f"{time.time()-t0:.3f}s total, storage never restarted "
+      f"(v2 ring: sent={s['sent']} backpressure={s['backpressure']})")
 shutil.rmtree(stage)

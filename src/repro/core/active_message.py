@@ -82,8 +82,11 @@ class AmEndpoint:
     """Source-side endpoint to a remote AmContext."""
 
     def __init__(self, src: AmContext, dst: AmContext):
+        from repro.transport.fabric import endpoint_channel
+
         self.src, self.dst = src, dst
         self.ep = src.nic.connect(dst.nic)
+        self._chan = endpoint_channel(self.ep)   # transport raw channel
 
     def send(self, am_id: int, payload: bytes) -> None:
         ring = self.dst._ring
@@ -91,7 +94,7 @@ class AmEndpoint:
         rkey = ring.region.rkey
         if len(payload) <= self.dst.rndv_threshold:
             msg = struct.pack("<IQI", am_id, len(payload), 0) + payload
-            self.ep.put_nbi(msg, addr, rkey)
+            self._chan.put_raw(msg, addr, rkey)
         else:
             # rendezvous: expose payload at source; send a descriptor
             seq = self.dst._rndv_seq = self.dst._rndv_seq + 1
@@ -100,8 +103,8 @@ class AmEndpoint:
             back_ep = self.dst.nic.connect(self.src.nic)
             self.dst._rndv_src[seq] = (back_ep, region)
             msg = struct.pack("<IQIQ", am_id, len(payload), 1, seq)
-            self.ep.put_nbi(msg, addr, rkey)
+            self._chan.put_raw(msg, addr, rkey)
         ring.tail += 1
 
     def flush(self) -> None:
-        self.ep.flush()
+        self._chan.flush()

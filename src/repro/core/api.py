@@ -132,9 +132,24 @@ def ifunc_msg_free(msg: IfuncMsg) -> None:
     msg.frame = bytearray()
 
 
-def ifunc_msg_send_nbix(ep: R.Endpoint, msg: IfuncMsg, remote_addr: int,
-                        rkey: int, **kw) -> Status:
-    ep.put_nbi(msg.frame, remote_addr, rkey, **kw)
+def ifunc_msg_send_nbix(ep, msg: IfuncMsg, remote_addr: int | None = None,
+                        rkey: int | None = None, **kw) -> Status:
+    """Non-blocking send.  Two forms:
+
+    * legacy: ``ep`` is an ``rdma.Endpoint`` and ``remote_addr``/``rkey``
+      address the target region — routed through the transport layer's raw
+      RDMA channel (no direct ``put_nbi`` here);
+    * fabric: ``ep`` is a ``transport.Channel`` and ``remote_addr`` is the
+      ring slot index (rkey unused).
+
+    New code should prefer ``transport.Dispatcher.send``.
+    """
+    from repro.transport import fabric as X
+
+    if isinstance(ep, X.Channel):
+        ep.put(msg.frame, 0 if remote_addr is None else remote_addr, **kw)
+        return Status.OK
+    X.endpoint_channel(ep).put_raw(msg.frame, remote_addr, rkey, **kw)
     return Status.OK
 
 
@@ -179,6 +194,9 @@ def _link(ctx: Context, hdr: F.FrameHeader, code: bytes):
             out = K.uvm_execute(_prog, tiles, ext)
             if isinstance(target_args, dict):
                 target_args["result"] = out
+                # multi-message collection: same contract as the device
+                # fabric's sweep (results accumulate per message)
+                target_args.setdefault("results", []).append(out)
             return out
         return run_uvm
     raise PolicyViolation(f"unsupported code kind {hdr.code_kind}")
@@ -228,8 +246,12 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
 
 
 def poll_ring(ctx: Context, ring: R.RingBuffer, target_args) -> Status:
-    """Consume the next ring slot; advances head on OK/REJECTED."""
-    st = poll_ifunc(ctx, ring.slot_view(ring.head), None, target_args)
-    if st in (Status.OK, Status.REJECTED):
-        ring.head += 1
-    return st
+    """DEPRECATED single-slot poll; consume the next ring slot (head
+    advances on OK/REJECTED).  Kept as a shim over the transport layer's
+    mailbox sweep — new code should attach rings to a
+    ``transport.Dispatcher`` (fair multi-peer polling, credits) or call
+    ``transport.ring_mailbox(ring).sweep(...)`` directly."""
+    from repro.transport.fabric import ring_mailbox
+
+    sts = ring_mailbox(ring).sweep(ctx, target_args, budget=1)
+    return sts[0] if sts else Status.NO_MESSAGE

@@ -26,7 +26,7 @@ from repro.core.codegen import UvmProgram
 from repro.kernels.ifunc_vm import ifunc_vm
 from repro.kernels.ring_poll import BAD, EMPTY, HDR_WORDS, INFLIGHT, MAGIC, READY, TRAILER
 from repro.kernels.ring_poll import ring_poll
-from repro.models.moe import shard_map  # version-shimmed shard_map
+from repro.parallel.sharding import shard_map  # version-shimmed shard_map
 
 
 def pack_word_frame(payload_f32: np.ndarray, slot_words: int, kind: int = 3,
@@ -52,16 +52,20 @@ def empty_mailbox(n_shards: int, n_slots: int, slot_words: int) -> jnp.ndarray:
 def make_deposit(mesh, axis: str):
     """Build ``deposit(mailbox, outgoing, shift)``: every shard one-sided
     'puts' its outgoing slot-frames into the ring buffer of the shard
-    ``shift`` hops along ``axis`` (collective_permute == the ICI RDMA put)."""
+    ``shift`` hops along ``axis`` (collective_permute == the ICI RDMA put).
+
+    Deposit is slot-masked like a real one-sided put: only slots the sender
+    actually wrote (magic word != 0) land; everything else in the target
+    ring — including frames from an earlier deposit not yet swept — is
+    left untouched."""
     n = mesh.shape[axis]
 
     def deposit(mailbox, outgoing, shift: int):
         def f(mb, out):
             perm = [(i, (i + shift) % n) for i in range(n)]
             arrived = jax.lax.ppermute(out, axis, perm)
-            # write into the first free slots (here: slots [0, k) of the ring)
-            k = arrived.shape[1]
-            return jax.lax.dynamic_update_slice(mb, arrived, (0, 0, 0))
+            written = arrived[:, :, :1] != 0          # per-slot magic present
+            return jnp.where(written, arrived, mb)
         return shard_map(f, mesh, in_specs=(P(axis, None, None), P(axis, None, None)),
                          out_specs=P(axis, None, None))(mailbox, outgoing)
 
@@ -89,7 +93,10 @@ def make_sweep(mesh, axis: str, prog: UvmProgram, n_tiles: int, tile: int = 128,
             out = out.reshape(mb2.shape[0], n_tiles, tile, tile)
             ready = (status == READY)
             out = out * ready[:, None, None, None].astype(out.dtype)
-            cleared = jnp.where(ready[:, None], jnp.zeros_like(mb2), mb2)
+            # READY slots are consumed; BAD (rejected) slots are cleared too
+            # so a corrupt frame is reported once, not on every later sweep.
+            done = ready | (status == BAD)
+            cleared = jnp.where(done[:, None], jnp.zeros_like(mb2), mb2)
             return status[None], out[None], cleared[None]
         return shard_map(
             f, mesh,

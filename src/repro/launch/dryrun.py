@@ -193,8 +193,10 @@ def run_cell(arch: str, shape: str, mesh_kind: str, policy: str = "baseline",
         t0 = time.time()
         compiled = lowered.compile()
         t_compile = time.time() - t0
+    from repro.compat import xla_cost_analysis
+
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     rec = {
         "cell": cell, "status": "ok", "arch": arch, "shape": shape,
         "mesh": mesh_kind, "policy": policy,

@@ -4,22 +4,24 @@
 this module never touches jax device state.  The dry-run launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
 import to get placeholder devices; smoke tests and benches see 1 device.
+Mesh creation goes through the version shim in ``parallel/sharding.py``
+(``axis_types`` support varies across jax releases).
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.parallel.sharding import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh on whatever devices exist (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))

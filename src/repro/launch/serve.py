@@ -1,9 +1,12 @@
-"""Serving driver: continuous batching over prefill + decode steps.
+"""Serving driver: continuous batching over prefill + decode steps, fed
+through the ifunc transport layer.
 
-A minimal production loop: requests enter a queue, get prefilled into a
-shared ring of cache slots, and a single compiled decode step advances every
-active sequence one token per tick.  Works on any mesh (pass
-``--mesh host`` locally; the production meshes are exercised through
+A minimal production loop: requests arrive as *ifunc messages* (the
+``srv_enqueue`` verb — codec ships with the frame) through a
+``transport.Dispatcher`` peer ring with credit-based flow control, get
+prefilled into a shared ring of cache slots, and a single compiled decode
+step advances every active sequence one token per tick.  Works on any mesh
+(pass ``--mesh host`` locally; the production meshes are exercised through
 launch/dryrun.py).
 
     PYTHONPATH=src python -m repro.launch.serve --steps 8
@@ -12,6 +15,8 @@ launch/dryrun.py).
 from __future__ import annotations
 
 import argparse
+import os
+import pathlib
 import time
 from dataclasses import dataclass, field
 
@@ -98,29 +103,82 @@ class Server:
         return emitted
 
 
+class IfuncFrontend:
+    """Request ingestion over the transport layer: a frontend dispatcher
+    sends ``srv_enqueue`` ifuncs into the server's mailbox ring; the server
+    sweeps the ring between ticks.  Ring credits are the admission-control
+    backpressure — a frontend outrunning the server sees ``submit`` return
+    False instead of overwriting unconsumed requests."""
+
+    def __init__(self, server_ctx, n_slots: int = 8, slot_size: int = 8 << 10):
+        from repro.core import Context, ifunc_msg_create, register_ifunc
+        from repro.transport import Dispatcher, ProgressEngine, RdmaFabric
+
+        self.ctx = Context("frontend")
+        self.inbox: dict = {"queue": []}
+        self.dispatcher = Dispatcher(self.ctx, ProgressEngine(flush_threshold=4))
+        self.dispatcher.add_peer("server", RdmaFabric(), server_ctx,
+                                 n_slots=n_slots, slot_size=slot_size,
+                                 target_args=self.inbox)
+        self._handle = register_ifunc(self.ctx, "srv_enqueue")
+        self._create = ifunc_msg_create
+
+    def submit(self, req: Request) -> bool:
+        msg = self._create(self._handle, {"rid": req.rid, "max_new": req.max_new,
+                                          "prompt": req.prompt})
+        return self.dispatcher.send("server", msg)
+
+    def server_poll(self, max_msgs: int = 16) -> list[Request]:
+        """Server side: flush in-flight frames, drain the mailbox through
+        the dispatcher's poll loop, return newly arrived requests."""
+        self.dispatcher.flush()
+        self.dispatcher.poll(budget=max_msgs)
+        out = [Request(d["rid"], np.asarray(d["prompt"], np.int32), d["max_new"])
+               for d in self.inbox["queue"]]
+        self.inbox["queue"] = []
+        return out
+
+
 def main():
+    from repro.core import Context
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache", type=int, default=64)
     args = ap.parse_args()
+    os.environ.setdefault(
+        "REPRO_IFUNC_LIB_DIR",
+        str(pathlib.Path(__file__).resolve().parents[3] / "ifunc_libs"))
     cfg = TINY
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     srv = Server(cfg, params, args.slots, args.cache)
+    server_ctx = Context("server")
+    fe = IfuncFrontend(server_ctx)
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32),
                     max_new=args.steps) for i in range(args.slots + 2)]
-    pending = list(reqs)
+    unsubmitted = list(reqs)
+    done: dict[int, Request] = {}
+    pending: list[Request] = []
     t0 = time.time()
     total = 0
-    while pending or srv.active:
+    while unsubmitted or pending or srv.active:
+        while unsubmitted and fe.submit(unsubmitted[0]):   # credits permitting
+            unsubmitted.pop(0)
+        pending.extend(fe.server_poll())
         while pending and srv.admit(pending[0]):
-            pending.pop(0)
+            req = pending.pop(0)
+            done[req.rid] = req
         total += srv.tick()
     dt = time.time() - t0
+    stats = fe.dispatcher.per_peer_stats()["server"]
     print(f"served {len(reqs)} requests, {total} decode tokens in {dt:.2f}s "
-          f"({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots})")
-    for r in reqs[:2]:
+          f"({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots}); "
+          f"ingest: sent={stats['sent']} delivered={stats['delivered']} "
+          f"backpressure={stats['backpressure']} via {stats['bytes']}B of ifunc frames")
+    for rid in sorted(done)[:2]:
+        r = done[rid]
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out[:args.steps]}")
 
 

@@ -28,19 +28,9 @@ import jax.numpy as jnp
 from repro.models.layers import Spec
 from repro.parallel.sharding import current_mesh
 
-# shard_map moved to jax.shard_map in recent versions
-try:  # pragma: no cover - version shim
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                          check_vma=False)
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map_old
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                              check_rep=False)
+# version-shimmed shard_map lives with the other jax shims; re-exported
+# here for the existing ``from repro.models.moe import shard_map`` callers
+from repro.parallel.sharding import shard_map  # noqa: F401
 
 from jax.sharding import PartitionSpec as P
 

@@ -37,10 +37,9 @@ def dequantize(q, scale):
     return q.astype(jnp.float32) * scale
 
 
-def _ring_mean_int8(q, scale, axis: str):
-    """Mean over ``axis`` moving int8 (+ one f32 scale) per hop:
-    reduce-scatter int8 chunks, local dequant-sum, all-gather int8."""
-    n = jax.lax.axis_size(axis)
+def _ring_mean_int8(q, scale, axis: str, n: int):
+    """Mean over ``axis`` (static size ``n``) moving int8 (+ one f32 scale)
+    per hop: reduce-scatter int8 chunks, local dequant-sum, all-gather int8."""
     flat = q.reshape(n, -1)                                   # chunk per peer
     # phase 1: all_to_all = reduce-scatter wire pattern (int8 on the wire)
     chunks = jax.lax.all_to_all(flat[:, None], axis, split_axis=0, concat_axis=1)
@@ -62,14 +61,16 @@ def compressed_psum_mean(grads, err_tree, mesh, axis: str = "pod"):
     def one(g, err):
         def f(gl, el):
             ql, sl, ne = quantize_ef(gl, el)
-            pad = (-ql.size) % jax.lax.axis_size(axis)
+            pad = (-ql.size) % mesh.shape[axis]  # axis size is static
             qf = jnp.pad(ql.reshape(-1), (0, pad))
-            mean = _ring_mean_int8(qf, sl, axis)
+            mean = _ring_mean_int8(qf, sl, axis, mesh.shape[axis])
             mean = mean[:ql.size].reshape(gl.shape)
             return mean, ne
 
-        fn = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-                           axis_names={axis}, check_vma=False)
+        from repro.parallel.sharding import shard_map  # version-shimmed shard_map
+
+        fn = shard_map(f, mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+                       axis_names={axis})
         return fn(g, err)
 
     flat_g, td = jax.tree.flatten(grads)

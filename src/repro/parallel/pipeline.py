@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.moe import shard_map  # version shim
+from repro.parallel.sharding import shard_map  # version shim
 
 
 def pipeline_apply(stage_fn, stage_params, x_mb, mesh, axis: str = "pod"):

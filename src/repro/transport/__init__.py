@@ -1,0 +1,26 @@
+"""Unified ifunc transport layer.
+
+Layer diagram (see ARCHITECTURE.md):
+
+    frame codec (core/frame.py)
+        |                             the bytes on the wire
+    Fabric / Channel / Mailbox        pluggable backends: rdma | device | loopback
+        |
+    ProgressEngine                    batched put_nbi, in-flight windows, CQ
+        |
+    Dispatcher                        N peers x M rings, credits, fair polling
+        |
+    applications                      core/api.py, controller, serving, examples
+
+``DeviceMeshFabric`` is imported lazily (jax): use
+``from repro.transport.device_fabric import DeviceMeshFabric``.
+"""
+
+from repro.transport.dispatcher import (  # noqa: F401
+    DEFAULT_N_SLOTS, DEFAULT_SLOT_SIZE, Dispatcher, Peer, RingState,
+)
+from repro.transport.fabric import (  # noqa: F401
+    Channel, Fabric, LoopbackChannel, LoopbackFabric, LoopbackMailbox,
+    Mailbox, RdmaChannel, RdmaFabric, RdmaMailbox, TransportError,
+)
+from repro.transport.progress import Completion, ProgressEngine, TxHandle  # noqa: F401

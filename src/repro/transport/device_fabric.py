@@ -1,0 +1,220 @@
+"""Device-mesh fabric: the on-device mailbox/ppermute ifunc path behind the
+same Fabric/Channel/Mailbox contract as the host backends.
+
+The backend wraps ``core/device_mailbox.py``: a mailbox is a ring of
+word-frames in (emulated) device memory per mesh shard; a put *transcodes*
+the wire byte-frame (header + μVM code + f32 payload + trailer) into the
+device word-frame layout — the NIC-offload moment — and stages it; flush
+deposits every staged generation over the ICI via ``ppermute`` (the
+RDMA-put analogue); the sweep validates all slots in one compiled
+``ring_poll`` + ``ifunc_vm`` pass with the μVM program bound at
+mailbox-open time (the device-side link cache).
+
+Visibility is generation-batched: frames become consumable only after the
+depositing flush, which is exactly the in-flight window the ProgressEngine
+models on the host fabrics.  Deposits are slot-masked (only written slots
+land), so flushing a new generation never clobbers deposited frames a
+sweep has not consumed yet.
+
+Kept in its own module so ``repro.transport`` imports without jax.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import frame as F
+from repro.transport.fabric import Channel, Fabric, Mailbox, TransportError
+
+
+class DeviceMeshMailbox(Mailbox):
+    """Ring of word-frame slots on every shard of a 1-D device mesh."""
+
+    def __init__(self, fabric: "DeviceMeshFabric", mesh, axis: str, prog,
+                 externals, n_slots: int, n_tiles: int, tile: int = 128,
+                 *, interpret: bool = True, shift: int = 0):
+        super().__init__()
+        from repro.core.device_mailbox import empty_mailbox, make_deposit, make_sweep
+        from repro.kernels.ring_poll import HDR_WORDS
+
+        self.fabric = fabric
+        self.mesh, self.axis, self.shift = mesh, axis, shift
+        self.n_shards = mesh.shape[axis]
+        self.n_slots_per_shard = n_slots
+        self.n_slots = n_slots * self.n_shards       # dispatcher-visible ring
+        self.n_tiles, self.tile = n_tiles, tile
+        self.body_words = n_tiles * tile * tile
+        self.slot_words = HDR_WORDS + self.body_words + 1
+        self.slot_size = self.slot_words * 4         # byte-equivalent capacity
+        self.prog = prog
+        self.externals = externals                   # [n_shards, n_ext, T, T]
+        self._mb = empty_mailbox(self.n_shards, n_slots, self.slot_words)
+        self._deposit = make_deposit(mesh, axis)
+        self._sweep = make_sweep(mesh, axis, prog, n_tiles, tile,
+                                 interpret=interpret)
+        self._staged: np.ndarray | None = None
+        self._staged_count = 0
+        self._deposited = 0                          # frames awaiting sweep
+        self.results: list[np.ndarray] = []          # READY payload outputs
+
+    # source-side staging (called by DeviceMeshChannel)
+
+    def _slot_coords(self, slot: int) -> tuple[int, int]:
+        """Dispatcher ring index -> (shard, per-shard slot) interleaving."""
+        return slot % self.n_shards, (slot // self.n_shards) % self.n_slots_per_shard
+
+    def _stage(self, word_frame: np.ndarray, slot: int) -> None:
+        if self._staged is None:
+            self._staged = np.zeros(
+                (self.n_shards, self.n_slots_per_shard, self.slot_words),
+                np.uint32)
+        shard, idx = self._slot_coords(slot)
+        self._staged[shard, idx] = word_frame
+        self._staged_count += 1
+
+    def _publish(self) -> None:
+        """Deposit the staged generation over the ICI (collective_permute)."""
+        if self._staged is None:
+            return
+        import jax.numpy as jnp
+
+        self._mb = self._deposit(self._mb, jnp.asarray(self._staged),
+                                 shift=self.shift)
+        self._deposited += self._staged_count
+        self._staged = None
+        self._staged_count = 0
+
+    # target side
+
+    def slot_view(self, i: int):
+        raise TransportError("device mailbox slots live in device memory; "
+                             "use sweep()")
+
+    def sweep(self, ctx, target_args, budget: int | None = None) -> list:
+        """One compiled validate+execute pass over every deposited slot.
+        ``budget`` is ignored: the sweep is a single device program, so a
+        device lane may yield more than one message per dispatcher poll
+        round (its yield still counts against the caller's total budget).
+        READY results land in ``self.results`` and
+        ``target_args['results']``."""
+        from repro.core.api import Status
+        from repro.kernels.ring_poll import BAD, INFLIGHT, READY
+
+        if self._deposited == 0:
+            return []
+        status, out, cleared = self._sweep(self._mb, self.externals)
+        status = np.asarray(status)
+        out = np.asarray(out)
+        self._mb = cleared
+        statuses: list = []
+        for shard in range(status.shape[0]):
+            for slot in range(status.shape[1]):
+                st = int(status[shard, slot])
+                if st == READY:
+                    self.results.append(out[shard, slot])
+                    if isinstance(target_args, dict):
+                        target_args.setdefault("results", []).append(
+                            out[shard, slot])
+                    statuses.append(Status.OK)
+                elif st == BAD:
+                    statuses.append(Status.REJECTED)
+                elif st == INFLIGHT:
+                    statuses.append(Status.IN_PROGRESS)
+        consumed = sum(1 for s in statuses
+                       if s in (Status.OK, Status.REJECTED))
+        self.head += consumed
+        self.consumed += consumed
+        self._deposited = max(self._deposited - consumed, 0)
+        return statuses
+
+
+class DeviceMeshChannel(Channel):
+    def __init__(self, mailbox: DeviceMeshMailbox):
+        super().__init__()
+        self.mailbox = mailbox
+
+    def put(self, data, slot: int, *, deliver_bytes: int | None = None) -> None:
+        """Transcode a wire byte-frame into the device word-frame layout and
+        stage it.  ``deliver_bytes`` short of the full frame stages the
+        word-frame without its trailer word (the device-visible in-flight
+        state); flush completes trailers before depositing."""
+        from repro.core.device_mailbox import pack_word_frame
+
+        mb = self.mailbox
+        hdr = F.peek_header(data)
+        if hdr is None:
+            raise TransportError("device put of an empty frame")
+        if hdr.code_kind != F.CodeKind.UVM:
+            raise TransportError(
+                f"device mesh accepts UVM frames only, got {hdr.code_kind.name}")
+        _, payload = F.frame_sections(data, hdr)
+        tiles = np.frombuffer(payload, np.float32)
+        want = mb.body_words
+        if tiles.size != want:
+            raise TransportError(
+                f"device frame payload {tiles.size} words != bound {want} "
+                f"({mb.n_tiles} x {mb.tile}x{mb.tile} tiles)")
+        partial = deliver_bytes is not None and deliver_bytes < len(data)
+        name_hash = F.fletcher32(hdr.name.encode()) & 0xFFFFFFFF
+        wf = pack_word_frame(tiles, mb.slot_words, kind=int(hdr.code_kind),
+                             name_hash=name_hash, no_trailer=partial)
+        mb._stage(wf, slot)
+        if partial:
+            from repro.kernels.ring_poll import HDR_WORDS, TRAILER
+
+            self._pending_trailers = getattr(self, "_pending_trailers", [])
+            self._pending_trailers.append(
+                (slot, HDR_WORDS + tiles.size, TRAILER))
+            self.stats["partial"] += 1
+        self.stats["puts"] += 1
+        self.stats["bytes"] += len(data)
+
+    def flush(self) -> None:
+        mb = self.mailbox
+        for slot, word_idx, trailer in getattr(self, "_pending_trailers", []):
+            shard, idx = mb._slot_coords(slot)
+            if mb._staged is not None:
+                mb._staged[shard, idx, word_idx] = trailer
+        self._pending_trailers = []
+        mb._publish()
+        self.stats["flushes"] += 1
+
+
+class DeviceMeshFabric(Fabric):
+    """TPU-tier backend: open_mailbox binds a μVM program + external table
+    (the device GOT) to a compiled deposit/sweep pair on a 1-D mesh axis."""
+
+    kind = "device"
+
+    def __init__(self, mesh, axis: str = "model", *, interpret: bool = True,
+                 shift: int = 0):
+        self.mesh, self.axis = mesh, axis
+        self.interpret, self.shift = interpret, shift
+
+    def open_mailbox(self, target_ctx, n_slots: int, slot_size: int,
+                     *, prog=None, externals=None, n_tiles: int = 1,
+                     tile: int = 128) -> DeviceMeshMailbox:
+        """``target_ctx`` is unused (the mesh is the target); ``slot_size``
+        must cover the bound word-frame.  ``prog``/``externals`` bind the
+        μVM program — required (the device links at mailbox-open time)."""
+        if prog is None:
+            raise TransportError("DeviceMeshFabric.open_mailbox needs prog=")
+        import jax.numpy as jnp
+
+        n_shards = self.mesh.shape[self.axis]
+        if externals is None:
+            externals = jnp.zeros((n_shards, max(prog.n_ext, 1), tile, tile),
+                                  jnp.float32)
+        mb = DeviceMeshMailbox(self, self.mesh, self.axis, prog, externals,
+                               n_slots, n_tiles, tile,
+                               interpret=self.interpret, shift=self.shift)
+        if slot_size < mb.slot_size:
+            raise TransportError(
+                f"slot_size {slot_size} < device word-frame {mb.slot_size}B")
+        return mb
+
+    def connect(self, src_ctx, mailbox: DeviceMeshMailbox) -> DeviceMeshChannel:
+        return DeviceMeshChannel(mailbox)
+
+
+__all__ = ["DeviceMeshChannel", "DeviceMeshFabric", "DeviceMeshMailbox"]

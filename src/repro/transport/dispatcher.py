@@ -1,0 +1,201 @@
+"""Multi-peer ifunc dispatcher: N peers x M rings, credit-based flow
+control, per-peer backpressure, and a fairness-aware poll loop.
+
+This replaces the single-slot ``poll_ring`` pattern: instead of one source
+spinning on one ring, a :class:`Dispatcher` owns any number of
+:class:`Peer` s — each a (fabric, channel(s), mailbox(s), target context)
+bundle on *any* backend (RDMA host, device mesh, loopback/CSD) — and
+
+* ``send`` consumes a credit (one free ring slot) or reports backpressure
+  instead of silently overwriting unconsumed frames;
+* credits return as the target's sweep advances its mailbox ``consumed``
+  counter (the credit-return counter a real target writes back);
+* ``poll`` drains mailboxes deficit-round-robin, starting one past the
+  ring served first last time, so a chatty peer cannot starve the rest;
+* all sends go through a shared :class:`ProgressEngine`, so batching,
+  in-flight windows, and completions are uniform across fabrics.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.transport.fabric import Fabric, TransportError
+from repro.transport.progress import ProgressEngine
+
+DEFAULT_SLOT_SIZE = 64 << 10
+DEFAULT_N_SLOTS = 8
+
+
+@dataclass
+class RingState:
+    """One (mailbox, channel) lane of a peer."""
+
+    mailbox: object
+    channel: object
+    tail: int = 0            # source-side produce index
+
+    @property
+    def credits(self) -> int:
+        return self.mailbox.n_slots - (self.tail - self.mailbox.consumed)
+
+
+@dataclass
+class Peer:
+    name: str
+    fabric: Fabric
+    target_ctx: object
+    target_args: dict
+    rings: list[RingState] = field(default_factory=list)
+    stats: dict = field(default_factory=lambda: {
+        "sent": 0, "bytes": 0, "delivered": 0, "rejected": 0,
+        "backpressure": 0, "inflight_polls": 0})
+
+    @property
+    def credits(self) -> int:
+        return sum(r.credits for r in self.rings)
+
+    def summary(self) -> str:
+        s = self.stats
+        return (f"{self.name:<12s} fabric={self.fabric.kind:<9s} "
+                f"sent={s['sent']:<4d} delivered={s['delivered']:<4d} "
+                f"rejected={s['rejected']:<3d} backpressure={s['backpressure']:<3d} "
+                f"credits={self.credits}")
+
+
+class Dispatcher:
+    """One source fanning ifunc frames out to heterogeneous targets."""
+
+    def __init__(self, src_ctx=None, engine: ProgressEngine | None = None):
+        self.src_ctx = src_ctx
+        self.engine = engine if engine is not None else ProgressEngine()
+        self.peers: dict[str, Peer] = {}
+        self._rr = 0             # fairness cursor over (peer, ring) lanes
+        self.stats = {"sent": 0, "polled": 0, "poll_rounds": 0}
+
+    # -- topology -----------------------------------------------------------
+
+    def add_peer(self, name: str, fabric: Fabric, target_ctx, *,
+                 n_slots: int = DEFAULT_N_SLOTS,
+                 slot_size: int = DEFAULT_SLOT_SIZE,
+                 rings: int = 1, target_args: dict | None = None,
+                 **mailbox_kw) -> Peer:
+        """``mailbox_kw`` passes backend-specific binds through to
+        ``fabric.open_mailbox`` (e.g. ``prog=``/``externals=`` on the
+        device-mesh fabric)."""
+        if name in self.peers:
+            raise TransportError(f"peer {name!r} already attached")
+        peer = Peer(name, fabric, target_ctx,
+                    target_args if target_args is not None else {})
+        for _ in range(rings):
+            mb = fabric.open_mailbox(target_ctx, n_slots, slot_size,
+                                     **mailbox_kw)
+            ch = fabric.connect(self.src_ctx, mb)
+            peer.rings.append(RingState(mb, ch))
+        self.peers[name] = peer
+        return peer
+
+    def remove_peer(self, name: str) -> None:
+        self.peers.pop(name, None)
+
+    # -- source side --------------------------------------------------------
+
+    def send(self, peer_name: str, msg, *, ring: int | None = None,
+             on_complete=None) -> bool:
+        """Post one ifunc message to a peer.  Returns False (and counts a
+        backpressure event) when every eligible ring is out of credits."""
+        peer = self.peers[peer_name]
+        frame = msg.frame if hasattr(msg, "frame") else msg
+        lanes = peer.rings if ring is None else [peer.rings[ring]]
+        lane = max(lanes, key=lambda r: r.credits)
+        if lane.credits <= 0:
+            peer.stats["backpressure"] += 1
+            return False
+        self.engine.post(lane.channel, frame, lane.tail, peer=peer.name,
+                         on_complete=on_complete)
+        lane.tail += 1
+        peer.stats["sent"] += 1
+        peer.stats["bytes"] += len(frame)
+        self.stats["sent"] += 1
+        return True
+
+    def broadcast(self, make_msg) -> int:
+        """``make_msg(peer) -> msg`` for every peer; returns #accepted."""
+        return sum(bool(self.send(p, make_msg(peer)))
+                   for p, peer in self.peers.items())
+
+    def flush(self) -> int:
+        """Publish all in-flight puts (completes trailers -> frames become
+        consumable at the targets)."""
+        return self.engine.flush()
+
+    # -- target side: fairness-aware poll loop ------------------------------
+
+    def _lanes(self) -> list[tuple[Peer, RingState]]:
+        return [(p, r) for p in self.peers.values() for r in p.rings]
+
+    def poll(self, budget: int | None = None) -> int:
+        """Drain up to ``budget`` messages total across all peers' rings,
+        deficit-round-robin.  Each round visits every lane once, consuming
+        at most one message per lane per round (so no ring monopolizes the
+        poller), starting one lane past last round's first server.  A
+        device-mesh lane is the one exception: its sweep is a single
+        compiled pass and may yield several messages at once — they all
+        count against ``budget``, so the cap can overshoot by one sweep."""
+        from repro.core.api import Status
+
+        lanes = self._lanes()
+        if not lanes:
+            return 0
+        done = 0
+        self.stats["poll_rounds"] += 1
+        progressed = True
+        while progressed and (budget is None or done < budget):
+            progressed = False
+            start = self._rr % len(lanes)
+            for k in range(len(lanes)):
+                peer, lane = lanes[(start + k) % len(lanes)]
+                if budget is not None and done >= budget:
+                    break
+                sts = lane.mailbox.sweep(peer.target_ctx, peer.target_args,
+                                         budget=1)
+                for st in sts:
+                    if st == Status.OK:
+                        peer.stats["delivered"] += 1
+                        done += 1
+                        progressed = True
+                    elif st == Status.REJECTED:
+                        peer.stats["rejected"] += 1
+                        done += 1
+                        progressed = True
+                    elif st == Status.IN_PROGRESS:
+                        peer.stats["inflight_polls"] += 1
+            self._rr += 1
+        self.stats["polled"] += done
+        return done
+
+    def drain(self, max_rounds: int = 64) -> int:
+        """flush + poll until quiescent: no outstanding puts, no consumable
+        frames.  Returns total messages delivered/rejected."""
+        total = 0
+        for _ in range(max_rounds):
+            self.engine.progress()
+            n = self.poll()
+            total += n
+            if n == 0 and self.engine.outstanding() == 0:
+                break
+        return total
+
+    # -- reporting ----------------------------------------------------------
+
+    def per_peer_stats(self) -> dict[str, dict]:
+        return {name: dict(p.stats, credits=p.credits)
+                for name, p in self.peers.items()}
+
+    def print_stats(self) -> None:
+        for p in self.peers.values():
+            print(" ", p.summary())
+
+
+__all__ = ["DEFAULT_N_SLOTS", "DEFAULT_SLOT_SIZE", "Dispatcher", "Peer",
+           "RingState"]

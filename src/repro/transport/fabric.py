@@ -1,0 +1,305 @@
+"""Pluggable fabric layer: the one transport contract both ifunc universes
+(host RDMA emulation and the on-device mailbox/ppermute path) sit on.
+
+Three roles, mirroring a thin UCX:
+
+* :class:`Mailbox`  — a target-owned ring of fixed-size frame slots.  The
+  host fabrics expose byte slots polled by ``poll_ifunc``; the device
+  fabric exposes word-frame slots swept by the ``ring_poll`` Pallas kernel.
+* :class:`Channel`  — a source-side one-sided path into one mailbox.  A
+  ``put`` is *non-blocking*: bytes may be partially visible until
+  ``flush`` (the real-RDMA in-flight window the frame trailer exists for).
+* :class:`Fabric`   — the factory tying the two together for one backend.
+
+Backends here: :class:`RdmaFabric` (wraps ``core/rdma.py``) and
+:class:`LoopbackFabric` (zero-copy in-process, for tests/benchmarks and
+"CSD-attached" targets).  :class:`DeviceMeshFabric` lives in
+``device_fabric.py`` so importing the transport core never drags in jax.
+
+Invariant enforced by this package: nothing outside ``repro.transport``
+calls ``Endpoint.put_nbi`` — higher layers (``core/api.py``, the
+dispatcher, the pod controller, serving) speak Channel/Mailbox only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import rdma as R
+
+
+class TransportError(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# contracts
+
+
+class Mailbox:
+    """A target-owned ring of ``n_slots`` frame slots of ``slot_size`` bytes.
+
+    ``head`` is the consume index (advanced by the poller); the produce index
+    lives with the source-side Channel.  ``consumed`` is the monotone count
+    of drained slots — the source reads it to compute returned credits (the
+    emulation analogue of a credit-return counter the target writes back).
+    """
+
+    fabric: "Fabric"
+    n_slots: int
+    slot_size: int
+
+    def __init__(self):
+        self.head = 0
+        self.consumed = 0
+
+    def slot_view(self, i: int) -> memoryview:
+        raise NotImplementedError
+
+    def sweep(self, ctx, target_args, budget: int | None = None) -> list:
+        """Drain up to ``budget`` slots through ``poll_ifunc``; returns the
+        list of per-slot Status values observed (OK/REJECTED advance head)."""
+        from repro.core import api as A
+
+        out = []
+        budget = self.n_slots if budget is None else budget
+        for _ in range(budget):
+            st = A.poll_ifunc(ctx, self.slot_view(self.head), None, target_args)
+            out.append(st)
+            if st in (A.Status.OK, A.Status.REJECTED):
+                self.head += 1
+                self.consumed += 1
+            else:
+                break
+        return out
+
+
+class Channel:
+    """Source-side one-sided path into one remote Mailbox."""
+
+    mailbox: Mailbox
+
+    def __init__(self):
+        self.stats = {"puts": 0, "bytes": 0, "flushes": 0, "partial": 0}
+
+    def put(self, data, slot: int, *, deliver_bytes: int | None = None) -> None:
+        """Non-blocking write of ``data`` into ring slot ``slot``.  With
+        ``deliver_bytes`` only a prefix is visible until :meth:`flush` —
+        the ProgressEngine uses this to model in-flight puts."""
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        raise NotImplementedError
+
+
+class Fabric:
+    """One transport backend: makes mailboxes on targets, channels to them."""
+
+    kind: str = "abstract"
+
+    def open_mailbox(self, target_ctx, n_slots: int, slot_size: int) -> Mailbox:
+        raise NotImplementedError
+
+    def connect(self, src_ctx, mailbox: Mailbox) -> Channel:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# RDMA fabric (wraps core/rdma.py)
+
+
+class RdmaMailbox(Mailbox):
+    """Composes the existing rdma.RingBuffer for all slot math."""
+
+    def __init__(self, fabric: "RdmaFabric", region: R.MemRegion, slot_size: int):
+        super().__init__()
+        self.fabric = fabric
+        self.region = region
+        self.ring = R.RingBuffer(region, slot_size)
+        self.slot_size = slot_size
+        self.n_slots = self.ring.n_slots
+
+    def slot_addr(self, i: int) -> int:
+        return self.ring.slot_addr(i)
+
+    def slot_view(self, i: int) -> memoryview:
+        return self.ring.slot_view(i)
+
+
+class RdmaChannel(Channel):
+    def __init__(self, ep: R.Endpoint, mailbox: RdmaMailbox):
+        super().__init__()
+        self.ep = ep
+        self.mailbox = mailbox
+
+    def put(self, data, slot: int, *, deliver_bytes: int | None = None) -> None:
+        if len(data) > self.mailbox.slot_size:
+            raise TransportError(
+                f"frame {len(data)}B exceeds slot {self.mailbox.slot_size}B")
+        self.ep.put_nbi(data, self.mailbox.slot_addr(slot),
+                        self.mailbox.region.rkey, deliver_bytes=deliver_bytes)
+        self.stats["puts"] += 1
+        self.stats["bytes"] += len(data)
+        if deliver_bytes is not None and deliver_bytes < len(data):
+            self.stats["partial"] += 1
+
+    def put_raw(self, data, remote_addr: int, rkey: int, *,
+                deliver_bytes: int | None = None) -> None:
+        """Address-directed put for legacy callers (``ifunc_msg_send_nbix``
+        with an explicit remote_addr/rkey, the AM baseline's eager slots)."""
+        self.ep.put_nbi(data, remote_addr, rkey, deliver_bytes=deliver_bytes)
+        self.stats["puts"] += 1
+        self.stats["bytes"] += len(data)
+
+    def flush(self) -> None:
+        self.ep.flush()
+        self.stats["flushes"] += 1
+
+
+class RdmaFabric(Fabric):
+    """Emulated-RDMA backend: mailboxes are ``mem_map``-ed regions, channels
+    are NIC endpoints; every inbound put is rkey/bounds-checked by the
+    'HCA' before any byte moves."""
+
+    kind = "rdma"
+
+    def open_mailbox(self, target_ctx, n_slots: int, slot_size: int) -> RdmaMailbox:
+        nic = target_ctx.nic if hasattr(target_ctx, "nic") else target_ctx
+        region = nic.mem_map(n_slots * slot_size)
+        return RdmaMailbox(self, region, slot_size)
+
+    def connect(self, src_ctx, mailbox: RdmaMailbox) -> RdmaChannel:
+        nic = src_ctx.nic if hasattr(src_ctx, "nic") else src_ctx
+        return RdmaChannel(nic.connect(mailbox.region.nic), mailbox)
+
+    @staticmethod
+    def channel_for_endpoint(ep: R.Endpoint) -> "RdmaChannel":
+        """Wrap a bare Endpoint for address-directed legacy sends (no ring)."""
+        ch = RdmaChannel.__new__(RdmaChannel)
+        Channel.__init__(ch)
+        ch.ep = ep
+        ch.mailbox = None
+        return ch
+
+
+# ---------------------------------------------------------------------------
+# Loopback fabric (zero-copy in-process; the "CSD" / test backend)
+
+
+@dataclass
+class _PendingLoopPut:
+    buf: bytearray
+    off: int
+    data: bytes
+    delivered: int
+
+
+class LoopbackMailbox(Mailbox):
+    def __init__(self, fabric: "LoopbackFabric", n_slots: int, slot_size: int):
+        super().__init__()
+        self.fabric = fabric
+        self.n_slots, self.slot_size = n_slots, slot_size
+        self.buf = bytearray(n_slots * slot_size)
+
+    def slot_view(self, i: int) -> memoryview:
+        off = (i % self.n_slots) * self.slot_size
+        return memoryview(self.buf)[off:off + self.slot_size]
+
+
+class LoopbackChannel(Channel):
+    def __init__(self, mailbox: LoopbackMailbox):
+        super().__init__()
+        self.mailbox = mailbox
+        self._pending: list[_PendingLoopPut] = []
+
+    def put(self, data, slot: int, *, deliver_bytes: int | None = None) -> None:
+        mb = self.mailbox
+        if len(data) > mb.slot_size:
+            raise TransportError(
+                f"frame {len(data)}B exceeds slot {mb.slot_size}B")
+        off = (slot % mb.n_slots) * mb.slot_size
+        data = bytes(data)
+        n = len(data) if deliver_bytes is None else min(deliver_bytes, len(data))
+        mb.buf[off:off + n] = data[:n]
+        if n < len(data):
+            self._pending.append(_PendingLoopPut(mb.buf, off, data, n))
+            self.stats["partial"] += 1
+        self.stats["puts"] += 1
+        self.stats["bytes"] += len(data)
+
+    def flush(self) -> None:
+        for p in self._pending:
+            p.buf[p.off + p.delivered:p.off + len(p.data)] = p.data[p.delivered:]
+        self._pending.clear()
+        self.stats["flushes"] += 1
+
+
+class LoopbackFabric(Fabric):
+    """In-process zero-copy backend: no NIC, no rkeys — the floor every
+    latency number should be compared against, and the stand-in for
+    bus-attached targets (CSDs) whose 'network' is a memory bus."""
+
+    kind = "loopback"
+
+    def open_mailbox(self, target_ctx, n_slots: int, slot_size: int) -> LoopbackMailbox:
+        return LoopbackMailbox(self, n_slots, slot_size)
+
+    def connect(self, src_ctx, mailbox: LoopbackMailbox) -> LoopbackChannel:
+        return LoopbackChannel(mailbox)
+
+
+class LegacyRingMailbox(Mailbox):
+    """Adapter: an existing ``rdma.RingBuffer`` viewed as a transport
+    Mailbox, so the deprecated ``poll_ring`` API drains through the same
+    sweep path as everything else.  Head state stays on the RingBuffer."""
+
+    def __init__(self, ring: R.RingBuffer):
+        Mailbox.__init__(self)
+        self.ring = ring
+        self.n_slots = ring.n_slots
+        self.slot_size = ring.slot_size
+
+    @property
+    def head(self) -> int:
+        return self.ring.head
+
+    @head.setter
+    def head(self, v: int) -> None:
+        # Mailbox.__init__ assigns head=0 before self.ring exists; swallow it.
+        if hasattr(self, "ring"):
+            self.ring.head = v
+
+    def slot_view(self, i: int) -> memoryview:
+        return self.ring.slot_view(i)
+
+
+def ring_mailbox(ring: R.RingBuffer) -> LegacyRingMailbox:
+    """Cached LegacyRingMailbox for a RingBuffer (keeps ``consumed`` stable
+    across calls so credit math works)."""
+    mb = getattr(ring, "_transport_mailbox", None)
+    if mb is None:
+        mb = LegacyRingMailbox(ring)
+        ring._transport_mailbox = mb
+    return mb
+
+
+def endpoint_channel(ep: R.Endpoint) -> RdmaChannel:
+    """Cached raw channel for a bare Endpoint (legacy address-directed
+    sends route through the transport layer via this)."""
+    ch = getattr(ep, "_transport_channel", None)
+    if ch is None:
+        ch = RdmaFabric.channel_for_endpoint(ep)
+        ep._transport_channel = ch
+    return ch
+
+
+def frame_fits(frame, mailbox: Mailbox) -> bool:
+    return len(frame) <= mailbox.slot_size
+
+
+__all__ = [
+    "Channel", "Fabric", "LegacyRingMailbox", "Mailbox", "TransportError",
+    "LoopbackChannel", "LoopbackFabric", "LoopbackMailbox",
+    "RdmaChannel", "RdmaFabric", "RdmaMailbox",
+    "endpoint_channel", "frame_fits", "ring_mailbox",
+]

@@ -1,0 +1,60 @@
+"""Graceful degradation when ``hypothesis`` is not installed.
+
+Property-based tests import through here::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+
+Strategy construction at module scope keeps working (any ``st.*`` /
+``hnp.*`` call returns an inert placeholder), and ``@given`` replaces the
+test body with a ``pytest.skip`` — so the suite always *collects*, the
+example-based tests in the same module still run, and the property tests
+show up as skipped instead of as collection errors.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+HAVE_HYPOTHESIS = False
+
+
+class _Anything:
+    """Inert stand-in for strategy objects/modules: every attribute is a
+    callable returning another _Anything, so module-level strategy
+    definitions evaluate without hypothesis."""
+
+    def __call__(self, *args, **kw):
+        return _Anything()
+
+    def __getattr__(self, name):
+        return _Anything()
+
+
+st = _Anything()
+hnp = _Anything()
+
+
+def given(*_args, **_kw):
+    def deco(fn):
+        # zero-arg replacement (no functools.wraps: pytest must not see the
+        # property parameters, or it goes hunting for fixtures)
+        def skipper():
+            pytest.skip("hypothesis not installed (property test)")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        skipper.__module__ = fn.__module__
+        return skipper
+    return deco
+
+
+def settings(*_args, **_kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def assume(_cond) -> bool:
+    return True

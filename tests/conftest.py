@@ -8,7 +8,8 @@ os.environ.setdefault("REPRO_IFUNC_LIB_DIR",
                       str(pathlib.Path(__file__).resolve().parents[1] / "ifunc_libs"))
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
-for p in (str(REPO / "src"), str(REPO)):
+# tests dir itself is on the path for the _hypothesis_stub fallback import
+for p in (str(REPO / "src"), str(REPO), str(REPO / "tests")):
     if p not in sys.path:
         sys.path.insert(0, p)
 

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - optional dep (see requirements.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import codegen as CG
 

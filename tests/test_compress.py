@@ -3,8 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+except ImportError:  # pragma: no cover - optional dep (see requirements.txt)
+    from _hypothesis_stub import given, hnp, settings, st
 
 from repro.parallel.compress import dequantize, quantize_ef
 
@@ -51,8 +54,9 @@ def test_compressed_mean_single_axis():
     from repro.parallel.compress import compressed_psum_mean
 
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.parallel.sharding import make_mesh
+
+    mesh = make_mesh((n,), ("pod",))
     g = {"w": jnp.asarray(np.random.default_rng(2).standard_normal((n, 8)).astype(np.float32))}
     e = {"w": jnp.zeros((n, 8), jnp.float32)}
     mean, new_e = compressed_psum_mean(g, e, mesh, axis="pod")

@@ -1,7 +1,10 @@
 """Frame format: round-trip, signals, rejection (property-based)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - optional dep (see requirements.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import frame as F
 

@@ -11,8 +11,7 @@ from repro.parallel import sharding as SH
 @pytest.fixture(scope="module")
 def mesh2d():
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return SH.make_mesh((n, 1), ("data", "model"))
 
 
 def test_missing_mesh_axis_dropped(mesh2d):

@@ -84,8 +84,9 @@ def test_moe_shard_map_matches_dense_fallback():
     y_ref, aux_ref = M._moe_dense_fallback(p, x, cfg)
 
     n = len(jax.devices())
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.sharding import make_mesh
+
+    mesh = make_mesh((1, n), ("data", "model"))
     with sharding_context(mesh):
         y_a2a, aux = jax.jit(lambda p, x: M.moe_ffn(p, x, cfg))(p, x)
     # capacity_factor=8 -> no drops -> identical routing results
@@ -108,7 +109,9 @@ from repro.core.device_mailbox import (empty_mailbox, make_deposit, make_sweep,
                                        pack_word_frame)
 from repro.kernels.ring_poll import READY, EMPTY
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.sharding import make_mesh
+
+mesh = make_mesh((8,), ("model",))
 prog = assemble([("loadp", 0), ("loade", 1, 0), ("add", 2, 0, 1), ("store", 0, 2)],
                 symbols=("bias",))
 T, NT, NS = 128, 1, 4
@@ -170,9 +173,10 @@ def test_dryrun_machinery_subprocess():
 def test_pipeline_parallel_schedule():
     """GPipe over a 1-D axis: outputs == sequential stage application."""
     from repro.parallel.pipeline import pipeline_apply
+    from repro.parallel.sharding import make_mesh
 
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("pod",))
     ws = jnp.stack([jnp.eye(8) * (i + 1) for i in range(n)])
 
     def stage(w, x):
