@@ -235,6 +235,102 @@ def bench_dispatcher_fanout(n_peers: int = 4, n_msgs: int = 256,
     return rows
 
 
+def bench_fig5_cached(n_iters: int = 200, sizes: list | None = None) -> list[dict]:
+    """Cached invocation (paper §3.4, 'Fig. 5'): per payload size, compare
+
+    * ``full`` — every message re-injects the ~256 KiB bench_hot code
+      section (first-arrival protocol repeated forever);
+    * ``slim`` — code elided after the one warmup FULL frame; the target
+      dispatches from its digest-keyed link cache (no sha256 on the path);
+    * ``am``   — the UCX-AM baseline (handler pre-registered, no code).
+    """
+    sizes = sizes if sizes is not None else [16, 256, 4 << 10, 64 << 10]
+    rows = []
+    src, dst, ep = _pair()
+    h = register_ifunc(src, "bench_hot")
+    region = dst.nic.mem_map(4 << 20)
+    targs = {}
+    m = ifunc_msg_create(h, b"warm")          # warm the target's link cache
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+    for size in sizes:
+        payload = b"x" * size
+        for cell, slim in (("full", False), ("slim", True)):
+            t0 = time.perf_counter()
+            for _ in range(n_iters):
+                m = ifunc_msg_create(h, payload, slim=slim)
+                ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+                while poll_ifunc(dst, region.view(), None, targs) != Status.OK:
+                    pass
+            dt = (time.perf_counter() - t0) / n_iters
+            rows.append({"bench": "fig5_cached", "api": cell, "size": size,
+                         "cell": f"{cell}/{size}B", "us": dt * 1e6,
+                         "msgs_per_s": 1 / dt})
+        a, b = AmContext("a"), AmContext("b")
+        b.register(1, lambda p, n, t: None)
+        ab = AmEndpoint(a, b)
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            ab.send(1, payload)
+            while b.progress() == 0:
+                pass
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "fig5_cached", "api": "am", "size": size,
+                     "cell": f"am/{size}B", "us": dt * 1e6,
+                     "msgs_per_s": 1 / dt})
+    return rows
+
+
+def bench_slab_pack(n_iters: int = 2000, code_len: int = 16 << 10,
+                    payload_len: int = 4 << 10) -> list[dict]:
+    """Send-path staging: the old pipeline (fresh bytearray per frame, then
+    the ``bytes(data)`` wire copy the emulated NIC used to make) vs the new
+    one (pack in place into a reused slab cell; the NIC copies straight out
+    of the view — one copy total, zero allocations)."""
+    from repro.core import frame as F
+
+    code = b"c" * code_len
+    digest = F.compute_digest(code)
+    payload = b"p" * payload_len
+    rows = []
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        frame = F.pack_frame("micro", code, payload, F.CodeKind.PYBC,
+                             digest=digest)
+        bytes(frame)                      # the legacy put_nbi staging copy
+    dt = (time.perf_counter() - t0) / n_iters
+    rows.append({"bench": "micro_slab", "api": "alloc", "size": code_len,
+                 "cell": f"alloc+copy/{code_len + payload_len}B",
+                 "us": dt * 1e6})
+    slab = bytearray(F.HEADER_LEN + code_len + payload_len + F.TRAILER_LEN)
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        F.pack_frame_into(slab, "micro", code, payload, F.CodeKind.PYBC,
+                          digest=digest)
+    dt = (time.perf_counter() - t0) / n_iters
+    rows.append({"bench": "micro_slab", "api": "slab", "size": code_len,
+                 "cell": f"slab/{code_len + payload_len}B", "us": dt * 1e6})
+    return rows
+
+
+def bench_checksum(n_iters: int = 300, size: int = 64 << 10) -> list[dict]:
+    """fletcher32: pure-Python byte loop vs the vectorized numpy closed
+    form (sum + cumsum over 16-bit words)."""
+    from repro.core import frame as F
+
+    data = bytes(range(256)) * (size // 256)
+    rows = []
+    for cell, fn in (("pure", F.fletcher32_py), ("numpy", F.fletcher32)):
+        t0 = time.perf_counter()
+        for _ in range(n_iters if cell == "numpy" else max(n_iters // 20, 3)):
+            fn(data)
+        iters = n_iters if cell == "numpy" else max(n_iters // 20, 3)
+        dt = (time.perf_counter() - t0) / iters
+        rows.append({"bench": "micro_checksum", "api": cell, "size": size,
+                     "cell": f"{cell}/{size}B", "us": dt * 1e6})
+    return rows
+
+
 def bench_uvm(n_tiles: int = 8, iters: int = 5) -> list[dict]:
     """Device-tier μVM execution cost per injected program (interpret mode)."""
     import numpy as np

@@ -1,0 +1,50 @@
+"""Validate a persisted ``BENCH_*.json`` trajectory file.
+
+Checks (used by the CI bench-smoke step and by hand after a full run):
+
+1. the file parses and every row matches the stable schema
+   ``{bench: str, cell: str, us: float, msgs_per_s?: float}``;
+2. the ``fig5_cached`` rows exist and, per payload size, the SLIM
+   (cached) cell is strictly faster than the FULL re-injection cell —
+   the cached fast path must actually be a fast path.
+
+    PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def check(path: pathlib.Path) -> int:
+    rows = json.loads(path.read_text())
+    assert isinstance(rows, list) and rows, f"{path}: empty or not a list"
+    for r in rows:
+        assert isinstance(r, dict), f"non-dict row: {r!r}"
+        extra = set(r) - {"bench", "cell", "us", "msgs_per_s"}
+        assert not extra, f"row has out-of-schema keys {extra}: {r!r}"
+        assert isinstance(r.get("bench"), str) and r["bench"], r
+        assert isinstance(r.get("cell"), str) and r["cell"], r
+        assert isinstance(r.get("us"), (int, float)), r
+        if "msgs_per_s" in r:
+            assert isinstance(r["msgs_per_s"], (int, float)), r
+    fig5 = {r["cell"]: r["us"] for r in rows if r["bench"] == "fig5_cached"}
+    sizes = sorted(int(c.split("/")[1][:-1]) for c in fig5
+                   if c.startswith("full/"))
+    assert sizes, "no fig5_cached full/* rows"
+    for s in sizes:
+        full, slim = fig5[f"full/{s}B"], fig5[f"slim/{s}B"]
+        ratio = full / slim
+        print(f"fig5_cached {s:>7}B: full={full:8.2f}us slim={slim:8.2f}us "
+              f"-> {ratio:.2f}x")
+        assert slim < full, (
+            f"SLIM cell not faster than FULL at {s}B ({slim} >= {full})")
+    print(f"{path.name}: {len(rows)} rows OK")
+    return 0
+
+
+if __name__ == "__main__":
+    p = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR2.json")
+    sys.exit(check(p))

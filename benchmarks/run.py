@@ -2,16 +2,26 @@
 
   fig3_latency     ifunc vs UCX-AM one-way latency across payload sizes
   fig4_throughput  ifunc vs UCX-AM message rate across payload sizes
+  fig5_cached      FULL re-injection vs SLIM cached invocation vs AM
   s34_link_cost    first-arrival link+verify vs hash-table-cached dispatch
   tierB_uvm        device-tier μVM injected-program execution
+  micro_slab       fresh-bytearray vs slab in-place frame packing
+  micro_checksum   pure-Python vs vectorized fletcher32
   roofline         summary of the dry-run roofline terms (if artifacts exist)
 
-Prints ``name,us_per_call,derived`` CSV rows; full rows land in
+Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
+normalized rows to ``BENCH_PR2.json`` at the repo root in the stable
+schema ``{bench, cell, us, msgs_per_s?}`` so future PRs can diff the
+trajectory; a full run additionally keeps the raw rows in
 experiments/bench_results.json.
+
+``--quick`` (the CI smoke mode) runs only the cached-fast-path suite
+(fig5_cached + the two microbenches) with reduced iteration counts.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
@@ -21,7 +31,9 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks import bench_ifunc as B  # noqa: E402
 
-OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench_results.json"
+BENCH_OUT = ROOT / "BENCH_PR2.json"
 
 
 def _emit(rows: list[dict]) -> None:
@@ -38,6 +50,20 @@ def _emit(rows: list[dict]) -> None:
             derived = ""
         name = r.get("cell") or f"{r['api']}/{r['size']}B"
         print(f"{r['bench']}/{name},{r['us']:.2f},{derived}")
+
+
+def _normalize(rows: list[dict]) -> list[dict]:
+    """Project onto the persisted trajectory schema: {bench, cell, us,
+    msgs_per_s?}.  ``cell`` is the stable row key future PRs diff on."""
+    out = []
+    for r in rows:
+        cell = r.get("cell") or f"{r['api']}/{r['size']}B"
+        row = {"bench": r["bench"], "cell": cell,
+               "us": round(float(r["us"]), 3)}
+        if "msgs_per_s" in r:
+            row["msgs_per_s"] = round(float(r["msgs_per_s"]), 1)
+        out.append(row)
+    return out
 
 
 def fig3_latency() -> list[dict]:
@@ -63,6 +89,12 @@ def fig4_throughput() -> list[dict]:
     return rows
 
 
+def fig5_cached(quick: bool = False) -> list[dict]:
+    if quick:
+        return B.bench_fig5_cached(n_iters=50, sizes=[16, 4 << 10])
+    return B.bench_fig5_cached()
+
+
 def s34_link_cost() -> list[dict]:
     return B.bench_link_cost()
 
@@ -73,6 +105,14 @@ def tierB_uvm() -> list[dict]:
 
 def transport_fanout() -> list[dict]:
     return B.bench_dispatcher_fanout()
+
+
+def micro_slab(quick: bool = False) -> list[dict]:
+    return B.bench_slab_pack(n_iters=400 if quick else 2000)
+
+
+def micro_checksum(quick: bool = False) -> list[dict]:
+    return B.bench_checksum(n_iters=60 if quick else 300)
 
 
 def roofline_summary() -> list[dict]:
@@ -91,15 +131,41 @@ def roofline_summary() -> list[dict]:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="cached-fast-path suite only, reduced iterations")
+    args = ap.parse_args()
+    if args.quick:
+        suites = [lambda: fig5_cached(quick=True),
+                  lambda: micro_slab(quick=True),
+                  lambda: micro_checksum(quick=True)]
+    else:
+        suites = [fig3_latency, fig4_throughput, fig5_cached, s34_link_cost,
+                  tierB_uvm, transport_fanout, micro_slab, micro_checksum,
+                  roofline_summary]
     all_rows = []
-    for fn in (fig3_latency, fig4_throughput, s34_link_cost, tierB_uvm,
-               transport_fanout, roofline_summary):
+    for fn in suites:
         rows = fn()
         _emit(rows)
         all_rows += rows
-    OUT.parent.mkdir(parents=True, exist_ok=True)
-    OUT.write_text(json.dumps(all_rows, indent=1))
-    print(f"# {len(all_rows)} rows -> {OUT}", file=sys.stderr)
+    # merge by (bench, cell): a --quick run refreshes only the cells it
+    # measured and preserves the rest of a committed full-run trajectory
+    merged: dict[tuple, dict] = {}
+    if BENCH_OUT.exists():
+        try:
+            for r in json.loads(BENCH_OUT.read_text()):
+                merged[(r["bench"], r["cell"])] = r
+        except (ValueError, KeyError, TypeError):
+            merged = {}                        # unparseable: start fresh
+    for r in _normalize(all_rows):
+        merged[(r["bench"], r["cell"])] = r
+    BENCH_OUT.write_text(json.dumps(list(merged.values()), indent=1))
+    print(f"# {len(all_rows)} rows measured, {len(merged)} in trajectory "
+          f"-> {BENCH_OUT}", file=sys.stderr)
+    if not args.quick:
+        OUT.parent.mkdir(parents=True, exist_ok=True)
+        OUT.write_text(json.dumps(all_rows, indent=1))
+        print(f"# raw rows -> {OUT}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Context, ifunc_msg_create, register_ifunc
+from repro.core import Context, register_ifunc
 from repro.core.codegen import deserialize_uvm
 from repro.transport import Dispatcher, LoopbackFabric, ProgressEngine, RdmaFabric
 from repro.transport.device_fabric import DeviceMeshFabric
@@ -67,16 +67,21 @@ print(f"dispatcher: {len(dispatcher.peers)} peers over "
       f"{n_dev}-shard device mesh")
 
 # --- fan the same ifunc out to every peer -----------------------------------
+# send_ifunc packs each frame straight into the per-peer slab (zero-copy)
+# and flips to SLIM framing per peer once a FULL delivery confirmed the
+# target's code cache — μVM code crosses each wire exactly once.
 payloads = rng.standard_normal((N_MSGS, 1, T, T)).astype(np.float32)
 retries = delivered = 0
 for i in range(N_MSGS):
     for peer in list(dispatcher.peers):
-        while not dispatcher.send(peer, ifunc_msg_create(handle, payloads[i])):
+        while not dispatcher.send_ifunc(peer, handle, payloads[i]):
             retries += 1                       # ring full: let targets drain
             delivered += dispatcher.drain()
 delivered += dispatcher.drain()
+slim = sum(p.stats["slim_sent"] for p in dispatcher.peers.values())
 print(f"fanned {N_MSGS} payloads x {len(dispatcher.peers)} peers = "
-      f"{delivered} deliveries ({retries} backpressure retries)")
+      f"{delivered} deliveries ({retries} backpressure retries, "
+      f"{slim} SLIM frames)")
 
 # --- every fabric computed the same injected function -----------------------
 expect = [np.maximum(p[0] @ W, 0) for p in payloads]

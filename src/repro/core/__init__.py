@@ -6,7 +6,7 @@ fabric — and the TPU device-tier analogue (mailbox + μVM).  See DESIGN.md.
 from repro.core.api import (  # noqa: F401
     Context, IfuncHandle, IfuncMsg, Status,
     register_ifunc, deregister_ifunc,
-    ifunc_msg_create, ifunc_msg_free, ifunc_msg_send_nbix,
+    ifunc_msg_create, ifunc_msg_free, ifunc_msg_send_nbix, ifunc_msg_to_full,
     poll_ifunc, poll_ring,
 )
 from repro.core.active_message import AmContext, AmEndpoint  # noqa: F401

@@ -10,11 +10,18 @@
 Differences from UCX AM are the paper's: registration happens at the
 *source*; the frame carries the code; the target auto-links first-seen
 names (hash-table cached) and rejects ill-formed frames.
+
+The v2 frame protocol adds the cached fast path (paper §3.4): frames carry
+a code digest, a link-cache hit never hashes code, and a source that knows
+the target has cached a digest can send SLIM frames (code elided).  A SLIM
+frame whose digest misses the cache — eviction, restart — is consumed with
+``Status.NACK_UNCACHED`` so the transport layer retransmits FULL.
 """
 
 from __future__ import annotations
 
 import enum
+import hashlib  # module scope: never imported inside the poll hot loop
 import pathlib
 import time
 from dataclasses import dataclass, field
@@ -33,6 +40,8 @@ class Status(enum.Enum):
     NO_MESSAGE = 1         # nothing at this address yet
     IN_PROGRESS = 2        # header here, trailer not yet (put in flight)
     REJECTED = 3           # ill-formed / policy violation (frame cleared)
+    NACK_UNCACHED = 4      # SLIM frame, digest not in the link cache (frame
+                           # cleared; source must retransmit FULL)
 
 
 def _default_wait_mem(spins: int) -> None:
@@ -58,7 +67,7 @@ class Context:
     wait_mem = staticmethod(_default_wait_mem)
     max_trailer_spins: int = 1_000_000
     stats: dict = field(default_factory=lambda: {
-        "executed": 0, "rejected": 0, "links": 0, "bytes_in": 0})
+        "executed": 0, "rejected": 0, "links": 0, "bytes_in": 0, "nacks": 0})
 
     def __post_init__(self):
         if self.nic is None:
@@ -74,11 +83,16 @@ class IfuncHandle:
     def name(self) -> str:
         return self.lib.name
 
+    @property
+    def digest(self) -> bytes:
+        return self.lib.code_digest
+
 
 @dataclass
 class IfuncMsg:
     handle: IfuncHandle
     frame: bytearray
+    slim: bool = False
 
     @property
     def nbytes(self) -> int:
@@ -108,9 +122,17 @@ def deregister_ifunc(ctx: Context, handle: IfuncHandle) -> None:
 
 
 def ifunc_msg_create(handle: IfuncHandle, source_args,
-                     source_args_size: int | None = None) -> IfuncMsg:
+                     source_args_size: int | None = None, *,
+                     slim: bool = False) -> IfuncMsg:
     """Build a frame.  payload_init writes *directly into the frame buffer*
-    (zero-copy, paper §3.1 'eliminate unnecessary memory copies')."""
+    (zero-copy, paper §3.1 'eliminate unnecessary memory copies'); a
+    shrinking payload truncates the buffer in place — the code section is
+    written exactly once, never re-packed.
+
+    ``slim=True`` elides the code section entirely (header digest only) —
+    valid once the target's link cache holds this handle's digest; the
+    transport dispatcher flips this automatically per peer.
+    """
     lib = handle.lib
     if source_args_size is None:
         try:
@@ -118,14 +140,31 @@ def ifunc_msg_create(handle: IfuncHandle, source_args,
         except TypeError:
             source_args_size = 0
     max_size = int(lib.payload_get_max_size(source_args, source_args_size))
-    frame = F.pack_frame(lib.name, lib.code, bytes(max_size), lib.kind)
-    hdr = F.peek_header(frame)
-    pv = memoryview(frame)[hdr.payload_offset:hdr.payload_offset + max_size]
+    code = b"" if slim else lib.code
+    frame = bytearray(F.HEADER_LEN + len(code) + max_size + F.TRAILER_LEN)
+    pv = F.frame_payload_view(frame, len(code), max_size)
     used = lib.payload_init(pv, max_size, source_args, source_args_size)
     used = max_size if used in (None, 0) else int(used)
-    if used < max_size:  # shrink: repack with exact payload
-        frame = F.pack_frame(lib.name, lib.code, bytes(pv[:used]), lib.kind)
-    return IfuncMsg(handle, frame)
+    frame_len = F.seal_frame(frame, lib.name, code, lib.kind, used,
+                             digest=lib.code_digest, slim=slim)
+    if frame_len < len(frame):       # shrink: truncate, don't re-pack
+        try:
+            pv.release()
+            del frame[frame_len:]
+        except BufferError:          # payload_init leaked a view: copy out
+            frame = bytearray(memoryview(frame)[:frame_len])
+    return IfuncMsg(handle, frame, slim=slim)
+
+
+def ifunc_msg_to_full(msg: IfuncMsg) -> IfuncMsg:
+    """Rebuild a FULL frame from a SLIM message (same payload, code
+    restored from the handle's library) — the NACK_UNCACHED fallback."""
+    if not msg.slim:
+        return msg
+    lib = msg.handle.lib
+    frame = F.pack_frame(lib.name, lib.code, bytes(msg.payload_view),
+                         lib.kind, digest=lib.code_digest)
+    return IfuncMsg(msg.handle, frame, slim=False)
 
 
 def ifunc_msg_free(msg: IfuncMsg) -> None:
@@ -218,13 +257,24 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
                 return Status.IN_PROGRESS
             ctx.wait_mem(spins)
         code, payload = F.frame_sections(buf, hdr)
-        import hashlib
-
-        chash = hashlib.sha256(code).hexdigest()
-        fn = ctx.link_cache.lookup(hdr.name, chash)
+        # Cached dispatch (§3.4): the header digest IS the cache key — a
+        # hit costs one dict lookup, no sha256, no code-section read.
+        fn = ctx.link_cache.lookup(hdr.name, hdr.digest)
         if fn is None:
-            fn = _link(ctx, hdr, code)
-            ctx.link_cache.insert(hdr.name, chash, fn)
+            if hdr.is_slim:
+                # code elided and not cached (eviction/restart): consume
+                # the frame, tell the source to retransmit FULL.
+                ctx.stats["nacks"] += 1
+                ctx.stats["last_nack"] = (hdr.name, hdr.digest)
+                if clear:
+                    F.clear_frame(buf, hdr)
+                return Status.NACK_UNCACHED
+            code_b = bytes(code)
+            if F.compute_digest(code_b) != hdr.digest:
+                raise F.FrameError("code digest mismatch (corrupt code "
+                                   "section or forged header)")
+            fn = _link(ctx, hdr, code_b)
+            ctx.link_cache.insert(hdr.name, hdr.digest, fn)
             ctx.stats["links"] += 1
     except (F.FrameError, PolicyViolation, CG.LinkError, CG.CodeVerifyError,
             RegistryError) as e:
@@ -235,7 +285,7 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
             if bad and clear:
                 F.clear_frame(buf, bad)
         except F.FrameError:
-            buf[:F.HEADER_LEN] = b"\0" * F.HEADER_LEN
+            buf[:F.HEADER_LEN] = memoryview(F._ZEROS)[:F.HEADER_LEN]
         return Status.REJECTED
     fn(payload, len(payload), target_args)
     ctx.stats["executed"] += 1

@@ -177,6 +177,7 @@ def link_pybc(code: bytes, space: SymbolSpace, *,
               hmac_key: bytes | None = None) -> types.FunctionType:
     """Target-side GOT construction: rebuild the code unit with its global
     table patched to local symbol addresses."""
+    code = bytes(code)  # accept zero-copy frame section views
     (n,) = struct.unpack_from("<I", code, 0)
     meta = json.loads(code[4:4 + n].decode())
     body = code[4 + n:]
@@ -276,6 +277,7 @@ def serialize_uvm(prog: UvmProgram) -> bytes:
 
 
 def deserialize_uvm(code: bytes) -> UvmProgram:
+    code = bytes(code)  # accept zero-copy frame section views
     magic, P, n_ext, ns = struct.unpack_from("<IIII", code, 0)
     if magic != _UVM_MAGIC:
         raise CodeVerifyError("bad uvm magic")

@@ -1,18 +1,20 @@
-"""ifunc message frame (paper Fig. 1).
+"""ifunc message frame, v2 (paper Fig. 1 + the §3.4 cached fast path).
 
-Layout (little-endian), mirroring the paper's
+Layout (little-endian), extending the paper's
 ``FRAME_LEN | GOT_OFFSET | PAYLOAD_OFFSET | IFUNC_NAME | SIGNAL | CODE |
-PAYLOAD | SIGNAL``:
+PAYLOAD | SIGNAL`` with a flags word and a 16-byte code digest:
 
     offset  size  field
-    0       4     magic            0x1F5C0DE5
+    0       4     magic            0x1F5C0DE6 (frame format v2)
     4       8     frame_len        total bytes incl. trailer
     12      4     code_offset      start of code section (== HEADER_LEN)
     16      8     payload_offset   start of payload section
     24      4     code_kind        CodeKind enum (pybc | hlo | uvm)
     28      32    ifunc_name       NUL-padded ascii
-    60      4     header_signal    fletcher32 over bytes [0, 60)
-    64      ...   code             serialized code section (+ symbol table)
+    60      4     flags            bit 0: FLAG_SLIM (code section elided)
+    64      16    code_digest      truncated sha256 of the FULL code section
+    80      4     header_signal    fletcher32 over bytes [0, 80)
+    84      ...   code             serialized code section (empty when SLIM)
     ...     ...   payload
     last 4        trailer_signal   0xD0E1F2A3 — written last; its arrival
                                    means the whole frame has been delivered
@@ -21,22 +23,46 @@ The header signal authenticates header *integrity* (reject ill-formed);
 the trailer signal is the delivery barrier the target spins on (paper §3.4,
 Fig. 2).  The one-sided put deposits bytes in order, so header-valid +
 trailer-present ⇒ frame complete.
+
+v2 additions (the cached-invocation fast path):
+
+* ``code_digest`` identifies the code section without hashing it on every
+  arrival — the digest is computed ONCE at pack time (in practice once per
+  library load) and travels in the header, so a link-cache hit costs a
+  dict lookup, never a sha256.
+* ``FLAG_SLIM`` marks a frame whose code section is elided entirely: the
+  target resolves the digest against its link cache and replies
+  ``NACK_UNCACHED`` when the entry was evicted, triggering a transparent
+  FULL retransmit at the source.
+* ``pack_frame_into`` / ``seal_frame`` pack frames *in place* into
+  caller-owned slab memoryviews (the transport layer's per-peer staging
+  slabs) so the send path never materializes intermediate bytearrays.
 """
 
 from __future__ import annotations
 
+import hashlib
 import struct
 from dataclasses import dataclass
 from enum import IntEnum
 
-MAGIC = 0x1F5C0DE5
+try:  # vectorized checksum; core still works on a numpy-free interpreter
+    import numpy as _np
+except ImportError:  # pragma: no cover - numpy is a repo-wide dependency
+    _np = None
+
+MAGIC = 0x1F5C0DE6          # bumped: v2 header (flags + code digest)
 TRAILER = 0xD0E1F2A3
-HEADER_LEN = 64
+HEADER_LEN = 84
 NAME_LEN = 32
 TRAILER_LEN = 4
+DIGEST_LEN = 16
+FLAG_SLIM = 0x1
+SIGNAL_OFF = 80             # header signal location; fletcher32 over [0, 80)
 
-_HEADER_FMT = "<IQIQI32s"  # magic, frame_len, code_off, payload_off, kind, name
-assert struct.calcsize(_HEADER_FMT) == 60
+_HEADER_FMT = "<IQIQI32sI16s"  # magic, frame_len, code_off, payload_off,
+                               # kind, name, flags, digest
+assert struct.calcsize(_HEADER_FMT) == SIGNAL_OFF
 
 
 class CodeKind(IntEnum):
@@ -49,7 +75,8 @@ class FrameError(Exception):
     """Ill-formed frame — poll_ifunc rejects (paper: 'will be rejected')."""
 
 
-def fletcher32(data: bytes) -> int:
+def fletcher32_py(data) -> int:
+    """Pure-Python fletcher32 — the reference oracle and small-input path."""
     a = b = 0xFFFF
     for i in range(0, len(data) - 1, 2):
         a = (a + (data[i] | (data[i + 1] << 8))) % 0xFFFF
@@ -60,6 +87,48 @@ def fletcher32(data: bytes) -> int:
     return (b << 16) | a
 
 
+_VEC_MIN = 128          # below this the numpy call overhead beats the loop
+_VEC_MAX = 1 << 24      # above this the cumsum term could overflow uint64
+
+
+def fletcher32(data) -> int:
+    """fletcher32 with a vectorized numpy path for non-trivial inputs.
+
+    The running sums unroll to closed forms over the 16-bit LE words w_i
+    (i = 1..m), starting from a = b = 0xFFFF::
+
+        a = (0xFFFF + sum w_i)            mod 0xFFFF
+        b = (0xFFFF * (m + 1) + sum cumsum(w)_i) mod 0xFFFF
+
+    so one ``sum`` + one ``cumsum`` replace the byte loop.  An odd trailing
+    byte contributes one extra word with a zero high byte, matching the
+    reference loop exactly.
+
+    The frame protocol's own header signal covers 80 bytes and stays on
+    the small-input loop; the vectorized path is for section-scale
+    checksums (tooling, benchmarks, payload signals) where the pure loop
+    costs milliseconds.
+    """
+    n = len(data)
+    if _np is None or n < _VEC_MIN or n > _VEC_MAX:
+        return fletcher32_py(data)
+    w = _np.frombuffer(data, "<u2", count=n // 2).astype(_np.uint64)
+    if n % 2:
+        w = _np.concatenate([w, _np.array([data[-1]], _np.uint64)])
+    m = len(w)
+    s = int(w.sum())
+    t = int(_np.cumsum(w).sum())
+    a = (0xFFFF + s) % 0xFFFF
+    b = (0xFFFF * (m + 1) + t) % 0xFFFF
+    return (b << 16) | a
+
+
+def compute_digest(code) -> bytes:
+    """Truncated sha256 identifying a code section.  Pay this once per
+    library load / first arrival — never on the cached dispatch path."""
+    return hashlib.sha256(bytes(code)).digest()[:DIGEST_LEN]
+
+
 @dataclass(frozen=True)
 class FrameHeader:
     frame_len: int
@@ -67,23 +136,75 @@ class FrameHeader:
     payload_offset: int
     code_kind: CodeKind
     name: str
+    flags: int = 0
+    digest: bytes = b"\0" * DIGEST_LEN
+
+    @property
+    def is_slim(self) -> bool:
+        return bool(self.flags & FLAG_SLIM)
 
 
-def pack_frame(name: str, code: bytes, payload: bytes | bytearray,
-               kind: CodeKind) -> bytearray:
-    if len(name.encode()) >= NAME_LEN:
+def _name_bytes(name: str) -> bytes:
+    nb = name.encode()
+    if len(nb) >= NAME_LEN:
         raise FrameError(f"ifunc name too long (>{NAME_LEN - 1}): {name!r}")
-    code_off = HEADER_LEN
-    payload_off = code_off + len(code)
-    frame_len = payload_off + len(payload) + TRAILER_LEN
-    hdr = struct.pack(_HEADER_FMT, MAGIC, frame_len, code_off, payload_off,
-                      int(kind), name.encode().ljust(NAME_LEN, b"\0"))
-    buf = bytearray(frame_len)
-    buf[:60] = hdr
-    buf[60:64] = struct.pack("<I", fletcher32(hdr))
-    buf[code_off:payload_off] = code
+    return nb.ljust(NAME_LEN, b"\0")
+
+
+def seal_frame(buf, name: str, code, kind: CodeKind, payload_len: int, *,
+               digest: bytes | None = None, slim: bool = False) -> int:
+    """Write header + code + trailer around a payload *already in place*
+    (via :func:`frame_payload_view`), directly into ``buf``.  Returns the
+    frame length.  This is the zero-copy finalizer: the payload bytes are
+    never touched, and nothing is allocated beyond the 80-byte header.
+    """
+    nb = _name_bytes(name)
+    code_len = 0 if slim else len(code)
+    payload_off = HEADER_LEN + code_len
+    frame_len = payload_off + payload_len + TRAILER_LEN
+    if len(buf) < frame_len:
+        raise FrameError(f"frame {frame_len}B exceeds buffer {len(buf)}B")
+    if digest is None:
+        digest = compute_digest(code)
+    if not slim and code_len:
+        buf[HEADER_LEN:payload_off] = code
+    hdr = struct.pack(_HEADER_FMT, MAGIC, frame_len, HEADER_LEN, payload_off,
+                      int(kind), nb, FLAG_SLIM if slim else 0, digest)
+    buf[:SIGNAL_OFF] = hdr
+    struct.pack_into("<I", buf, SIGNAL_OFF, fletcher32(hdr))
+    struct.pack_into("<I", buf, frame_len - TRAILER_LEN, TRAILER)
+    return frame_len
+
+
+def frame_payload_view(buf, code_len: int, max_payload: int,
+                       *, slim: bool = False) -> memoryview:
+    """Writable view of the payload region a frame in ``buf`` will occupy —
+    ``payload_init`` writes here directly (paper §3.1 'eliminate unnecessary
+    memory copies'), then :func:`seal_frame` wraps the header around it."""
+    off = HEADER_LEN + (0 if slim else code_len)
+    return memoryview(buf)[off:off + max_payload]
+
+
+def pack_frame_into(buf, name: str, code, payload, kind: CodeKind, *,
+                    digest: bytes | None = None, slim: bool = False) -> int:
+    """Pack a complete frame into a preallocated buffer (a transport slab
+    slot).  Returns frame_len; no intermediate bytearray is created."""
+    code_len = 0 if slim else len(code)
+    payload_off = HEADER_LEN + code_len
+    if len(buf) < payload_off + len(payload) + TRAILER_LEN:
+        raise FrameError(
+            f"frame {payload_off + len(payload) + TRAILER_LEN}B exceeds "
+            f"buffer {len(buf)}B")
     buf[payload_off:payload_off + len(payload)] = payload
-    buf[frame_len - TRAILER_LEN:frame_len] = struct.pack("<I", TRAILER)
+    return seal_frame(buf, name, code, kind, len(payload),
+                      digest=digest, slim=slim)
+
+
+def pack_frame(name: str, code: bytes, payload, kind: CodeKind, *,
+               digest: bytes | None = None, slim: bool = False) -> bytearray:
+    code_len = 0 if slim else len(code)
+    buf = bytearray(HEADER_LEN + code_len + len(payload) + TRAILER_LEN)
+    pack_frame_into(buf, name, code, payload, kind, digest=digest, slim=slim)
     return buf
 
 
@@ -92,42 +213,63 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     has arrived (zeroed magic); raises FrameError on corruption/bounds."""
     if len(buf) < HEADER_LEN:
         return None
-    raw = bytes(buf[:60])
-    magic = struct.unpack_from("<I", raw, 0)[0]
+    magic = struct.unpack_from("<I", buf, 0)[0]
     if magic == 0:
         return None  # nothing written here yet
     if magic != MAGIC:
         raise FrameError(f"bad magic {magic:#x}")
-    (sig,) = struct.unpack_from("<I", bytes(buf[60:64]))
-    if sig != fletcher32(raw):
-        raise FrameError("header signal mismatch (corrupt header)")
-    magic, frame_len, code_off, payload_off, kind, name = struct.unpack(_HEADER_FMT, raw)
+    (sig,) = struct.unpack_from("<I", buf, SIGNAL_OFF)
+    mv = memoryview(buf)[:SIGNAL_OFF]
+    try:
+        if sig != fletcher32(mv):
+            raise FrameError("header signal mismatch (corrupt header)")
+    finally:
+        mv.release()
+    (magic, frame_len, code_off, payload_off, kind, name, flags,
+     digest) = struct.unpack_from(_HEADER_FMT, buf, 0)
     if max_frame is not None and frame_len > max_frame:
         raise FrameError(f"frame too long ({frame_len} > {max_frame})")
     if not (HEADER_LEN <= code_off <= payload_off <= frame_len - TRAILER_LEN):
         raise FrameError("inconsistent offsets")
+    if flags & FLAG_SLIM and code_off != payload_off:
+        raise FrameError("SLIM frame carries a code section")
     try:
         kind = CodeKind(kind)
     except ValueError as e:
         raise FrameError(f"unknown code kind {kind}") from e
     return FrameHeader(frame_len, code_off, payload_off, kind,
-                       name.rstrip(b"\0").decode(errors="strict"))
+                       name.rstrip(b"\0").decode(errors="strict"),
+                       flags, bytes(digest))
 
 
 def trailer_arrived(buf, hdr: FrameHeader) -> bool:
     end = hdr.frame_len
     if len(buf) < end:
         raise FrameError("frame exceeds buffer")
-    (t,) = struct.unpack_from("<I", bytes(buf[end - 4:end]))
+    (t,) = struct.unpack_from("<I", buf, end - TRAILER_LEN)
     return t == TRAILER
 
 
-def frame_sections(buf, hdr: FrameHeader) -> tuple[bytes, bytes]:
-    code = bytes(buf[hdr.code_offset:hdr.payload_offset])
-    payload = bytes(buf[hdr.payload_offset:hdr.frame_len - TRAILER_LEN])
-    return code, payload
+def frame_sections(buf, hdr: FrameHeader) -> tuple[memoryview, memoryview]:
+    """Zero-copy (code, payload) views into ``buf``.  Callers that keep the
+    data past the frame's lifetime (the slot gets cleared/reused) must copy
+    via ``bytes()`` themselves — linking does, execution usually need not."""
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    return (mv[hdr.code_offset:hdr.payload_offset],
+            mv[hdr.payload_offset:hdr.frame_len - TRAILER_LEN])
+
+
+_ZEROS = bytes(64 << 10)    # shared zeros slab: clear_frame allocates nothing
 
 
 def clear_frame(buf, hdr: FrameHeader) -> None:
-    """Zero a consumed frame slot so the next poll sees 'empty'."""
-    buf[:hdr.frame_len] = b"\0" * hdr.frame_len
+    """Zero a consumed frame slot so the next poll sees 'empty'.
+    Allocation-free: copies from a shared zeros slab instead of
+    materializing ``b"\\0" * frame_len`` per consumed message."""
+    n = hdr.frame_len
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    z = memoryview(_ZEROS)
+    step = len(_ZEROS)
+    for off in range(0, n, step):
+        m = min(step, n - off)
+        mv[off:off + m] = z[:m]

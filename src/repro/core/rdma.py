@@ -54,10 +54,13 @@ class MemRegion:
 
 @dataclass
 class _PendingPut:
+    """The withheld tail of a partially-delivered put.  Only the undelivered
+    suffix is retained (for the frame protocol that is the 4-byte trailer),
+    so staging a put never copies the frame body."""
+
     region: MemRegion
-    offset: int
-    data: bytes
-    delivered: int = 0  # bytes already visible at the target
+    offset: int         # region offset where the tail lands at flush
+    tail: bytes
 
 
 class Endpoint:
@@ -71,19 +74,25 @@ class Endpoint:
     # -- the ucp_put_nbi analogue ------------------------------------------
     def put_nbi(self, data: bytes | bytearray | memoryview, remote_addr: int,
                 rkey: int, *, deliver_bytes: int | None = None) -> None:
-        """Non-blocking one-sided write.  ``deliver_bytes`` (tests only)
-        makes just a prefix visible until flush — modelling in-flight puts."""
-        region, off = self.remote.check_access(remote_addr, len(data), rkey, Access.WRITE,
+        """Non-blocking one-sided write.  ``deliver_bytes`` makes just a
+        prefix visible until flush — modelling in-flight puts.
+
+        Zero-copy contract: ``data`` is copied straight into the target
+        region (that copy IS the emulated wire transfer); no intermediate
+        ``bytes(data)`` is materialized.  A partially-delivered put retains
+        only its withheld tail, so callers may pass views into reusable
+        slab buffers as long as the slot is not rewritten before flush
+        (the transport layer's credit accounting guarantees that)."""
+        nd = len(data)
+        region, off = self.remote.check_access(remote_addr, nd, rkey, Access.WRITE,
                                                ep=self)
-        data = bytes(data)
-        p = _PendingPut(region, off, data)
-        n = len(data) if deliver_bytes is None else min(deliver_bytes, len(data))
-        region.buf[off:off + n] = data[:n]
-        p.delivered = n
-        if n < len(data):
-            self._pending.append(p)
+        mv = data if isinstance(data, memoryview) else memoryview(data)
+        n = nd if deliver_bytes is None else min(deliver_bytes, nd)
+        region.buf[off:off + n] = mv[:n]
+        if n < nd:
+            self._pending.append(_PendingPut(region, off + n, bytes(mv[n:])))
         self.stats["puts"] += 1
-        self.stats["bytes"] += len(data)
+        self.stats["bytes"] += nd
 
     def get(self, remote_addr: int, ln: int, rkey: int) -> bytes:
         region, off = self.remote.check_access(remote_addr, ln, rkey, Access.READ, ep=self)
@@ -92,9 +101,7 @@ class Endpoint:
     def flush(self) -> None:
         """Complete all in-flight puts (ucp_ep_flush)."""
         for p in self._pending:
-            p.region.buf[p.offset + p.delivered:p.offset + len(p.data)] = \
-                p.data[p.delivered:]
-            p.delivered = len(p.data)
+            p.region.buf[p.offset:p.offset + len(p.tail)] = p.tail
         self._pending.clear()
         self.stats["flushes"] += 1
 

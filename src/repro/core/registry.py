@@ -15,7 +15,6 @@ Optionally: ``IFUNC_KIND = "pybc" | "hlo" | "uvm"`` (default pybc),
 
 from __future__ import annotations
 
-import hashlib
 import importlib.util
 import os
 import pathlib
@@ -23,7 +22,7 @@ import sys
 from dataclasses import dataclass, field
 
 from repro.core import codegen as CG
-from repro.core.frame import CodeKind
+from repro.core.frame import CodeKind, compute_digest
 
 ENV_LIB_DIR = "REPRO_IFUNC_LIB_DIR"
 
@@ -61,7 +60,12 @@ class IfuncLibrary:
     payload_init: object
     kind: CodeKind
     code: bytes            # serialized code section
-    code_hash: str
+    code_digest: bytes     # truncated sha256 — hashed ONCE here, travels in
+                           # every frame header (never rehashed per message)
+
+    @property
+    def code_hash(self) -> str:
+        return self.code_digest.hex()
 
     @classmethod
     def load(cls, name: str, search_dir: pathlib.Path | None = None,
@@ -83,25 +87,34 @@ class IfuncLibrary:
         else:
             prog = getattr(mod, "UVM_PROGRAM")
             code = CG.serialize_uvm(prog)
-        return cls(name, main, gms, init, kind, code,
-                   hashlib.sha256(code).hexdigest())
+        return cls(name, main, gms, init, kind, code, compute_digest(code))
 
 
 @dataclass
 class LinkCache:
-    """Target-side hash table (paper §3.4): name -> linked entry, so only
-    the *first* arrival of an ifunc pays the link cost.  Keyed additionally
-    by code hash — the paper lets code change under the same name."""
+    """Target-side hash table (paper §3.4): (name, code digest) -> linked
+    entry, so only the *first* arrival of an ifunc pays the link cost.
+    Keyed additionally by digest — the paper lets code change under the
+    same name.  The digest key is the 16-byte value from the frame header,
+    so a cache hit never hashes anything.
 
-    entries: dict[tuple[str, str], object] = field(default_factory=dict)
+    SLIM frames resolve exclusively through this table; an eviction (or a
+    target restart) makes them miss, which surfaces as ``NACK_UNCACHED``
+    and drives the source back to a FULL retransmit."""
+
+    entries: dict[tuple[str, bytes], object] = field(default_factory=dict)
     link_events: int = 0
 
-    def lookup(self, name: str, code_hash: str):
-        return self.entries.get((name, code_hash))
+    def lookup(self, name: str, digest: bytes):
+        return self.entries.get((name, digest))
 
-    def insert(self, name: str, code_hash: str, fn) -> None:
-        self.entries[(name, code_hash)] = fn
+    def insert(self, name: str, digest: bytes, fn) -> None:
+        self.entries[(name, digest)] = fn
         self.link_events += 1
+
+    def evict(self, name: str, digest: bytes) -> bool:
+        """Drop one entry (cache-pressure / restart simulation)."""
+        return self.entries.pop((name, digest), None) is not None
 
     def invalidate(self, name: str) -> None:
         for k in [k for k in self.entries if k[0] == name]:

@@ -137,7 +137,13 @@ class DeviceMeshChannel(Channel):
         """Transcode a wire byte-frame into the device word-frame layout and
         stage it.  ``deliver_bytes`` short of the full frame stages the
         word-frame without its trailer word (the device-visible in-flight
-        state); flush completes trailers before depositing."""
+        state); flush completes trailers before depositing.
+
+        SLIM-aware: the μVM program is bound at mailbox-open time (the
+        device-side link cache), so code words are *never* deposited over
+        the ICI — a SLIM frame (code elided at the source) transcodes
+        identically to a FULL one, and the payload is read through a
+        zero-copy section view straight out of the sender's slab."""
         from repro.core.device_mailbox import pack_word_frame
 
         mb = self.mailbox

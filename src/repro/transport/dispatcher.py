@@ -14,17 +14,46 @@ bundle on *any* backend (RDMA host, device mesh, loopback/CSD) — and
   ring served first last time, so a chatty peer cannot starve the rest;
 * all sends go through a shared :class:`ProgressEngine`, so batching,
   in-flight windows, and completions are uniform across fabrics.
+
+The dispatcher also owns the *cached-invocation fast path* (paper §3.4):
+
+* every frame is packed straight into the engine's per-peer slab cell for
+  its ring slot (``pack_frame_into``/``seal_frame``) — the send path
+  allocates no per-message buffers;
+* a peer's first delivery of an ifunc ships a FULL frame; once the
+  delivery is confirmed (the target's link cache provably holds the code
+  digest) subsequent sends of the same handle flip to SLIM frames — header
+  + payload, code elided;
+* a SLIM frame that misses the target's cache (eviction, restart) comes
+  back as ``NACK_UNCACHED``: the dispatcher rebuilds the FULL frame from
+  the handle's library + the slab-resident payload and retransmits it
+  transparently, ahead of any newer traffic to that peer;
+* device-mesh lanes are always SLIM-eligible — the μVM program is bound at
+  mailbox-open time, so code words never need depositing over the ICI.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
+from repro.core import frame as F
 from repro.transport.fabric import Fabric, TransportError
 from repro.transport.progress import ProgressEngine
 
 DEFAULT_SLOT_SIZE = 64 << 10
 DEFAULT_N_SLOTS = 8
+
+
+@dataclass
+class _TxRec:
+    """Source-side record of one in-flight frame (for digest confirmation
+    and NACK retransmission)."""
+
+    name: str
+    digest: bytes
+    handle: object          # IfuncHandle (None for raw-frame sends)
+    slim: bool
 
 
 @dataclass
@@ -34,6 +63,7 @@ class RingState:
     mailbox: object
     channel: object
     tail: int = 0            # source-side produce index
+    inflight: dict = field(default_factory=dict)   # abs slot -> _TxRec
 
     @property
     def credits(self) -> int:
@@ -47,9 +77,12 @@ class Peer:
     target_ctx: object
     target_args: dict
     rings: list[RingState] = field(default_factory=list)
+    cached: set = field(default_factory=set)       # digests confirmed cached
+    resend: deque = field(default_factory=deque)   # FULL msgs queued post-NACK
     stats: dict = field(default_factory=lambda: {
         "sent": 0, "bytes": 0, "delivered": 0, "rejected": 0,
-        "backpressure": 0, "inflight_polls": 0})
+        "backpressure": 0, "inflight_polls": 0,
+        "slim_sent": 0, "nacks": 0, "resent": 0})
 
     @property
     def credits(self) -> int:
@@ -58,8 +91,10 @@ class Peer:
     def summary(self) -> str:
         s = self.stats
         return (f"{self.name:<12s} fabric={self.fabric.kind:<9s} "
-                f"sent={s['sent']:<4d} delivered={s['delivered']:<4d} "
-                f"rejected={s['rejected']:<3d} backpressure={s['backpressure']:<3d} "
+                f"sent={s['sent']:<4d} slim={s['slim_sent']:<4d} "
+                f"delivered={s['delivered']:<4d} "
+                f"rejected={s['rejected']:<3d} nacks={s['nacks']:<3d} "
+                f"backpressure={s['backpressure']:<3d} "
                 f"credits={self.credits}")
 
 
@@ -71,7 +106,7 @@ class Dispatcher:
         self.engine = engine if engine is not None else ProgressEngine()
         self.peers: dict[str, Peer] = {}
         self._rr = 0             # fairness cursor over (peer, ring) lanes
-        self.stats = {"sent": 0, "polled": 0, "poll_rounds": 0}
+        self.stats = {"sent": 0, "polled": 0, "poll_rounds": 0, "nacks": 0}
 
     # -- topology -----------------------------------------------------------
 
@@ -96,27 +131,168 @@ class Dispatcher:
         return peer
 
     def remove_peer(self, name: str) -> None:
-        self.peers.pop(name, None)
+        peer = self.peers.pop(name, None)
+        if peer is not None:
+            for r in peer.rings:
+                self.engine.release_slab(r.channel)
 
     # -- source side --------------------------------------------------------
+
+    def _slim_ok(self, peer: Peer, lib) -> bool:
+        """SLIM-eligible: device lanes link at mailbox-open time (code never
+        travels); host lanes need a confirmed FULL delivery of this digest."""
+        if peer.fabric.kind == "device":
+            return True
+        return lib.code_digest in peer.cached
+
+    def _check_full_fits(self, lane: RingState, lib, payload_len: int) -> None:
+        """A SLIM frame must stay FULL-retransmittable: if the target evicts
+        the digest, the NACK fallback rebuilds code + payload into this same
+        ring — reject at send time rather than crash a later drain."""
+        need = F.HEADER_LEN + len(lib.code) + payload_len + F.TRAILER_LEN
+        if need > lane.mailbox.slot_size:
+            raise TransportError(
+                f"SLIM frame's FULL fallback ({need}B) exceeds slot "
+                f"{lane.mailbox.slot_size}B — NACK retransmit impossible")
+
+    def _pick_lane(self, peer: Peer, ring: int | None) -> RingState | None:
+        lanes = peer.rings if ring is None else [peer.rings[ring]]
+        lane = max(lanes, key=lambda r: r.credits)
+        return lane if lane.credits > 0 else None
+
+    def _post_view(self, peer: Peer, lane: RingState, view, rec, on_complete):
+        self.engine.post(lane.channel, view, lane.tail, peer=peer.name,
+                         on_complete=on_complete)
+        if rec is not None and peer.fabric.kind != "device":
+            lane.inflight[lane.tail] = rec
+            if len(lane.inflight) > 2 * lane.mailbox.n_slots:
+                # target sweeps outside our poll loop (e.g. WorkerAgent):
+                # drop records for slots already consumed elsewhere
+                low = lane.mailbox.consumed
+                for s in [s for s in lane.inflight if s < low]:
+                    del lane.inflight[s]
+        lane.tail += 1
+        peer.stats["sent"] += 1
+        peer.stats["bytes"] += len(view)
+        if rec is not None and rec.slim:
+            peer.stats["slim_sent"] += 1
+        self.stats["sent"] += 1
+
+    def _slab_post(self, peer: Peer, lane: RingState, frame, rec,
+                   on_complete=None) -> None:
+        """Stage a ready frame into the lane's slab cell and post it."""
+        slab = self.engine.slab_slot(lane.channel, lane.tail)
+        n = len(frame)
+        if n > len(slab):
+            raise TransportError(
+                f"frame {n}B exceeds slot {lane.mailbox.slot_size}B")
+        slab[:n] = frame
+        self._post_view(peer, lane, slab[:n], rec, on_complete)
+
+    def _flush_resends(self, peer: Peer) -> bool:
+        """Post queued FULL retransmits (NACK fallback) ahead of any new
+        traffic; False while the queue cannot drain.
+
+        Retransmits are held until the peer's rings are quiescent (every
+        in-flight frame resolved): an eviction NACKs *all* in-flight SLIM
+        frames of the digest, but the NACKs surface one poll at a time —
+        posting the first rebuild (or any newer frame) before the rest have
+        reported would reorder execution at the target.  Waiting for
+        quiescence makes the resend queue a faithful replay of ring order,
+        so per-peer FIFO survives eviction storms."""
+        if not peer.resend:
+            return True
+        if any(r.tail != r.mailbox.consumed for r in peer.rings):
+            return False                       # storm not fully observed yet
+        while peer.resend:
+            lane = self._pick_lane(peer, None)
+            if lane is None:
+                return False
+            msg = peer.resend.popleft()
+            self._slab_post(peer, lane, msg.frame,
+                            _TxRec(msg.handle.lib.name,
+                                   msg.handle.lib.code_digest,
+                                   msg.handle, slim=False))
+            peer.stats["resent"] += 1
+        return True
 
     def send(self, peer_name: str, msg, *, ring: int | None = None,
              on_complete=None) -> bool:
         """Post one ifunc message to a peer.  Returns False (and counts a
-        backpressure event) when every eligible ring is out of credits."""
+        backpressure event) when every eligible ring is out of credits.
+
+        The frame is staged into the engine's slab cell for the chosen ring
+        slot; if the peer is known to have this handle's code digest cached,
+        the code section is elided on the fly (SLIM framing)."""
         peer = self.peers[peer_name]
-        frame = msg.frame if hasattr(msg, "frame") else msg
-        lanes = peer.rings if ring is None else [peer.rings[ring]]
-        lane = max(lanes, key=lambda r: r.credits)
-        if lane.credits <= 0:
+        if not self._flush_resends(peer):
             peer.stats["backpressure"] += 1
             return False
-        self.engine.post(lane.channel, frame, lane.tail, peer=peer.name,
-                         on_complete=on_complete)
-        lane.tail += 1
-        peer.stats["sent"] += 1
-        peer.stats["bytes"] += len(frame)
-        self.stats["sent"] += 1
+        lane = self._pick_lane(peer, ring)
+        if lane is None:
+            peer.stats["backpressure"] += 1
+            return False
+        frame = msg.frame if hasattr(msg, "frame") else msg
+        handle = getattr(msg, "handle", None)
+        if handle is None:                       # raw frame: no slim protocol
+            self._slab_post(peer, lane, frame, None, on_complete)
+            return True
+        lib = handle.lib
+        already_slim = bool(getattr(msg, "slim", False))
+        want_slim = self._slim_ok(peer, lib)
+        rec = _TxRec(lib.name, lib.code_digest, handle,
+                     already_slim or want_slim)
+        if rec.slim and peer.fabric.kind != "device":
+            self._check_full_fits(lane, lib, len(msg.payload_view))
+        if want_slim and not already_slim:
+            # elide the code section while staging — the slab cell is the
+            # only buffer the SLIM frame ever occupies
+            slab = self.engine.slab_slot(lane.channel, lane.tail)
+            n = F.pack_frame_into(slab, lib.name, b"", msg.payload_view,
+                                  lib.kind, digest=lib.code_digest, slim=True)
+            self._post_view(peer, lane, slab[:n], rec, on_complete)
+        else:
+            self._slab_post(peer, lane, frame, rec, on_complete)
+        return True
+
+    def send_ifunc(self, peer_name: str, handle, source_args,
+                   source_args_size: int | None = None, *,
+                   ring: int | None = None, on_complete=None) -> bool:
+        """Fully zero-copy send: skips IfuncMsg materialization — the
+        payload codec writes directly into the peer's slab cell and the
+        header is sealed around it in place.  SLIM framing is applied
+        automatically once the peer's cache is known-warm."""
+        peer = self.peers[peer_name]
+        if not self._flush_resends(peer):
+            peer.stats["backpressure"] += 1
+            return False
+        lane = self._pick_lane(peer, ring)
+        if lane is None:
+            peer.stats["backpressure"] += 1
+            return False
+        lib = handle.lib
+        if source_args_size is None:
+            try:
+                source_args_size = len(source_args)
+            except TypeError:
+                source_args_size = 0
+        max_size = int(lib.payload_get_max_size(source_args, source_args_size))
+        slim = self._slim_ok(peer, lib)
+        if slim and peer.fabric.kind != "device":
+            self._check_full_fits(lane, lib, max_size)
+        code = b"" if slim else lib.code
+        slab = self.engine.slab_slot(lane.channel, lane.tail)
+        if F.HEADER_LEN + len(code) + max_size + F.TRAILER_LEN > len(slab):
+            raise TransportError(
+                f"frame would exceed slot {lane.mailbox.slot_size}B")
+        pv = F.frame_payload_view(slab, len(code), max_size)
+        used = lib.payload_init(pv, max_size, source_args, source_args_size)
+        used = max_size if used in (None, 0) else int(used)
+        n = F.seal_frame(slab, lib.name, code, lib.kind, used,
+                         digest=lib.code_digest, slim=slim)
+        self._post_view(peer, lane, slab[:n],
+                        _TxRec(lib.name, lib.code_digest, handle, slim),
+                        on_complete)
         return True
 
     def broadcast(self, make_msg) -> int:
@@ -134,6 +310,15 @@ class Dispatcher:
     def _lanes(self) -> list[tuple[Peer, RingState]]:
         return [(p, r) for p in self.peers.values() for r in p.rings]
 
+    def _rebuild_full(self, lane: RingState, abs_slot: int, rec: _TxRec):
+        """NACK fallback: the SLIM frame still sits in the source slab cell
+        for its slot (the credit only just returned, nothing has overwritten
+        it); hand it to ``ifunc_msg_to_full`` to restore the code section."""
+        from repro.core import api as A
+
+        view = self.engine.slab_slot(lane.channel, abs_slot)
+        return A.ifunc_msg_to_full(A.IfuncMsg(rec.handle, view, slim=True))
+
     def poll(self, budget: int | None = None) -> int:
         """Drain up to ``budget`` messages total across all peers' rings,
         deficit-round-robin.  Each round visits every lane once, consuming
@@ -141,7 +326,11 @@ class Dispatcher:
         poller), starting one lane past last round's first server.  A
         device-mesh lane is the one exception: its sweep is a single
         compiled pass and may yield several messages at once — they all
-        count against ``budget``, so the cap can overshoot by one sweep."""
+        count against ``budget``, so the cap can overshoot by one sweep.
+
+        OK deliveries confirm the target's code cache for the frame's
+        digest (enabling SLIM framing); NACK_UNCACHED consumes the slot,
+        un-confirms the digest, and queues a FULL retransmit."""
         from repro.core.api import Status
 
         lanes = self._lanes()
@@ -157,17 +346,39 @@ class Dispatcher:
                 peer, lane = lanes[(start + k) % len(lanes)]
                 if budget is not None and done >= budget:
                     break
+                track = peer.fabric.kind != "device"
+                slot = lane.mailbox.head
                 sts = lane.mailbox.sweep(peer.target_ctx, peer.target_args,
                                          budget=1)
                 for st in sts:
+                    rec = None
+                    if st in (Status.OK, Status.REJECTED,
+                              Status.NACK_UNCACHED):
+                        rec = lane.inflight.pop(slot, None) if track else None
+                        slot += 1
                     if st == Status.OK:
                         peer.stats["delivered"] += 1
                         done += 1
                         progressed = True
+                        if rec is not None:
+                            peer.cached.add(rec.digest)
                     elif st == Status.REJECTED:
                         peer.stats["rejected"] += 1
                         done += 1
                         progressed = True
+                    elif st == Status.NACK_UNCACHED:
+                        peer.stats["nacks"] += 1
+                        self.stats["nacks"] += 1
+                        progressed = True
+                        if rec is not None and rec.handle is not None:
+                            peer.cached.discard(rec.digest)
+                            peer.resend.append(
+                                self._rebuild_full(lane, slot - 1, rec))
+                        else:
+                            # a SLIM frame we have no record/handle for (raw
+                            # send): nothing to rebuild — surface the loss
+                            peer.stats["nack_lost"] = (
+                                peer.stats.get("nack_lost", 0) + 1)
                     elif st == Status.IN_PROGRESS:
                         peer.stats["inflight_polls"] += 1
             self._rr += 1
@@ -176,13 +387,18 @@ class Dispatcher:
 
     def drain(self, max_rounds: int = 64) -> int:
         """flush + poll until quiescent: no outstanding puts, no consumable
-        frames.  Returns total messages delivered/rejected."""
+        frames, no queued retransmits.  Returns total messages
+        delivered/rejected (NACK-retransmitted frames count once, when the
+        FULL retry lands)."""
         total = 0
         for _ in range(max_rounds):
+            for p in self.peers.values():
+                self._flush_resends(p)
             self.engine.progress()
             n = self.poll()
             total += n
-            if n == 0 and self.engine.outstanding() == 0:
+            if (n == 0 and self.engine.outstanding() == 0
+                    and not any(p.resend for p in self.peers.values())):
                 break
         return total
 

@@ -58,7 +58,15 @@ class Mailbox:
 
     def sweep(self, ctx, target_args, budget: int | None = None) -> list:
         """Drain up to ``budget`` slots through ``poll_ifunc``; returns the
-        list of per-slot Status values observed (OK/REJECTED advance head)."""
+        list of per-slot Status values observed.  OK/REJECTED/NACK_UNCACHED
+        all consume the slot and advance head (a NACKed SLIM frame is
+        cleared — the retransmit arrives as a fresh FULL frame).
+
+        Note: the *recovery* half of the NACK protocol (rebuilding and
+        requeueing the FULL frame) lives in ``Dispatcher.poll``; a caller
+        sweeping a mailbox directly must either send FULL frames only (the
+        default until a dispatcher confirms the peer) or handle
+        NACK_UNCACHED in the returned statuses itself."""
         from repro.core import api as A
 
         out = []
@@ -66,7 +74,7 @@ class Mailbox:
         for _ in range(budget):
             st = A.poll_ifunc(ctx, self.slot_view(self.head), None, target_args)
             out.append(st)
-            if st in (A.Status.OK, A.Status.REJECTED):
+            if st in (A.Status.OK, A.Status.REJECTED, A.Status.NACK_UNCACHED):
                 self.head += 1
                 self.consumed += 1
             else:
@@ -189,9 +197,8 @@ class RdmaFabric(Fabric):
 @dataclass
 class _PendingLoopPut:
     buf: bytearray
-    off: int
-    data: bytes
-    delivered: int
+    off: int            # where the withheld tail lands at flush
+    tail: bytes
 
 
 class LoopbackMailbox(Mailbox):
@@ -214,22 +221,23 @@ class LoopbackChannel(Channel):
 
     def put(self, data, slot: int, *, deliver_bytes: int | None = None) -> None:
         mb = self.mailbox
-        if len(data) > mb.slot_size:
+        nd = len(data)
+        if nd > mb.slot_size:
             raise TransportError(
-                f"frame {len(data)}B exceeds slot {mb.slot_size}B")
+                f"frame {nd}B exceeds slot {mb.slot_size}B")
         off = (slot % mb.n_slots) * mb.slot_size
-        data = bytes(data)
-        n = len(data) if deliver_bytes is None else min(deliver_bytes, len(data))
-        mb.buf[off:off + n] = data[:n]
-        if n < len(data):
-            self._pending.append(_PendingLoopPut(mb.buf, off, data, n))
+        mv = data if isinstance(data, memoryview) else memoryview(data)
+        n = nd if deliver_bytes is None else min(deliver_bytes, nd)
+        mb.buf[off:off + n] = mv[:n]
+        if n < nd:
+            self._pending.append(_PendingLoopPut(mb.buf, off + n, bytes(mv[n:])))
             self.stats["partial"] += 1
         self.stats["puts"] += 1
-        self.stats["bytes"] += len(data)
+        self.stats["bytes"] += nd
 
     def flush(self) -> None:
         for p in self._pending:
-            p.buf[p.off + p.delivered:p.off + len(p.data)] = p.data[p.delivered:]
+            p.buf[p.off:p.off + len(p.tail)] = p.tail
         self._pending.clear()
         self.stats["flushes"] += 1
 

@@ -14,6 +14,14 @@ in-flight window a *first-class state* instead of a test knob:
 
 Completion callbacks (callback-on-flush semantics) fire when the handle
 completes, in post order per channel.
+
+The engine also owns the *send slabs*: one preallocated staging buffer per
+channel, one slot-sized cell per ring slot.  The dispatcher packs frames
+directly into slab cells (``frame.pack_frame_into``/``seal_frame``) and
+posts the resulting memoryview — no per-message bytearray is ever
+allocated on the send path.  A cell is stable exactly as long as its ring
+slot's credit is outstanding, which is precisely the lifetime an in-flight
+put needs.
 """
 
 from __future__ import annotations
@@ -62,9 +70,43 @@ class ProgressEngine:
         self.completion_queue: deque[Completion] = deque()
         self._outstanding: dict[int, list[TxHandle]] = {}  # id(channel) -> handles
         self._channels: dict[int, Channel] = {}
+        self._slabs: dict[int, tuple[bytearray, int, int]] = {}
         self._seq = 0
         self.stats = {"posted": 0, "completed": 0, "flushes": 0,
-                      "auto_flushes": 0, "callbacks": 0}
+                      "auto_flushes": 0, "callbacks": 0, "slab_bytes": 0}
+
+    # -- send slabs ---------------------------------------------------------
+
+    #: extra bytes per slab cell beyond the mailbox slot size — covers
+    #: backends (device mesh) whose wire-frame header is larger than their
+    #: on-target slot encoding.  Slot-size enforcement stays with the
+    #: channel's put; the slab is pure staging capacity.
+    SLAB_HEADROOM = 256
+
+    def slab_slot(self, channel: Channel, slot: int) -> memoryview:
+        """Writable slot-sized staging cell for ``slot`` of the channel's
+        mailbox ring.  Allocated once per channel (n_slots x cell) and
+        reused for the channel's lifetime; the cell for a slot may be
+        rewritten only after that slot's credit returned, which makes it
+        stable across the in-flight window of the put it backs."""
+        key = id(channel)
+        ent = self._slabs.get(key)
+        if ent is None:
+            mb = channel.mailbox
+            cell = mb.slot_size + self.SLAB_HEADROOM
+            slab = bytearray(mb.n_slots * cell)
+            ent = (slab, mb.n_slots, cell)
+            self._slabs[key] = ent
+            self.stats["slab_bytes"] += len(slab)
+        slab, n_slots, cell = ent
+        off = (slot % n_slots) * cell
+        return memoryview(slab)[off:off + cell]
+
+    def release_slab(self, channel: Channel) -> None:
+        """Drop a removed peer's staging slab (see Dispatcher.remove_peer)."""
+        ent = self._slabs.pop(id(channel), None)
+        if ent is not None:
+            self.stats["slab_bytes"] -= len(ent[0])
 
     # -- source side --------------------------------------------------------
 

@@ -26,9 +26,12 @@ def test_roundtrip(name, code, payload, kind):
     assert c == code and p == payload
 
 
-@given(name=names, code=blobs, payload=blobs, flip=st.integers(0, 59))
+@given(name=names, code=blobs, payload=blobs,
+       flip=st.integers(0, F.SIGNAL_OFF + 3))
 @settings(max_examples=60, deadline=None)
 def test_header_corruption_detected(name, code, payload, flip):
+    """Every byte of the v2 header (incl. flags + digest) and the signal
+    itself is corruption-checked."""
     buf = F.pack_frame(name, code, payload, F.CodeKind.PYBC)
     orig = buf[flip]
     buf[flip] = orig ^ 0xFF

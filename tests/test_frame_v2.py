@@ -1,0 +1,334 @@
+"""Frame v2 cached fast path: SLIM frames, digest keying, NACK fallback,
+slab packing, vectorized fletcher32."""
+
+import hashlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - optional dep (see requirements.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (Context, Status, ifunc_msg_create, ifunc_msg_send_nbix,
+                        ifunc_msg_to_full, poll_ifunc, register_ifunc)
+from repro.core import frame as F
+from repro.transport import Dispatcher, ProgressEngine, RdmaFabric
+
+
+# ---------------------------------------------------------------------------
+# frame layer
+
+
+def test_full_slim_roundtrip():
+    code, payload = b"\x07" * 4096, b"payload-bytes"
+    digest = F.compute_digest(code)
+    full = F.pack_frame("f", code, payload, F.CodeKind.PYBC, digest=digest)
+    slim = F.pack_frame("f", code, payload, F.CodeKind.PYBC, digest=digest,
+                        slim=True)
+    hf, hs = F.peek_header(full), F.peek_header(slim)
+    assert not hf.is_slim and hs.is_slim
+    assert hf.digest == hs.digest == digest
+    assert hs.code_offset == hs.payload_offset == F.HEADER_LEN
+    assert len(slim) == len(full) - len(code)
+    cf, pf = F.frame_sections(full, hf)
+    cs, ps = F.frame_sections(slim, hs)
+    assert cf == code and len(cs) == 0
+    assert pf == payload and ps == payload
+    assert F.trailer_arrived(slim, hs)
+
+
+def test_frame_sections_are_views():
+    buf = F.pack_frame("v", b"c" * 64, b"p" * 64, F.CodeKind.PYBC)
+    hdr = F.peek_header(buf)
+    code, payload = F.frame_sections(buf, hdr)
+    assert isinstance(code, memoryview) and isinstance(payload, memoryview)
+    assert code.obj is buf and payload.obj is buf      # zero-copy
+
+
+def test_pack_into_slab_reuse():
+    slab = bytearray(8 << 10)
+    n1 = F.pack_frame_into(slab, "a", b"code1", b"payload1", F.CodeKind.PYBC)
+    h1 = F.peek_header(slab)
+    assert h1.frame_len == n1 and h1.name == "a"
+    n2 = F.pack_frame_into(slab, "b", b"xx", b"yy", F.CodeKind.HLO)
+    h2 = F.peek_header(slab)
+    assert h2.frame_len == n2 and h2.name == "b" and h2.code_kind == F.CodeKind.HLO
+    c, p = F.frame_sections(slab, h2)
+    assert c == b"xx" and p == b"yy"
+
+
+def test_seal_frame_two_phase():
+    """payload_init-style flow: write payload first, seal header around it."""
+    slab = memoryview(bytearray(4 << 10))
+    code = b"C" * 100
+    pv = F.frame_payload_view(slab, len(code), 64)
+    pv[:5] = b"hello"
+    n = F.seal_frame(slab, "tp", code, F.CodeKind.PYBC, 5)
+    hdr = F.peek_header(slab)
+    assert hdr.frame_len == n == F.HEADER_LEN + 100 + 5 + F.TRAILER_LEN
+    c, p = F.frame_sections(slab, hdr)
+    assert c == code and p == b"hello"
+
+
+def test_oversized_frame_rejected_by_slab():
+    with pytest.raises(F.FrameError):
+        F.pack_frame_into(bytearray(64), "x", b"c" * 100, b"", F.CodeKind.PYBC)
+
+
+def test_clear_frame_allocation_free_large():
+    """Frames larger than the shared zeros slab clear chunk-wise."""
+    big = F.pack_frame("big", b"", b"\xff" * (150 << 10), F.CodeKind.PYBC)
+    hdr = F.peek_header(big)
+    assert hdr.frame_len > len(F._ZEROS)
+    F.clear_frame(big, hdr)
+    assert not any(big)
+    assert F.peek_header(big) is None
+
+
+def test_fletcher32_deterministic_equivalence():
+    data = bytes(range(256)) * 33
+    for n in (0, 1, 2, 3, 127, 128, 129, 255, 256, 1000, len(data)):
+        chunk = data[:n]
+        assert F.fletcher32(chunk) == F.fletcher32_py(chunk), n
+        assert F.fletcher32(memoryview(chunk)) == F.fletcher32_py(chunk), n
+        assert F.fletcher32(bytearray(chunk)) == F.fletcher32_py(chunk), n
+
+
+@given(data=st.binary(min_size=0, max_size=5000))
+@settings(max_examples=80, deadline=None)
+def test_fletcher32_numpy_matches_pure(data):
+    """Property: the vectorized closed form equals the byte loop for every
+    input, odd lengths included."""
+    assert F.fletcher32(data) == F.fletcher32_py(data)
+
+
+# ---------------------------------------------------------------------------
+# api layer
+
+
+@pytest.fixture()
+def pair(lib_dir):
+    src = Context("src", lib_dir=lib_dir)
+    dst = Context("dst", lib_dir=lib_dir, link_mode="remote")
+    ep = src.nic.connect(dst.nic)
+    region = dst.nic.mem_map(1 << 20)
+    return src, dst, ep, region
+
+
+def test_msg_create_no_double_pack(pair, lib_dir):
+    """Shrinking payloads truncate in place: the frame is exactly sized and
+    the code section was written once (rle compresses 320 -> ~4 bytes)."""
+    src, _, _, _ = pair
+    h = register_ifunc(src, "rle_insert")
+    m = ifunc_msg_create(h, b"z" * 320)
+    hdr = F.peek_header(m.frame)
+    used = hdr.frame_len - hdr.payload_offset - F.TRAILER_LEN
+    assert used < 320                                  # really shrank
+    assert m.nbytes == hdr.frame_len                   # truncated, not padded
+    code, _ = F.frame_sections(m.frame, hdr)
+    assert bytes(code) == h.lib.code                   # code intact post-shrink
+
+
+def test_slim_msg_and_to_full(pair):
+    src, dst, ep, region = pair
+    h = register_ifunc(src, "counter_bump")
+    slim = ifunc_msg_create(h, b"abc", slim=True)
+    assert slim.slim and F.peek_header(slim.frame).is_slim
+    full = ifunc_msg_to_full(slim)
+    assert not full.slim
+    hdr = F.peek_header(full.frame)
+    code, payload = F.frame_sections(full.frame, hdr)
+    assert bytes(code) == h.lib.code and payload == b"abc"
+
+
+def test_slim_to_cold_target_nacks(pair):
+    """SLIM frame, nothing cached: consumed as NACK_UNCACHED, slot cleared,
+    nothing executed."""
+    src, dst, ep, region = pair
+    h = register_ifunc(src, "counter_bump")
+    m = ifunc_msg_create(h, b"x", slim=True)
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    targs = {}
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.NACK_UNCACHED
+    assert targs.get("count") is None
+    assert dst.stats["nacks"] == 1
+    assert dst.stats["last_nack"] == (h.name, h.digest)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.NO_MESSAGE
+
+
+def test_slim_hit_after_full_warmup(pair):
+    src, dst, ep, region = pair
+    h = register_ifunc(src, "counter_bump")
+    targs = {}
+    m = ifunc_msg_create(h, b"w")                      # FULL warms the cache
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+    m = ifunc_msg_create(h, b"x", slim=True)
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+    assert targs["count"] == 2
+    assert dst.stats["links"] == 1                     # no relink for SLIM
+
+
+def test_slim_hit_path_never_hashes(pair, monkeypatch):
+    """Acceptance: no sha256 call anywhere on the SLIM hit path."""
+    src, dst, ep, region = pair
+    h = register_ifunc(src, "counter_bump")
+    targs = {}
+    m = ifunc_msg_create(h, b"w")
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+
+    def boom(*a, **kw):
+        raise AssertionError("sha256 called on the cached hit path")
+
+    monkeypatch.setattr(hashlib, "sha256", boom)
+    for _ in range(3):
+        m = ifunc_msg_create(h, b"x", slim=True)       # digest precomputed
+        ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+        assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+    assert targs["count"] == 4
+
+
+def test_full_hit_path_never_hashes(pair, monkeypatch):
+    """FULL frames on a warm cache also dispatch by header digest alone."""
+    src, dst, ep, region = pair
+    h = register_ifunc(src, "counter_bump")
+    targs = {}
+    m = ifunc_msg_create(h, b"w")
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+
+    def boom(*a, **kw):
+        raise AssertionError("sha256 called on the cached hit path")
+
+    monkeypatch.setattr(hashlib, "sha256", boom)
+    m = ifunc_msg_create(h, b"x")
+    ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
+    assert targs["count"] == 2
+
+
+def test_digest_mismatch_rejected(pair):
+    """A FULL frame whose header digest does not match its code section is
+    rejected at link time (corrupt code or forged header)."""
+    src, dst, ep, region = pair
+    h = register_ifunc(src, "counter_bump")
+    frame = F.pack_frame(h.name, h.lib.code, b"x", h.lib.kind,
+                         digest=b"\xde\xad" * 8)       # wrong digest
+    ep.put_nbi(frame, region.base, region.rkey)
+    targs = {}
+    assert poll_ifunc(dst, region.view(), None, targs) == Status.REJECTED
+    assert "digest mismatch" in dst.stats["last_reject"]
+    assert targs.get("count") is None
+
+
+# ---------------------------------------------------------------------------
+# transport layer: negotiation, NACK fallback, slab send path
+
+
+def _mk(lib_dir, n_slots=4, slot_size=8 << 10):
+    src = Context("src", lib_dir=lib_dir)
+    d = Dispatcher(src, ProgressEngine(flush_threshold=64))
+    tgt = Context("p", lib_dir=lib_dir, link_mode="remote")
+    d.add_peer("p", RdmaFabric(), tgt, n_slots=n_slots, slot_size=slot_size,
+               target_args={"db": []})
+    return d, tgt
+
+
+def test_dispatcher_negotiates_slim(lib_dir):
+    """FULL until the delivery confirms the target cache, SLIM after —
+    for both send(msg) and the zero-copy send_ifunc."""
+    d, tgt = _mk(lib_dir)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    peer = d.peers["p"]
+    assert d.send("p", ifunc_msg_create(h, b"a"))
+    assert peer.stats["slim_sent"] == 0
+    d.drain()
+    assert h.digest in peer.cached                     # confirmed
+    assert d.send("p", ifunc_msg_create(h, b"b"))      # auto-converted
+    assert d.send_ifunc("p", h, b"c")                  # packed slim directly
+    d.drain()
+    assert peer.stats["slim_sent"] == 2 and peer.stats["nacks"] == 0
+    assert peer.target_args["db"] == [b"a", b"b", b"c"]
+    assert tgt.stats["links"] == 1
+
+
+def test_nack_triggers_full_retransmit(lib_dir):
+    """Simulated target cache eviction: the SLIM frame NACKs, the dispatcher
+    rebuilds the FULL frame from the slab payload and redelivers it."""
+    d, tgt = _mk(lib_dir)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    peer = d.peers["p"]
+    assert d.send_ifunc("p", h, b"first")
+    d.drain()
+    assert h.digest in peer.cached
+    tgt.link_cache.invalidate(h.name)                  # eviction / restart
+    assert d.send_ifunc("p", h, b"second")             # goes out SLIM
+    assert d.drain() == 1                              # NACK not counted; retry lands
+    assert peer.stats["nacks"] == 1 and peer.stats["resent"] == 1
+    assert tgt.stats["nacks"] == 1
+    assert peer.target_args["db"] == [b"first", b"second"]
+    assert h.digest in peer.cached                     # re-confirmed
+    assert not peer.resend
+    # steady state resumes SLIM
+    assert d.send_ifunc("p", h, b"third")
+    d.drain()
+    assert peer.target_args["db"][-1] == b"third"
+    assert peer.stats["nacks"] == 1
+
+
+def test_eviction_under_backlog_preserves_order(lib_dir):
+    """Multiple SLIM frames in flight when the cache evicts: all NACK, all
+    retransmit FULL, and the peer still sees send order."""
+    d, tgt = _mk(lib_dir, n_slots=8)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    peer = d.peers["p"]
+    assert d.send_ifunc("p", h, b"w")
+    d.drain()
+    tgt.link_cache.invalidate(h.name)
+    recs = [bytes([65 + i]) * 4 for i in range(4)]
+    for r in recs:
+        assert d.send_ifunc("p", h, r)                 # all SLIM, all doomed
+    d.drain()
+    assert peer.stats["nacks"] == 4 and peer.stats["resent"] == 4
+    assert peer.target_args["db"] == [b"w"] + recs
+    assert peer.credits == 8
+
+
+def test_slim_send_requires_retransmittable_full(lib_dir):
+    """A SLIM frame whose FULL fallback could not fit the ring slot is
+    refused at send time (otherwise a later eviction NACK would wedge the
+    peer's resend queue)."""
+    from repro.transport import TransportError
+
+    d, _ = _mk(lib_dir, slot_size=8 << 10)
+    h = register_ifunc(d.src_ctx, "bench_hot")         # ~256 KiB code section
+    d.peers["p"].cached.add(h.digest)                  # pretend it's confirmed
+    with pytest.raises(TransportError, match="FULL fallback"):
+        d.send_ifunc("p", h, b"tiny")
+    with pytest.raises(TransportError, match="FULL fallback"):
+        d.send("p", ifunc_msg_create(h, b"tiny", slim=True))
+
+
+def test_send_path_is_slab_backed(lib_dir):
+    """Acceptance: frames reach the channel as memoryviews into the
+    engine-owned slab — no per-message bytearray on the send path."""
+    d, _ = _mk(lib_dir)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    lane = d.peers["p"].rings[0]
+    seen = []
+    orig_put = lane.channel.put
+
+    def spy(data, slot, **kw):
+        seen.append(type(data))
+        return orig_put(data, slot, **kw)
+
+    lane.channel.put = spy
+    d.send("p", ifunc_msg_create(h, b"via-send"))
+    d.send_ifunc("p", h, b"via-send-ifunc")
+    d.drain()
+    assert seen == [memoryview, memoryview]
+    assert d.engine.stats["slab_bytes"] > 0
+    assert d.peers["p"].target_args["db"] == [b"via-send", b"via-send-ifunc"]
