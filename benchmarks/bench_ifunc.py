@@ -281,6 +281,83 @@ def bench_fig5_cached(n_iters: int = 200, sizes: list | None = None) -> list[dic
     return rows
 
 
+def bench_graph_placement(n_iters: int = 60,
+                          shard_edges: tuple = (1024, 8192, 65536)) -> list[dict]:
+    """'fig_graph': the placement engine's three options, priced for real.
+
+    Per shard size, one relax task (16-vertex frontier, constant degree 16)
+    runs three ways:
+
+    * ``migrate`` — graph_relax ships to the shard's owner (SLIM after the
+      warmup FULL), only the frontier + updates cross the wire;
+    * ``fetch``   — graph_fetch pulls the whole shard back as a reply,
+      relax runs at the source (each iteration re-fetches: the cold case);
+    * ``local``   — the shard was fetched once, relax reuses the replica.
+
+    The shard is CSR-indexed (``tasks.graph``), so the relax *compute* is
+    O(frontier degree) and identical everywhere, while a fetch moves
+    O(edges) bytes — the migrate-vs-fetch gap must widen with shard size,
+    which is exactly the cost-model assumption ``check_bench.py`` asserts
+    on the largest size.
+    """
+    import numpy as np
+
+    from repro.tasks import TaskRuntime
+    from repro.tasks.graph import local_relax, pack_csr_shard
+    from repro.transport import LoopbackFabric, ProgressEngine
+
+    libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
+    rng = np.random.default_rng(3)
+    frontier = [(int(i), 0.5) for i in range(16)]
+    DEG = 16
+
+    rows = []
+    for ne in shard_edges:
+        nv = ne // DEG                  # constant out-degree: frontier work
+        edges = [(u, int(rng.integers(0, 1 << 20)),
+                  float(rng.uniform(0.1, 1)))
+                 for u in range(nv) for _ in range(DEG)]
+        packed = pack_csr_shard(0, nv, edges)
+        src = Context("src", lib_dir=libdir)
+        rt = TaskRuntime(src, engine=ProgressEngine(flush_threshold=8),
+                         default_timeout=60.0)
+        store = {"shards": {0: packed}}
+        rt.add_peer("owner", LoopbackFabric(),
+                    Context("owner", lib_dir=libdir, link_mode="remote"),
+                    n_slots=8, slot_size=max(64 << 10, len(packed) + 4096),
+                    target_args=store)
+        h_relax = register_ifunc(src, "graph_relax")
+        h_fetch = register_ifunc(src, "graph_fetch")
+        nb = len(packed)
+        # warm both verbs: link at the target, confirm digests (SLIM after)
+        rt.submit("owner", h_relax, {"sid": 0, "frontier": frontier}).result()
+        blob = rt.submit("owner", h_fetch, {"sid": 0}).result()
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            rt.submit("owner", h_relax,
+                      {"sid": 0, "frontier": frontier}).result()
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "fig_graph", "api": "migrate", "size": nb,
+                     "cell": f"migrate/{nb}B", "us": dt * 1e6,
+                     "msgs_per_s": 1 / dt})
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            blob = rt.submit("owner", h_fetch, {"sid": 0}).result()
+            local_relax(blob, frontier)
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "fig_graph", "api": "fetch", "size": nb,
+                     "cell": f"fetch/{nb}B", "us": dt * 1e6,
+                     "msgs_per_s": 1 / dt})
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            local_relax(blob, frontier)
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "fig_graph", "api": "local", "size": nb,
+                     "cell": f"local/{nb}B", "us": dt * 1e6,
+                     "msgs_per_s": 1 / dt})
+    return rows
+
+
 def bench_slab_pack(n_iters: int = 2000, code_len: int = 16 << 10,
                     payload_len: int = 4 << 10) -> list[dict]:
     """Send-path staging: the old pipeline (fresh bytearray per frame, then

@@ -4,11 +4,15 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
 
 1. the file parses and every row matches the stable schema
    ``{bench: str, cell: str, us: float, msgs_per_s?: float}``;
-2. the ``fig5_cached`` rows exist and, per payload size, the SLIM
-   (cached) cell is strictly faster than the FULL re-injection cell —
-   the cached fast path must actually be a fast path.
+2. (BENCH_PR2 / any file with fig5 rows) the ``fig5_cached`` rows exist
+   and, per payload size, the SLIM (cached) cell is strictly faster than
+   the FULL re-injection cell — the cached fast path must actually be a
+   fast path;
+3. (BENCH_PR3 / any file with fig_graph rows) at the *largest* shard
+   size, migrate-code-to-data beats fetch-data-to-host — the locality
+   bet the placement engine's cost model is built on.
 
-    PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json]
+    PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
 
 from __future__ import annotations
@@ -16,6 +20,14 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
+
+
+def _cells(rows: list[dict], bench: str,
+           prefix: str) -> tuple[dict[str, float], list[int]]:
+    cells = {r["cell"]: r["us"] for r in rows if r["bench"] == bench}
+    sizes = sorted(int(c.split("/")[1][:-1]) for c in cells
+                   if c.startswith(prefix + "/"))
+    return cells, sizes
 
 
 def check(path: pathlib.Path) -> int:
@@ -30,21 +42,36 @@ def check(path: pathlib.Path) -> int:
         assert isinstance(r.get("us"), (int, float)), r
         if "msgs_per_s" in r:
             assert isinstance(r["msgs_per_s"], (int, float)), r
-    fig5 = {r["cell"]: r["us"] for r in rows if r["bench"] == "fig5_cached"}
-    sizes = sorted(int(c.split("/")[1][:-1]) for c in fig5
-                   if c.startswith("full/"))
-    assert sizes, "no fig5_cached full/* rows"
+
+    fig5, sizes = _cells(rows, "fig5_cached", "full")
+    if "PR2" in path.name:
+        assert sizes, "no fig5_cached full/* rows"
     for s in sizes:
         full, slim = fig5[f"full/{s}B"], fig5[f"slim/{s}B"]
-        ratio = full / slim
         print(f"fig5_cached {s:>7}B: full={full:8.2f}us slim={slim:8.2f}us "
-              f"-> {ratio:.2f}x")
+              f"-> {full / slim:.2f}x")
         assert slim < full, (
             f"SLIM cell not faster than FULL at {s}B ({slim} >= {full})")
+
+    graph, gsizes = _cells(rows, "fig_graph", "migrate")
+    if "PR3" in path.name:
+        assert gsizes, "no fig_graph migrate/* rows"
+    for s in gsizes:
+        mig, fet = graph[f"migrate/{s}B"], graph[f"fetch/{s}B"]
+        print(f"fig_graph  {s:>8}B: migrate={mig:8.2f}us fetch={fet:8.2f}us "
+              f"local={graph.get(f'local/{s}B', float('nan')):8.2f}us "
+              f"-> {fet / mig:.2f}x")
+    if gsizes:
+        big = gsizes[-1]
+        mig, fet = graph[f"migrate/{big}B"], graph[f"fetch/{big}B"]
+        assert mig < fet, (
+            f"migrate not faster than fetch at the largest shard "
+            f"({big}B: {mig} >= {fet}) — moving code must beat moving data")
+
     print(f"{path.name}: {len(rows)} rows OK")
     return 0
 
 
 if __name__ == "__main__":
-    p = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_PR2.json")
-    sys.exit(check(p))
+    paths = [pathlib.Path(p) for p in (sys.argv[1:] or ["BENCH_PR2.json"])]
+    sys.exit(max(check(p) for p in paths))

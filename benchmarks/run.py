@@ -3,6 +3,8 @@
   fig3_latency     ifunc vs UCX-AM one-way latency across payload sizes
   fig4_throughput  ifunc vs UCX-AM message rate across payload sizes
   fig5_cached      FULL re-injection vs SLIM cached invocation vs AM
+  fig_graph        task placement: migrate-code-to-data vs fetch-data-to-
+                   host vs run-local across shard sizes
   s34_link_cost    first-arrival link+verify vs hash-table-cached dispatch
   tierB_uvm        device-tier μVM injected-program execution
   micro_slab       fresh-bytearray vs slab in-place frame packing
@@ -10,13 +12,15 @@
   roofline         summary of the dry-run roofline terms (if artifacts exist)
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
-normalized rows to ``BENCH_PR2.json`` at the repo root in the stable
-schema ``{bench, cell, us, msgs_per_s?}`` so future PRs can diff the
-trajectory; a full run additionally keeps the raw rows in
-experiments/bench_results.json.
+normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?}``
+so future PRs can diff the trajectory: transport/cached-fast-path rows to
+``BENCH_PR2.json``, task-placement (``fig_graph``) rows to
+``BENCH_PR3.json``, both at the repo root; a full run additionally keeps
+the raw rows in experiments/bench_results.json.
 
-``--quick`` (the CI smoke mode) runs only the cached-fast-path suite
-(fig5_cached + the two microbenches) with reduced iteration counts.
+``--quick`` (the CI smoke mode) runs the cached-fast-path suite
+(fig5_cached + the two microbenches) plus fig_graph with reduced
+iteration counts.
 """
 
 from __future__ import annotations
@@ -34,6 +38,8 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
 BENCH_OUT = ROOT / "BENCH_PR2.json"
+BENCH_OUT3 = ROOT / "BENCH_PR3.json"
+PR3_BENCHES = {"fig_graph"}     # task-runtime rows live in their own file
 
 
 def _emit(rows: list[dict]) -> None:
@@ -95,6 +101,13 @@ def fig5_cached(quick: bool = False) -> list[dict]:
     return B.bench_fig5_cached()
 
 
+def fig_graph(quick: bool = False) -> list[dict]:
+    if quick:
+        return B.bench_graph_placement(n_iters=20,
+                                       shard_edges=(1024, 65536))
+    return B.bench_graph_placement()
+
+
 def s34_link_cost() -> list[dict]:
     return B.bench_link_cost()
 
@@ -137,31 +150,37 @@ def main() -> None:
     args = ap.parse_args()
     if args.quick:
         suites = [lambda: fig5_cached(quick=True),
+                  lambda: fig_graph(quick=True),
                   lambda: micro_slab(quick=True),
                   lambda: micro_checksum(quick=True)]
     else:
-        suites = [fig3_latency, fig4_throughput, fig5_cached, s34_link_cost,
-                  tierB_uvm, transport_fanout, micro_slab, micro_checksum,
-                  roofline_summary]
+        suites = [fig3_latency, fig4_throughput, fig5_cached, fig_graph,
+                  s34_link_cost, tierB_uvm, transport_fanout, micro_slab,
+                  micro_checksum, roofline_summary]
     all_rows = []
     for fn in suites:
         rows = fn()
         _emit(rows)
         all_rows += rows
     # merge by (bench, cell): a --quick run refreshes only the cells it
-    # measured and preserves the rest of a committed full-run trajectory
-    merged: dict[tuple, dict] = {}
-    if BENCH_OUT.exists():
-        try:
-            for r in json.loads(BENCH_OUT.read_text()):
-                merged[(r["bench"], r["cell"])] = r
-        except (ValueError, KeyError, TypeError):
-            merged = {}                        # unparseable: start fresh
-    for r in _normalize(all_rows):
-        merged[(r["bench"], r["cell"])] = r
-    BENCH_OUT.write_text(json.dumps(list(merged.values()), indent=1))
-    print(f"# {len(all_rows)} rows measured, {len(merged)} in trajectory "
-          f"-> {BENCH_OUT}", file=sys.stderr)
+    # measured and preserves the rest of a committed full-run trajectory;
+    # task-runtime benches persist to their own PR3 file
+    for path, mine in ((BENCH_OUT, lambda b: b not in PR3_BENCHES),
+                       (BENCH_OUT3, lambda b: b in PR3_BENCHES)):
+        merged: dict[tuple, dict] = {}
+        if path.exists():
+            try:
+                for r in json.loads(path.read_text()):
+                    merged[(r["bench"], r["cell"])] = r
+            except (ValueError, KeyError, TypeError):
+                merged = {}                    # unparseable: start fresh
+        rows = [r for r in _normalize(all_rows) if mine(r["bench"])]
+        for r in rows:
+            merged[(r["bench"], r["cell"])] = r
+        if merged:
+            path.write_text(json.dumps(list(merged.values()), indent=1))
+            print(f"# {len(rows)} rows measured, {len(merged)} in trajectory "
+                  f"-> {path}", file=sys.stderr)
     if not args.quick:
         OUT.parent.mkdir(parents=True, exist_ok=True)
         OUT.write_text(json.dumps(all_rows, indent=1))

@@ -100,4 +100,25 @@ dispatcher.print_stats()
 eng = dispatcher.engine.stats
 print(f"progress engine: posted={eng['posted']} completed={eng['completed']} "
       f"auto_flushes={eng['auto_flushes']}")
+
+# CI contract: any peer reporting rejects, unrecovered NACKs (nack_lost or
+# a resend that never flushed), or undrained traffic fails the smoke run
+# with a nonzero exit instead of printing a green line over a red run.
+failures = []
+for name, peer in dispatcher.peers.items():
+    s = peer.stats
+    if s["rejected"]:
+        failures.append(f"{name}: {s['rejected']} rejected frames")
+    if s.get("nack_lost", 0):
+        failures.append(f"{name}: {s['nack_lost']} unrecoverable NACKs")
+    if s["nacks"] > s["resent"]:
+        failures.append(f"{name}: {s['nacks']} NACKs but only "
+                        f"{s['resent']} FULL retransmits")
+    if peer.resend:
+        failures.append(f"{name}: {len(peer.resend)} retransmits undrained")
+if dispatcher.engine.outstanding():
+    failures.append(f"{dispatcher.engine.outstanding()} puts never flushed")
+if failures:
+    print("MULTI_PEER_FAILED:" + "; ".join(failures))
+    raise SystemExit(1)
 print("MULTI_PEER_OK")

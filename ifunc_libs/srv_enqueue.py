@@ -19,6 +19,9 @@ def srv_enqueue_main(payload, payload_size, target_args):
     if q is None:
         q = target_args["queue"] = []
     q.append({"rid": rid, "max_new": max_new, "prompt": toks})
+    # admission ack: travels back as the reply frame resolving the
+    # frontend's submit() future (request/response serving)
+    target_args["result"] = {"rid": rid, "queued": True, "depth": len(q)}
 
 
 def srv_enqueue_payload_get_max_size(source_args, source_args_size):

@@ -7,7 +7,7 @@ from repro.core.api import (  # noqa: F401
     Context, IfuncHandle, IfuncMsg, Status,
     register_ifunc, deregister_ifunc,
     ifunc_msg_create, ifunc_msg_free, ifunc_msg_send_nbix, ifunc_msg_to_full,
-    poll_ifunc, poll_ring,
+    poll_ifunc, poll_ring, submit,
 )
 from repro.core.active_message import AmContext, AmEndpoint  # noqa: F401
 from repro.core.codegen import SymbolSpace, assemble, LinkError  # noqa: F401

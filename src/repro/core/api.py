@@ -93,6 +93,8 @@ class IfuncMsg:
     handle: IfuncHandle
     frame: bytearray
     slim: bool = False
+    corr_id: int = 0       # mirrors the sealed header field so the send
+    #                        path never re-parses the header to learn it
 
     @property
     def nbytes(self) -> int:
@@ -123,7 +125,7 @@ def deregister_ifunc(ctx: Context, handle: IfuncHandle) -> None:
 
 def ifunc_msg_create(handle: IfuncHandle, source_args,
                      source_args_size: int | None = None, *,
-                     slim: bool = False) -> IfuncMsg:
+                     slim: bool = False, corr_id: int = 0) -> IfuncMsg:
     """Build a frame.  payload_init writes *directly into the frame buffer*
     (zero-copy, paper §3.1 'eliminate unnecessary memory copies'); a
     shrinking payload truncates the buffer in place — the code section is
@@ -132,6 +134,10 @@ def ifunc_msg_create(handle: IfuncHandle, source_args,
     ``slim=True`` elides the code section entirely (header digest only) —
     valid once the target's link cache holds this handle's digest; the
     transport dispatcher flips this automatically per peer.
+
+    ``corr_id`` nonzero asks the target for a result-return reply frame
+    carrying the same id (the task runtime's Future path; see
+    ``repro.tasks``).
     """
     lib = handle.lib
     if source_args_size is None:
@@ -146,29 +152,49 @@ def ifunc_msg_create(handle: IfuncHandle, source_args,
     used = lib.payload_init(pv, max_size, source_args, source_args_size)
     used = max_size if used in (None, 0) else int(used)
     frame_len = F.seal_frame(frame, lib.name, code, lib.kind, used,
-                             digest=lib.code_digest, slim=slim)
+                             digest=lib.code_digest, slim=slim,
+                             corr_id=corr_id)
     if frame_len < len(frame):       # shrink: truncate, don't re-pack
         try:
             pv.release()
             del frame[frame_len:]
         except BufferError:          # payload_init leaked a view: copy out
             frame = bytearray(memoryview(frame)[:frame_len])
-    return IfuncMsg(handle, frame, slim=slim)
+    return IfuncMsg(handle, frame, slim=slim, corr_id=corr_id)
 
 
 def ifunc_msg_to_full(msg: IfuncMsg) -> IfuncMsg:
     """Rebuild a FULL frame from a SLIM message (same payload, code
-    restored from the handle's library) — the NACK_UNCACHED fallback."""
+    restored from the handle's library) — the NACK_UNCACHED fallback.
+    The correlation id survives the rebuild, so a retransmitted task
+    still resolves its Future."""
     if not msg.slim:
         return msg
     lib = msg.handle.lib
+    hdr = F.peek_header(msg.frame)
+    corr = msg.corr_id or (0 if hdr is None else hdr.corr_id)
     frame = F.pack_frame(lib.name, lib.code, bytes(msg.payload_view),
-                         lib.kind, digest=lib.code_digest)
-    return IfuncMsg(msg.handle, frame, slim=False)
+                         lib.kind, digest=lib.code_digest, corr_id=corr)
+    return IfuncMsg(msg.handle, frame, slim=False, corr_id=corr)
 
 
 def ifunc_msg_free(msg: IfuncMsg) -> None:
     msg.frame = bytearray()
+
+
+def submit(runtime, peer: str, handle: IfuncHandle, source_args,
+           source_args_size: int | None = None, **kw):
+    """Dispatch a *result-returning* task: ship ``handle``'s ifunc to
+    ``peer`` with a fresh correlation id and get a ``tasks.Future`` back —
+    the ucp-style surface over ``repro.tasks.TaskRuntime.submit``.
+
+    ``runtime`` is a :class:`repro.tasks.TaskRuntime` (or anything with the
+    same ``submit`` contract).  The future resolves when the target's reply
+    frame (or device-sweep result) comes back through the dispatcher's
+    reply demux; if the ifunc raised, ``Future.result()`` re-raises a
+    ``RemoteExecutionError``.
+    """
+    return runtime.submit(peer, handle, source_args, source_args_size, **kw)
 
 
 def ifunc_msg_send_nbix(ep, msg: IfuncMsg, remote_addr: int | None = None,
@@ -250,6 +276,10 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
         if hdr is None:
             return Status.NO_MESSAGE
         ctx.policy.check_header(hdr)
+        if hdr.is_reply:
+            # result-return frames resolve futures via the transport layer's
+            # reply demux; one landing on a request ring is a routing bug
+            raise F.FrameError("reply frame on a request ring")
         spins = 0
         while not F.trailer_arrived(buf, hdr):
             spins += 1
@@ -280,12 +310,8 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
             RegistryError) as e:
         ctx.stats["rejected"] += 1
         ctx.stats["last_reject"] = f"{type(e).__name__}: {e}"
-        try:
-            bad = F.peek_header(buf)  # best-effort clear of the bad slot
-            if bad and clear:
-                F.clear_frame(buf, bad)
-        except F.FrameError:
-            buf[:F.HEADER_LEN] = memoryview(F._ZEROS)[:F.HEADER_LEN]
+        if clear:
+            F.scrub_slot(buf)     # best-effort clear of the bad slot
         return Status.REJECTED
     fn(payload, len(payload), target_args)
     ctx.stats["executed"] += 1

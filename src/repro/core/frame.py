@@ -1,20 +1,26 @@
-"""ifunc message frame, v2 (paper Fig. 1 + the §3.4 cached fast path).
+"""ifunc message frame, v2 (paper Fig. 1 + the §3.4 cached fast path +
+the task-runtime reply path).
 
 Layout (little-endian), extending the paper's
 ``FRAME_LEN | GOT_OFFSET | PAYLOAD_OFFSET | IFUNC_NAME | SIGNAL | CODE |
-PAYLOAD | SIGNAL`` with a flags word and a 16-byte code digest:
+PAYLOAD | SIGNAL`` with a flags word, a 16-byte code digest, and a 64-bit
+correlation id:
 
     offset  size  field
-    0       4     magic            0x1F5C0DE6 (frame format v2)
+    0       4     magic            0x1F5C0DE7 (frame format v2.1)
     4       8     frame_len        total bytes incl. trailer
     12      4     code_offset      start of code section (== HEADER_LEN)
     16      8     payload_offset   start of payload section
     24      4     code_kind        CodeKind enum (pybc | hlo | uvm)
     28      32    ifunc_name       NUL-padded ascii
     60      4     flags            bit 0: FLAG_SLIM (code section elided)
+                                   bit 1: FLAG_REPLY (result-return frame)
+                                   bit 2: FLAG_ERR (reply carries an error)
     64      16    code_digest      truncated sha256 of the FULL code section
-    80      4     header_signal    fletcher32 over bytes [0, 80)
-    84      ...   code             serialized code section (empty when SLIM)
+    80      8     corr_id          request/reply correlation (0 = no reply
+                                   expected; covered by the header signal)
+    88      4     header_signal    fletcher32 over bytes [0, 88)
+    92      ...   code             serialized code section (empty when SLIM)
     ...     ...   payload
     last 4        trailer_signal   0xD0E1F2A3 — written last; its arrival
                                    means the whole frame has been delivered
@@ -37,6 +43,17 @@ v2 additions (the cached-invocation fast path):
 * ``pack_frame_into`` / ``seal_frame`` pack frames *in place* into
   caller-owned slab memoryviews (the transport layer's per-peer staging
   slabs) so the send path never materializes intermediate bytearrays.
+
+v2.1 additions (the task-runtime reply path):
+
+* ``corr_id`` correlates a request with its result: a source that wants
+  the ifunc's output back stamps a nonzero corr_id; the target packs the
+  output into a *reply frame* — ``FLAG_REPLY`` set, code always empty,
+  same corr_id — and puts it into the source's reply ring, where the
+  transport demux resolves the matching Future.  ``FLAG_ERR`` marks a
+  reply whose payload encodes the exception the ifunc raised instead of
+  a value.  Reply frames never link or execute: ``poll_ifunc`` rejects
+  one arriving on a request ring.
 """
 
 from __future__ import annotations
@@ -51,17 +68,19 @@ try:  # vectorized checksum; core still works on a numpy-free interpreter
 except ImportError:  # pragma: no cover - numpy is a repo-wide dependency
     _np = None
 
-MAGIC = 0x1F5C0DE6          # bumped: v2 header (flags + code digest)
+MAGIC = 0x1F5C0DE7          # bumped: v2.1 header (flags + digest + corr_id)
 TRAILER = 0xD0E1F2A3
-HEADER_LEN = 84
+HEADER_LEN = 92
 NAME_LEN = 32
 TRAILER_LEN = 4
 DIGEST_LEN = 16
 FLAG_SLIM = 0x1
-SIGNAL_OFF = 80             # header signal location; fletcher32 over [0, 80)
+FLAG_REPLY = 0x2
+FLAG_ERR = 0x4
+SIGNAL_OFF = 88             # header signal location; fletcher32 over [0, 88)
 
-_HEADER_FMT = "<IQIQI32sI16s"  # magic, frame_len, code_off, payload_off,
-                               # kind, name, flags, digest
+_HEADER_FMT = "<IQIQI32sI16sQ"  # magic, frame_len, code_off, payload_off,
+                                # kind, name, flags, digest, corr_id
 assert struct.calcsize(_HEADER_FMT) == SIGNAL_OFF
 
 
@@ -138,10 +157,19 @@ class FrameHeader:
     name: str
     flags: int = 0
     digest: bytes = b"\0" * DIGEST_LEN
+    corr_id: int = 0
 
     @property
     def is_slim(self) -> bool:
         return bool(self.flags & FLAG_SLIM)
+
+    @property
+    def is_reply(self) -> bool:
+        return bool(self.flags & FLAG_REPLY)
+
+    @property
+    def is_err(self) -> bool:
+        return bool(self.flags & FLAG_ERR)
 
 
 def _name_bytes(name: str) -> bytes:
@@ -152,11 +180,12 @@ def _name_bytes(name: str) -> bytes:
 
 
 def seal_frame(buf, name: str, code, kind: CodeKind, payload_len: int, *,
-               digest: bytes | None = None, slim: bool = False) -> int:
+               digest: bytes | None = None, slim: bool = False,
+               corr_id: int = 0, flags: int = 0) -> int:
     """Write header + code + trailer around a payload *already in place*
     (via :func:`frame_payload_view`), directly into ``buf``.  Returns the
     frame length.  This is the zero-copy finalizer: the payload bytes are
-    never touched, and nothing is allocated beyond the 80-byte header.
+    never touched, and nothing is allocated beyond the header.
     """
     nb = _name_bytes(name)
     code_len = 0 if slim else len(code)
@@ -169,7 +198,8 @@ def seal_frame(buf, name: str, code, kind: CodeKind, payload_len: int, *,
     if not slim and code_len:
         buf[HEADER_LEN:payload_off] = code
     hdr = struct.pack(_HEADER_FMT, MAGIC, frame_len, HEADER_LEN, payload_off,
-                      int(kind), nb, FLAG_SLIM if slim else 0, digest)
+                      int(kind), nb, flags | (FLAG_SLIM if slim else 0),
+                      digest, corr_id)
     buf[:SIGNAL_OFF] = hdr
     struct.pack_into("<I", buf, SIGNAL_OFF, fletcher32(hdr))
     struct.pack_into("<I", buf, frame_len - TRAILER_LEN, TRAILER)
@@ -186,7 +216,8 @@ def frame_payload_view(buf, code_len: int, max_payload: int,
 
 
 def pack_frame_into(buf, name: str, code, payload, kind: CodeKind, *,
-                    digest: bytes | None = None, slim: bool = False) -> int:
+                    digest: bytes | None = None, slim: bool = False,
+                    corr_id: int = 0, flags: int = 0) -> int:
     """Pack a complete frame into a preallocated buffer (a transport slab
     slot).  Returns frame_len; no intermediate bytearray is created."""
     code_len = 0 if slim else len(code)
@@ -197,15 +228,33 @@ def pack_frame_into(buf, name: str, code, payload, kind: CodeKind, *,
             f"buffer {len(buf)}B")
     buf[payload_off:payload_off + len(payload)] = payload
     return seal_frame(buf, name, code, kind, len(payload),
-                      digest=digest, slim=slim)
+                      digest=digest, slim=slim, corr_id=corr_id, flags=flags)
 
 
 def pack_frame(name: str, code: bytes, payload, kind: CodeKind, *,
-               digest: bytes | None = None, slim: bool = False) -> bytearray:
+               digest: bytes | None = None, slim: bool = False,
+               corr_id: int = 0, flags: int = 0) -> bytearray:
     code_len = 0 if slim else len(code)
     buf = bytearray(HEADER_LEN + code_len + len(payload) + TRAILER_LEN)
-    pack_frame_into(buf, name, code, payload, kind, digest=digest, slim=slim)
+    pack_frame_into(buf, name, code, payload, kind, digest=digest, slim=slim,
+                    corr_id=corr_id, flags=flags)
     return buf
+
+
+def pack_reply(name: str, payload, kind: CodeKind, corr_id: int, *,
+               err: bool = False) -> bytearray:
+    """Build a result-return frame: no code section ever, FLAG_REPLY set,
+    the request's corr_id echoed.  ``err=True`` marks the payload as an
+    encoded exception rather than a value."""
+    return pack_frame(name, b"", payload, kind, corr_id=corr_id,
+                      flags=FLAG_REPLY | (FLAG_ERR if err else 0))
+
+
+def pack_reply_into(buf, name: str, payload, kind: CodeKind, corr_id: int, *,
+                    err: bool = False) -> int:
+    """Zero-copy variant of :func:`pack_reply` (into a transport slab)."""
+    return pack_frame_into(buf, name, b"", payload, kind, corr_id=corr_id,
+                           flags=FLAG_REPLY | (FLAG_ERR if err else 0))
 
 
 def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
@@ -226,20 +275,20 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     finally:
         mv.release()
     (magic, frame_len, code_off, payload_off, kind, name, flags,
-     digest) = struct.unpack_from(_HEADER_FMT, buf, 0)
+     digest, corr_id) = struct.unpack_from(_HEADER_FMT, buf, 0)
     if max_frame is not None and frame_len > max_frame:
         raise FrameError(f"frame too long ({frame_len} > {max_frame})")
     if not (HEADER_LEN <= code_off <= payload_off <= frame_len - TRAILER_LEN):
         raise FrameError("inconsistent offsets")
-    if flags & FLAG_SLIM and code_off != payload_off:
-        raise FrameError("SLIM frame carries a code section")
+    if flags & (FLAG_SLIM | FLAG_REPLY) and code_off != payload_off:
+        raise FrameError("SLIM/reply frame carries a code section")
     try:
         kind = CodeKind(kind)
     except ValueError as e:
         raise FrameError(f"unknown code kind {kind}") from e
     return FrameHeader(frame_len, code_off, payload_off, kind,
                        name.rstrip(b"\0").decode(errors="strict"),
-                       flags, bytes(digest))
+                       flags, bytes(digest), corr_id)
 
 
 def trailer_arrived(buf, hdr: FrameHeader) -> bool:
@@ -273,3 +322,17 @@ def clear_frame(buf, hdr: FrameHeader) -> None:
     for off in range(0, n, step):
         m = min(step, n - off)
         mv[off:off + m] = z[:m]
+
+
+def scrub_slot(buf) -> None:
+    """Best-effort clear of a slot in an unknown state (poisoned execution,
+    corrupt header): clear the whole frame when the header still parses,
+    else zero the header region so the next poll sees 'empty'."""
+    try:
+        hdr = peek_header(buf)
+        if hdr is not None:
+            clear_frame(buf, hdr)
+            return
+    except FrameError:
+        pass
+    buf[:HEADER_LEN] = memoryview(_ZEROS)[:HEADER_LEN]

@@ -19,7 +19,7 @@ import importlib.util
 import os
 import pathlib
 import sys
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import codegen as CG
 from repro.core.frame import CodeKind, compute_digest
@@ -90,7 +90,6 @@ class IfuncLibrary:
         return cls(name, main, gms, init, kind, code, compute_digest(code))
 
 
-@dataclass
 class LinkCache:
     """Target-side hash table (paper §3.4): (name, code digest) -> linked
     entry, so only the *first* arrival of an ifunc pays the link cost.
@@ -100,22 +99,60 @@ class LinkCache:
 
     SLIM frames resolve exclusively through this table; an eviction (or a
     target restart) makes them miss, which surfaces as ``NACK_UNCACHED``
-    and drives the source back to a FULL retransmit."""
+    and drives the source back to a FULL retransmit.
 
-    entries: dict[tuple[str, bytes], object] = field(default_factory=dict)
-    link_events: int = 0
+    ``capacity`` bounds the table with LRU eviction (None = unbounded, the
+    historical behavior).  A bounded cache makes eviction an *operational*
+    event rather than a restart-only one — a target hosting more distinct
+    ifuncs than slots churns, each churn NACKs the next SLIM arrival of the
+    evicted digest, and the transport's FULL-retransmit fallback carries
+    the traffic.  ``stats()`` surfaces hit/miss/eviction counts so that
+    churn is observable."""
+
+    def __init__(self, capacity: int | None = None,
+                 entries: dict | None = None):
+        if capacity is not None and capacity < 1:
+            raise RegistryError(f"LinkCache capacity must be >= 1 or None, "
+                                f"got {capacity}")
+        self.capacity = capacity
+        self.entries: dict[tuple[str, bytes], object] = dict(entries or {})
+        self.link_events = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def lookup(self, name: str, digest: bytes):
-        return self.entries.get((name, digest))
+        fn = self.entries.get((name, digest))
+        if fn is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        if self.capacity is not None:           # LRU touch (dicts are ordered)
+            key = (name, digest)
+            self.entries[key] = self.entries.pop(key)
+        return fn
 
     def insert(self, name: str, digest: bytes, fn) -> None:
         self.entries[(name, digest)] = fn
         self.link_events += 1
+        if self.capacity is not None:
+            while len(self.entries) > self.capacity:
+                self.entries.pop(next(iter(self.entries)))
+                self.evictions += 1
 
     def evict(self, name: str, digest: bytes) -> bool:
         """Drop one entry (cache-pressure / restart simulation)."""
-        return self.entries.pop((name, digest), None) is not None
+        if self.entries.pop((name, digest), None) is None:
+            return False
+        self.evictions += 1
+        return True
 
     def invalidate(self, name: str) -> None:
         for k in [k for k in self.entries if k[0] == name]:
             del self.entries[k]
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        return {"size": len(self.entries), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "links": self.link_events}

@@ -104,37 +104,46 @@ class Server:
 
 
 class IfuncFrontend:
-    """Request ingestion over the transport layer: a frontend dispatcher
-    sends ``srv_enqueue`` ifuncs into the server's mailbox ring; the server
-    sweeps the ring between ticks.  Ring credits are the admission-control
-    backpressure — a frontend outrunning the server sees ``submit`` return
-    False instead of overwriting unconsumed requests."""
+    """Request/response ingestion over the task runtime: the frontend
+    submits ``srv_enqueue`` ifuncs into the server's mailbox ring and gets
+    an *admission ack future* back per request — the server's reply frame
+    carries ``{rid, queued, depth}``, so the frontend knows not just that
+    the frame left but that the batcher actually accepted the request.
+    Ring credits remain the admission-control backpressure — a frontend
+    outrunning the server sees ``submit`` return None instead of
+    overwriting unconsumed requests."""
 
     def __init__(self, server_ctx, n_slots: int = 4, slot_size: int = 8 << 10):
         from repro.core import Context, register_ifunc
-        from repro.transport import Dispatcher, ProgressEngine, RdmaFabric
+        from repro.tasks import TaskRuntime
+        from repro.transport import ProgressEngine, RdmaFabric
 
         self.ctx = Context("frontend")
         self.inbox: dict = {"queue": []}
-        self.dispatcher = Dispatcher(self.ctx, ProgressEngine(flush_threshold=4))
-        self.dispatcher.add_peer("server", RdmaFabric(), server_ctx,
-                                 n_slots=n_slots, slot_size=slot_size,
-                                 target_args=self.inbox)
+        self.rt = TaskRuntime(self.ctx,
+                              engine=ProgressEngine(flush_threshold=4))
+        self.dispatcher = self.rt.dispatcher
+        self.rt.add_peer("server", RdmaFabric(), server_ctx,
+                         n_slots=n_slots, slot_size=slot_size,
+                         target_args=self.inbox)
         self._handle = register_ifunc(self.ctx, "srv_enqueue")
 
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request):
         """Zero-copy ingestion: the request codec packs straight into the
         server ring's slab cell.  The first request ships the srv_enqueue
         code FULL; once delivery confirms the server's link cache, every
         later request goes SLIM (header + payload, codec elided) — the
-        warmed-up steady state is the paper's cached fast path."""
-        return self.dispatcher.send_ifunc(
+        warmed-up steady state is the paper's cached fast path.  Returns
+        the admission-ack Future, or None under backpressure."""
+        return self.rt.submit(
             "server", self._handle,
-            {"rid": req.rid, "max_new": req.max_new, "prompt": req.prompt})
+            {"rid": req.rid, "max_new": req.max_new, "prompt": req.prompt},
+            wait_credits=False)
 
     def server_poll(self, max_msgs: int = 16) -> list[Request]:
         """Server side: flush in-flight frames, drain the mailbox through
-        the dispatcher's poll loop, return newly arrived requests."""
+        the dispatcher's poll loop (which also posts + routes the acks),
+        return newly arrived requests."""
         self.dispatcher.flush()
         self.dispatcher.poll(budget=max_msgs)
         out = [Request(d["rid"], np.asarray(d["prompt"], np.int32), d["max_new"])
@@ -163,12 +172,17 @@ def main():
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32),
                     max_new=args.steps) for i in range(args.slots + 2)]
     unsubmitted = list(reqs)
+    acks = []
     done: dict[int, Request] = {}
     pending: list[Request] = []
     t0 = time.time()
     total = 0
     while unsubmitted or pending or srv.active:
-        while unsubmitted and fe.submit(unsubmitted[0]):   # credits permitting
+        while unsubmitted:                                 # credits permitting
+            fut = fe.submit(unsubmitted[0])
+            if fut is None:
+                break
+            acks.append(fut)
             unsubmitted.pop(0)
         pending.extend(fe.server_poll())
         while pending and srv.admit(pending[0]):
@@ -176,12 +190,15 @@ def main():
             done[req.rid] = req
         total += srv.tick()
     dt = time.time() - t0
+    acked = [f.result(timeout=10.0) for f in acks]
+    assert all(a["queued"] for a in acked), acked
     stats = fe.dispatcher.per_peer_stats()["server"]
-    print(f"served {len(reqs)} requests, {total} decode tokens in {dt:.2f}s "
-          f"({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots}); "
+    print(f"served {len(reqs)} requests ({len(acked)} acked, max queue depth "
+          f"{max(a['depth'] for a in acked)}), {total} decode tokens in "
+          f"{dt:.2f}s ({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots}); "
           f"ingest: sent={stats['sent']} slim={stats['slim_sent']} "
           f"delivered={stats['delivered']} backpressure={stats['backpressure']} "
-          f"via {stats['bytes']}B of ifunc frames")
+          f"replies={stats['replies']} via {stats['bytes']}B of ifunc frames")
     for rid in sorted(done)[:2]:
         r = done[rid]
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out[:args.steps]}")

@@ -1,0 +1,23 @@
+"""Task runtime: result futures + locality-aware placement over the
+unified ifunc transport.
+
+The compute-migration layer the paper's graph-analysis scenario needs:
+
+    TaskRuntime      submit() -> Future; reply demux; run_local
+    Future           done/result/exception/timeout, progress-driving wait
+    DataDirectory    shard-id -> owner/replicas/hotness
+    PlacementEngine  migrate-code-to-data vs fetch-data-to-host vs
+                     run-local, priced with live dispatcher congestion;
+                     work-stealing ownership rebalance
+    wire             tagged reply-payload codec (RAW | JSON | NPY | ERR)
+
+See ``examples/graph_analysis.py`` for the end-to-end workload and
+ARCHITECTURE.md ("Task runtime and placement") for the corr-id lifecycle.
+"""
+
+from repro.tasks.future import Future, TaskState, TaskTimeout, wait_all  # noqa: F401
+from repro.tasks.placement import (  # noqa: F401
+    DataDirectory, Decision, LOCAL_SITE, Placement, PlacementEngine, Shard,
+)
+from repro.tasks.runtime import TaskRuntime  # noqa: F401
+from repro.tasks.wire import RemoteExecutionError, WireError  # noqa: F401

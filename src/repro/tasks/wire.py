@@ -1,0 +1,102 @@
+"""Reply-payload codec: how task results travel inside FLAG_REPLY frames.
+
+Pickle-free by design — the reply direction crosses the same trust
+boundary as the request direction, and the request side ships *verified*
+code, so results stick to a small tagged vocabulary:
+
+    tag 0  RAW    raw bytes (the value as-is)
+    tag 1  JSON   json-encodable value (dicts/lists/str/numbers/None/bool)
+    tag 2  NPY    one numpy array: <u4 dtype-str len | dtype | u1 ndim |
+                  u4 shape... | data>
+    tag 3  ERR    an exception: json {"type": ..., "msg": ...}
+
+``encode``/``decode`` round-trip values; ``encode_error``/``decode`` map
+exceptions to :class:`RemoteExecutionError` (the remote type name is
+preserved in the message, never re-imported — a target cannot make the
+source instantiate an arbitrary class).
+
+The transport's ``Dispatcher.reply_codec`` hook points at this module, so
+the transport layer itself stays value-format-agnostic.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+TAG_RAW, TAG_JSON, TAG_NPY, TAG_ERR = 0, 1, 2, 3
+
+
+class WireError(Exception):
+    """Malformed reply payload."""
+
+
+class RemoteExecutionError(Exception):
+    """An ifunc raised at the target; re-raised source-side by
+    ``Future.result()``.  ``remote_type`` names the original exception."""
+
+    def __init__(self, remote_type: str, message: str):
+        super().__init__(f"{remote_type}: {message}")
+        self.remote_type = remote_type
+        self.remote_message = message
+
+
+def encode(value) -> bytes:
+    """Value -> tagged reply payload."""
+    if value is None:
+        return bytes([TAG_JSON]) + b"null"
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        return bytes([TAG_RAW]) + bytes(value)
+    if isinstance(value, np.ndarray) or hasattr(value, "__array__"):
+        arr = np.asarray(value)
+        ndim, shape = arr.ndim, arr.shape   # before ascontiguousarray, which
+        arr = np.ascontiguousarray(arr)     # promotes 0-d to shape (1,)
+        dt = arr.dtype.str.encode()
+        head = struct.pack(f"<BI{len(dt)}sB", TAG_NPY, len(dt), dt, ndim)
+        packed = struct.pack(f"<{ndim}I", *shape) if ndim else b""
+        return head + packed + arr.tobytes()
+    try:
+        return bytes([TAG_JSON]) + json.dumps(value).encode()
+    except (TypeError, ValueError) as e:
+        raise WireError(f"unencodable reply value {type(value).__name__}: {e}")
+
+
+def encode_error(exc) -> bytes:
+    """Exception (or message string) -> tagged error payload."""
+    if isinstance(exc, BaseException):
+        t, m = type(exc).__name__, str(exc)
+    else:
+        t, m = "RuntimeError", str(exc)
+    return bytes([TAG_ERR]) + json.dumps({"type": t, "msg": m}).encode()
+
+
+def decode(payload):
+    """Tagged reply payload -> value, or a ``RemoteExecutionError``
+    *instance* for ERR payloads (the caller decides to raise it)."""
+    if not payload:
+        raise WireError("empty reply payload")
+    buf = bytes(payload)
+    tag, body = buf[0], buf[1:]
+    if tag == TAG_RAW:
+        return body
+    if tag == TAG_JSON:
+        return json.loads(body.decode())
+    if tag == TAG_NPY:
+        (n,) = struct.unpack_from("<I", body, 0)
+        dt = body[4:4 + n].decode()
+        ndim = body[4 + n]
+        off = 5 + n
+        shape = struct.unpack_from(f"<{ndim}I", body, off) if ndim else ()
+        off += 4 * ndim
+        return np.frombuffer(body, dt, offset=off).reshape(shape).copy()
+    if tag == TAG_ERR:
+        d = json.loads(body.decode())
+        return RemoteExecutionError(d.get("type", "Exception"),
+                                    d.get("msg", ""))
+    raise WireError(f"unknown reply tag {tag}")
+
+
+__all__ = ["RemoteExecutionError", "WireError", "decode", "encode",
+           "encode_error"]

@@ -56,10 +56,14 @@ class DeviceMeshMailbox(Mailbox):
         self._staged_count = 0
         self._deposited = 0                          # frames awaiting sweep
         self.results: list[np.ndarray] = []          # READY payload outputs
+        self.last_coords: list[tuple[int, int]] = []  # (shard, slot) per
+        #                                 status of the most recent sweep —
+        #                                 the reply demux correlates device
+        #                                 results to task corr-ids with this
 
     # source-side staging (called by DeviceMeshChannel)
 
-    def _slot_coords(self, slot: int) -> tuple[int, int]:
+    def slot_coords(self, slot: int) -> tuple[int, int]:
         """Dispatcher ring index -> (shard, per-shard slot) interleaving."""
         return slot % self.n_shards, (slot // self.n_shards) % self.n_slots_per_shard
 
@@ -68,7 +72,7 @@ class DeviceMeshMailbox(Mailbox):
             self._staged = np.zeros(
                 (self.n_shards, self.n_slots_per_shard, self.slot_words),
                 np.uint32)
-        shard, idx = self._slot_coords(slot)
+        shard, idx = self.slot_coords(slot)
         self._staged[shard, idx] = word_frame
         self._staged_count += 1
 
@@ -101,12 +105,14 @@ class DeviceMeshMailbox(Mailbox):
         from repro.kernels.ring_poll import BAD, INFLIGHT, READY
 
         if self._deposited == 0:
+            self.last_coords = []
             return []
         status, out, cleared = self._sweep(self._mb, self.externals)
         status = np.asarray(status)
         out = np.asarray(out)
         self._mb = cleared
         statuses: list = []
+        self.last_coords = []
         for shard in range(status.shape[0]):
             for slot in range(status.shape[1]):
                 st = int(status[shard, slot])
@@ -116,10 +122,13 @@ class DeviceMeshMailbox(Mailbox):
                         target_args.setdefault("results", []).append(
                             out[shard, slot])
                     statuses.append(Status.OK)
+                    self.last_coords.append((shard, slot))
                 elif st == BAD:
                     statuses.append(Status.REJECTED)
+                    self.last_coords.append((shard, slot))
                 elif st == INFLIGHT:
                     statuses.append(Status.IN_PROGRESS)
+                    self.last_coords.append((shard, slot))
         consumed = sum(1 for s in statuses
                        if s in (Status.OK, Status.REJECTED))
         self.head += consumed
@@ -178,7 +187,7 @@ class DeviceMeshChannel(Channel):
     def flush(self) -> None:
         mb = self.mailbox
         for slot, word_idx, trailer in getattr(self, "_pending_trailers", []):
-            shard, idx = mb._slot_coords(slot)
+            shard, idx = mb.slot_coords(slot)
             if mb._staged is not None:
                 mb._staged[shard, idx, word_idx] = trailer
         self._pending_trailers = []

@@ -30,6 +30,23 @@ The dispatcher also owns the *cached-invocation fast path* (paper §3.4):
   transparently, ahead of any newer traffic to that peer;
 * device-mesh lanes are always SLIM-eligible — the μVM program is bound at
   mailbox-open time, so code words never need depositing over the ICI.
+
+And the *result-return path* (the task runtime's wire, see ``repro.tasks``):
+
+* a request carrying a nonzero ``corr_id`` asks for the ifunc's output
+  back; host peers get a *reply ring* — a source-owned mailbox the target
+  writes ``FLAG_REPLY`` frames into — attached via ``attach_reply_ring``;
+* the poll loop, when it executes a corr-carrying request at a host peer,
+  captures the ifunc's ``target_args["result"]`` (or the exception it
+  raised — the slot is consumed, not wedged) and posts the encoded value
+  as a reply frame with the same corr_id; ``poll_replies`` drains reply
+  rings and hands ``(corr_id, value)`` to the registered ``reply_router``;
+* device-mesh lanes have no reverse ring: the sweep's READY results *are*
+  the replies — the dispatcher correlates them to corr-ids by the
+  (shard, slot) coordinates each send staged into and routes them through
+  the same ``reply_router``;
+* encoding is delegated to a pluggable ``reply_codec`` (the task layer's
+  wire module) so the transport stays value-format-agnostic.
 """
 
 from __future__ import annotations
@@ -47,13 +64,14 @@ DEFAULT_N_SLOTS = 8
 
 @dataclass
 class _TxRec:
-    """Source-side record of one in-flight frame (for digest confirmation
-    and NACK retransmission)."""
+    """Source-side record of one in-flight frame (for digest confirmation,
+    NACK retransmission, and reply correlation)."""
 
     name: str
     digest: bytes
     handle: object          # IfuncHandle (None for raw-frame sends)
     slim: bool
+    corr_id: int = 0
 
 
 @dataclass
@@ -64,6 +82,9 @@ class RingState:
     channel: object
     tail: int = 0            # source-side produce index
     inflight: dict = field(default_factory=dict)   # abs slot -> _TxRec
+    corr_by_coords: dict = field(default_factory=dict)  # device lanes:
+    #                                    (shard, slot) -> corr_id awaiting
+    #                                    a sweep result
 
     @property
     def credits(self) -> int:
@@ -79,14 +100,25 @@ class Peer:
     rings: list[RingState] = field(default_factory=list)
     cached: set = field(default_factory=set)       # digests confirmed cached
     resend: deque = field(default_factory=deque)   # FULL msgs queued post-NACK
+    reply_mailbox: object = None   # source-owned ring the target replies into
+    reply_channel: object = None   # target->source path into it
+    reply_tail: int = 0            # target-side produce index for replies
     stats: dict = field(default_factory=lambda: {
         "sent": 0, "bytes": 0, "delivered": 0, "rejected": 0,
         "backpressure": 0, "inflight_polls": 0,
-        "slim_sent": 0, "nacks": 0, "resent": 0})
+        "slim_sent": 0, "nacks": 0, "resent": 0,
+        "replies": 0, "errors": 0})
 
     @property
     def credits(self) -> int:
         return sum(r.credits for r in self.rings)
+
+    @property
+    def reply_credits(self) -> int:
+        if self.reply_mailbox is None:
+            return 0
+        return self.reply_mailbox.n_slots - (self.reply_tail
+                                             - self.reply_mailbox.consumed)
 
     def summary(self) -> str:
         s = self.stats
@@ -95,6 +127,7 @@ class Peer:
                 f"delivered={s['delivered']:<4d} "
                 f"rejected={s['rejected']:<3d} nacks={s['nacks']:<3d} "
                 f"backpressure={s['backpressure']:<3d} "
+                f"replies={s['replies']:<4d} "
                 f"credits={self.credits}")
 
 
@@ -106,7 +139,13 @@ class Dispatcher:
         self.engine = engine if engine is not None else ProgressEngine()
         self.peers: dict[str, Peer] = {}
         self._rr = 0             # fairness cursor over (peer, ring) lanes
-        self.stats = {"sent": 0, "polled": 0, "poll_rounds": 0, "nacks": 0}
+        self.stats = {"sent": 0, "polled": 0, "poll_rounds": 0, "nacks": 0,
+                      "replies": 0, "reply_dropped": 0}
+        # task-runtime hooks (see repro.tasks): the router receives
+        # (corr_id, name, value, is_err, decoded); the codec provides
+        # encode(value)->bytes / encode_error(exc)->bytes for reply frames
+        self.reply_router = None
+        self.reply_codec = None
 
     # -- topology -----------------------------------------------------------
 
@@ -130,11 +169,27 @@ class Dispatcher:
         self.peers[name] = peer
         return peer
 
+    def attach_reply_ring(self, name: str, mailbox, channel) -> None:
+        """Give a host peer a result-return path: ``mailbox`` is a
+        source-owned ring (opened on the *source* context), ``channel`` the
+        target->source path into it.  Corr-carrying requests executed at
+        this peer post their outputs here as FLAG_REPLY frames; device-mesh
+        peers need none (sweep results are correlated directly)."""
+        peer = self.peers[name]
+        if peer.fabric.kind == "device":
+            raise TransportError(
+                "device-mesh peers reply through the sweep, not a ring")
+        peer.reply_mailbox = mailbox
+        peer.reply_channel = channel
+        peer.reply_tail = 0
+
     def remove_peer(self, name: str) -> None:
         peer = self.peers.pop(name, None)
         if peer is not None:
             for r in peer.rings:
                 self.engine.release_slab(r.channel)
+            if peer.reply_channel is not None:
+                self.engine.release_slab(peer.reply_channel)
 
     # -- source side --------------------------------------------------------
 
@@ -160,9 +215,10 @@ class Dispatcher:
         lane = max(lanes, key=lambda r: r.credits)
         return lane if lane.credits > 0 else None
 
-    def _post_view(self, peer: Peer, lane: RingState, view, rec, on_complete):
+    def _post_view(self, peer: Peer, lane: RingState, view, rec, on_complete,
+                   future=None):
         self.engine.post(lane.channel, view, lane.tail, peer=peer.name,
-                         on_complete=on_complete)
+                         on_complete=on_complete, future=future)
         if rec is not None and peer.fabric.kind != "device":
             lane.inflight[lane.tail] = rec
             if len(lane.inflight) > 2 * lane.mailbox.n_slots:
@@ -171,6 +227,12 @@ class Dispatcher:
                 low = lane.mailbox.consumed
                 for s in [s for s in lane.inflight if s < low]:
                     del lane.inflight[s]
+        if (rec is not None and rec.corr_id
+                and peer.fabric.kind == "device"):
+            # device replies come back as sweep results at the coordinates
+            # this send stages into (the Mailbox.slot_coords contract)
+            lane.corr_by_coords[
+                lane.mailbox.slot_coords(lane.tail)] = rec.corr_id
         lane.tail += 1
         peer.stats["sent"] += 1
         peer.stats["bytes"] += len(view)
@@ -179,7 +241,7 @@ class Dispatcher:
         self.stats["sent"] += 1
 
     def _slab_post(self, peer: Peer, lane: RingState, frame, rec,
-                   on_complete=None) -> None:
+                   on_complete=None, future=None) -> None:
         """Stage a ready frame into the lane's slab cell and post it."""
         slab = self.engine.slab_slot(lane.channel, lane.tail)
         n = len(frame)
@@ -187,7 +249,7 @@ class Dispatcher:
             raise TransportError(
                 f"frame {n}B exceeds slot {lane.mailbox.slot_size}B")
         slab[:n] = frame
-        self._post_view(peer, lane, slab[:n], rec, on_complete)
+        self._post_view(peer, lane, slab[:n], rec, on_complete, future)
 
     def _flush_resends(self, peer: Peer) -> bool:
         """Post queued FULL retransmits (NACK fallback) ahead of any new
@@ -212,18 +274,21 @@ class Dispatcher:
             self._slab_post(peer, lane, msg.frame,
                             _TxRec(msg.handle.lib.name,
                                    msg.handle.lib.code_digest,
-                                   msg.handle, slim=False))
+                                   msg.handle, slim=False,
+                                   corr_id=getattr(msg, "corr_id", 0)))
             peer.stats["resent"] += 1
         return True
 
     def send(self, peer_name: str, msg, *, ring: int | None = None,
-             on_complete=None) -> bool:
+             on_complete=None, future=None) -> bool:
         """Post one ifunc message to a peer.  Returns False (and counts a
         backpressure event) when every eligible ring is out of credits.
 
         The frame is staged into the engine's slab cell for the chosen ring
         slot; if the peer is known to have this handle's code digest cached,
-        the code section is elided on the fly (SLIM framing)."""
+        the code section is elided on the fly (SLIM framing).  A corr_id
+        already sealed into the message's header rides along — including
+        across the on-the-fly SLIM repack."""
         peer = self.peers[peer_name]
         if not self._flush_resends(peer):
             peer.stats["backpressure"] += 1
@@ -235,13 +300,15 @@ class Dispatcher:
         frame = msg.frame if hasattr(msg, "frame") else msg
         handle = getattr(msg, "handle", None)
         if handle is None:                       # raw frame: no slim protocol
-            self._slab_post(peer, lane, frame, None, on_complete)
+            self._slab_post(peer, lane, frame, None, on_complete, future)
             return True
         lib = handle.lib
+        corr_id = getattr(msg, "corr_id", 0)   # mirrored from the header at
+        #                          msg-create time: no hot-path header parse
         already_slim = bool(getattr(msg, "slim", False))
         want_slim = self._slim_ok(peer, lib)
         rec = _TxRec(lib.name, lib.code_digest, handle,
-                     already_slim or want_slim)
+                     already_slim or want_slim, corr_id=corr_id)
         if rec.slim and peer.fabric.kind != "device":
             self._check_full_fits(lane, lib, len(msg.payload_view))
         if want_slim and not already_slim:
@@ -249,19 +316,22 @@ class Dispatcher:
             # only buffer the SLIM frame ever occupies
             slab = self.engine.slab_slot(lane.channel, lane.tail)
             n = F.pack_frame_into(slab, lib.name, b"", msg.payload_view,
-                                  lib.kind, digest=lib.code_digest, slim=True)
-            self._post_view(peer, lane, slab[:n], rec, on_complete)
+                                  lib.kind, digest=lib.code_digest, slim=True,
+                                  corr_id=corr_id)
+            self._post_view(peer, lane, slab[:n], rec, on_complete, future)
         else:
-            self._slab_post(peer, lane, frame, rec, on_complete)
+            self._slab_post(peer, lane, frame, rec, on_complete, future)
         return True
 
     def send_ifunc(self, peer_name: str, handle, source_args,
                    source_args_size: int | None = None, *,
-                   ring: int | None = None, on_complete=None) -> bool:
+                   ring: int | None = None, on_complete=None,
+                   corr_id: int = 0, future=None) -> bool:
         """Fully zero-copy send: skips IfuncMsg materialization — the
         payload codec writes directly into the peer's slab cell and the
         header is sealed around it in place.  SLIM framing is applied
-        automatically once the peer's cache is known-warm."""
+        automatically once the peer's cache is known-warm.  ``corr_id``
+        nonzero requests a result-return reply (the Future path)."""
         peer = self.peers[peer_name]
         if not self._flush_resends(peer):
             peer.stats["backpressure"] += 1
@@ -289,10 +359,11 @@ class Dispatcher:
         used = lib.payload_init(pv, max_size, source_args, source_args_size)
         used = max_size if used in (None, 0) else int(used)
         n = F.seal_frame(slab, lib.name, code, lib.kind, used,
-                         digest=lib.code_digest, slim=slim)
+                         digest=lib.code_digest, slim=slim, corr_id=corr_id)
         self._post_view(peer, lane, slab[:n],
-                        _TxRec(lib.name, lib.code_digest, handle, slim),
-                        on_complete)
+                        _TxRec(lib.name, lib.code_digest, handle, slim,
+                               corr_id=corr_id),
+                        on_complete, future)
         return True
 
     def broadcast(self, make_msg) -> int:
@@ -319,6 +390,126 @@ class Dispatcher:
         view = self.engine.slab_slot(lane.channel, abs_slot)
         return A.ifunc_msg_to_full(A.IfuncMsg(rec.handle, view, slim=True))
 
+    def _sweep_task(self, peer: Peer, lane: RingState) -> list:
+        """Sweep one slot of a reply-enabled host lane: capture the
+        request's corr_id before execution destroys the frame, capture the
+        ifunc's output (``target_args["result"]``) — or the exception it
+        raised — after, and post the encoded reply.  An ifunc exception
+        consumes the slot (clear + head advance) instead of wedging the
+        ring; the error travels back as a FLAG_ERR reply.  A
+        fire-and-forget frame (corr_id == 0) has no reply to carry the
+        error, so after consuming the slot the exception re-raises to the
+        poll caller — same visibility as a plain dispatcher."""
+        from repro.core.api import Status
+
+        mb = lane.mailbox
+        buf = mb.slot_view(mb.head)
+        try:
+            hdr = F.peek_header(buf)
+        except F.FrameError:
+            hdr = None
+        corr = 0 if hdr is None else hdr.corr_id
+        name = "" if hdr is None else hdr.name
+        kind = F.CodeKind.PYBC if hdr is None else hdr.code_kind
+        targs = peer.target_args
+        if isinstance(targs, dict):
+            targs.pop("result", None)
+        err = None
+        try:
+            sts = mb.sweep(peer.target_ctx, targs, budget=1)
+        except Exception as e:               # raised *inside* the ifunc
+            err = e
+            F.scrub_slot(buf)
+            mb.head += 1                     # consume the poisoned slot
+            mb.consumed += 1
+            peer.stats["errors"] += 1
+            if not corr:
+                raise                        # no future to carry the error
+            sts = [Status.OK]                # delivered — it just raised
+        if corr and sts and sts[0] in (Status.OK, Status.REJECTED):
+            if err is not None:
+                value, is_err = err, True
+            elif sts[0] == Status.REJECTED:
+                value, is_err = TransportError(
+                    str(peer.target_ctx.stats.get(
+                        "last_reject", "frame rejected"))), True
+            else:
+                value = targs.get("result") if isinstance(targs, dict) else None
+                is_err = False
+            self._post_reply(peer, name, kind, corr, value, is_err)
+        return sts
+
+    def _post_reply(self, peer: Peer, name: str, kind, corr: int, value,
+                    is_err: bool) -> None:
+        """Pack a result into a FLAG_REPLY frame and post it target->source.
+        The source can always drain its own inbox, so a full reply ring is
+        drained inline rather than dropping the result."""
+        if peer.reply_channel is None or self.reply_codec is None:
+            self.stats["reply_dropped"] += 1
+            return
+        if peer.reply_credits <= 0:
+            self._drain_replies(peer)
+        codec = self.reply_codec
+        try:
+            payload = (codec.encode_error(value) if is_err
+                       else codec.encode(value))
+        except Exception as e:               # unencodable result: the error
+            payload, is_err = codec.encode_error(e), True   # IS the reply
+        slab = self.engine.slab_slot(peer.reply_channel, peer.reply_tail)
+        try:
+            n = F.pack_reply_into(slab, name, payload, kind, corr, err=is_err)
+        except F.FrameError as e:            # oversized value: error reply
+            n = F.pack_reply_into(slab, name, codec.encode_error(e), kind,
+                                  corr, err=True)
+        self.engine.post(peer.reply_channel, slab[:n], peer.reply_tail,
+                         peer=peer.name)
+        peer.reply_tail += 1
+        peer.stats["replies"] += 1
+        self.stats["replies"] += 1
+
+    def _route_reply(self, corr: int, name: str, value, is_err: bool,
+                     decoded: bool) -> None:
+        if self.reply_router is None:
+            self.stats["reply_dropped"] += 1
+            return
+        self.reply_router(corr, name, value, is_err, decoded)
+
+    def _drain_replies(self, peer: Peer, budget: int | None = None) -> int:
+        """Source side of the reply path: flush the target's pending reply
+        puts, then consume FLAG_REPLY frames from the peer's reply ring and
+        hand them to the router.  Corrupt reply slots are cleared and
+        counted, never wedged."""
+        if peer.reply_mailbox is None:
+            return 0
+        self.engine.flush(peer.reply_channel)
+        mb = peer.reply_mailbox
+        n = 0
+        while budget is None or n < budget:
+            buf = mb.slot_view(mb.head)
+            try:
+                hdr = F.peek_header(buf)
+            except F.FrameError:
+                F.scrub_slot(buf)
+                mb.head += 1
+                mb.consumed += 1
+                peer.stats["reply_rejects"] = (
+                    peer.stats.get("reply_rejects", 0) + 1)
+                continue
+            if hdr is None or not F.trailer_arrived(buf, hdr):
+                break
+            payload = bytes(F.frame_sections(buf, hdr)[1])
+            corr, name, is_err = hdr.corr_id, hdr.name, hdr.is_err
+            F.clear_frame(buf, hdr)
+            mb.head += 1
+            mb.consumed += 1
+            self._route_reply(corr, name, payload, is_err, decoded=False)
+            n += 1
+        return n
+
+    def poll_replies(self) -> int:
+        """Drain every peer's reply ring; returns replies routed."""
+        return sum(self._drain_replies(p) for p in self.peers.values())
+
     def poll(self, budget: int | None = None) -> int:
         """Drain up to ``budget`` messages total across all peers' rings,
         deficit-round-robin.  Each round visits every lane once, consuming
@@ -330,7 +521,10 @@ class Dispatcher:
 
         OK deliveries confirm the target's code cache for the frame's
         digest (enabling SLIM framing); NACK_UNCACHED consumes the slot,
-        un-confirms the digest, and queues a FULL retransmit."""
+        un-confirms the digest, and queues a FULL retransmit.  Replies
+        (result-return frames, device sweep results with corr-ids) are
+        routed to the reply_router as a side effect; they do not count
+        against ``budget``."""
         from repro.core.api import Status
 
         lanes = self._lanes()
@@ -348,10 +542,25 @@ class Dispatcher:
                     break
                 track = peer.fabric.kind != "device"
                 slot = lane.mailbox.head
-                sts = lane.mailbox.sweep(peer.target_ctx, peer.target_args,
-                                         budget=1)
-                for st in sts:
+                if track and peer.reply_channel is not None:
+                    sts = self._sweep_task(peer, lane)
+                    coords = res_new = None
+                elif track:
+                    sts = lane.mailbox.sweep(peer.target_ctx,
+                                             peer.target_args, budget=1)
+                    coords = res_new = None
+                else:
+                    res_before = len(getattr(lane.mailbox, "results", ()))
+                    sts = lane.mailbox.sweep(peer.target_ctx,
+                                             peer.target_args, budget=1)
+                    coords = getattr(lane.mailbox, "last_coords", None)
+                    res_new = list(getattr(lane.mailbox, "results",
+                                           ())[res_before:])
+                ri = 0                       # cursor over res_new
+                for i, st in enumerate(sts):
                     rec = None
+                    coord = (coords[i] if coords is not None
+                             and i < len(coords) else None)
                     if st in (Status.OK, Status.REJECTED,
                               Status.NACK_UNCACHED):
                         rec = lane.inflight.pop(slot, None) if track else None
@@ -362,10 +571,25 @@ class Dispatcher:
                         progressed = True
                         if rec is not None:
                             peer.cached.add(rec.digest)
+                        if not track:
+                            val = res_new[ri] if ri < len(res_new) else None
+                            ri += 1
+                            corr = (lane.corr_by_coords.pop(coord, 0)
+                                    if coord is not None else 0)
+                            if corr:         # device reply: the result IS it
+                                self._route_reply(corr, peer.name, val,
+                                                  False, decoded=True)
                     elif st == Status.REJECTED:
                         peer.stats["rejected"] += 1
                         done += 1
                         progressed = True
+                        if not track and coord is not None:
+                            corr = lane.corr_by_coords.pop(coord, 0)
+                            if corr:
+                                self._route_reply(
+                                    corr, peer.name,
+                                    "frame rejected on device sweep",
+                                    True, decoded=True)
                     elif st == Status.NACK_UNCACHED:
                         peer.stats["nacks"] += 1
                         self.stats["nacks"] += 1
@@ -382,6 +606,7 @@ class Dispatcher:
                     elif st == Status.IN_PROGRESS:
                         peer.stats["inflight_polls"] += 1
             self._rr += 1
+        self.poll_replies()
         self.stats["polled"] += done
         return done
 

@@ -52,6 +52,18 @@ class Mailbox:
     def __init__(self):
         self.head = 0
         self.consumed = 0
+        #: coordinates of each status the most recent :meth:`sweep`
+        #: returned, in order.  Host mailboxes consume in ring order, so
+        #: the produce index is the coordinate; backends that sweep out of
+        #: order (the device mesh) override :meth:`slot_coords` and fill
+        #: this with their native coordinates — the reply demux correlates
+        #: sweep results to task corr-ids through it.
+        self.last_coords: list = []
+
+    def slot_coords(self, i: int):
+        """Stable coordinate a produce-index maps to (what ``last_coords``
+        entries are keyed by).  Identity for in-order host rings."""
+        return i
 
     def slot_view(self, i: int) -> memoryview:
         raise NotImplementedError

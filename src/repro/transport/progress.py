@@ -35,7 +35,11 @@ from repro.transport.fabric import Channel
 
 @dataclass
 class TxHandle:
-    """One posted put: completes (callback + CQ entry) at flush time."""
+    """One posted put: completes (callback + CQ entry) at flush time.
+
+    ``future`` optionally ties the put to a task-runtime Future: the flush
+    that publishes the frame marks the future SENT (its reply clock starts
+    only once the request is actually visible at the target)."""
 
     seq: int
     channel: Channel
@@ -44,6 +48,7 @@ class TxHandle:
     peer: str | None = None
     done: bool = False
     on_complete: object = None
+    future: object = None
 
 
 @dataclass
@@ -119,13 +124,15 @@ class ProgressEngine:
         return max(nbytes - int(w), 0)
 
     def post(self, channel: Channel, frame, slot: int, *,
-             peer: str | None = None, on_complete=None) -> TxHandle:
+             peer: str | None = None, on_complete=None,
+             future=None) -> TxHandle:
         """Non-blocking send of one frame into ``slot`` of the channel's
         mailbox.  Returns a handle; the frame is not guaranteed visible at
-        the target until the handle completes."""
+        the target until the handle completes.  ``future`` (a task-runtime
+        Future) is marked SENT when this put's flush publishes the frame."""
         self._seq += 1
         h = TxHandle(self._seq, channel, len(frame), slot, peer=peer,
-                     on_complete=on_complete)
+                     on_complete=on_complete, future=future)
         channel.put(frame, slot, deliver_bytes=self._window(len(frame)))
         key = id(channel)
         self._channels[key] = channel
@@ -154,6 +161,10 @@ class ProgressEngine:
                 h.done = True
                 self.completion_queue.append(
                     Completion(h.seq, h.peer, h.nbytes, h.slot))
+                if h.future is not None:
+                    h.future._mark_sent(h.seq)
+                    self.stats["futures_sent"] = (
+                        self.stats.get("futures_sent", 0) + 1)
                 if h.on_complete is not None:
                     h.on_complete(h)
                     self.stats["callbacks"] += 1

@@ -1,0 +1,399 @@
+"""Task runtime: result futures, the reply path, placement decisions.
+
+Covers the contract the graph workload leans on: futures resolve with
+correct values over host fabrics and the device mesh; a target exception
+becomes an exception future (and never wedges the ring); a lost reply
+times out; a duplicate corr-id reply is ignored; the corr-id survives a
+NACK/FULL retransmit; the LRU-bounded link cache makes the NACK path
+reachable in real runs; and the placement engine prices migrate vs fetch
+vs local with live queue feedback.
+"""
+
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import Context, Status, register_ifunc, submit
+from repro.core import frame as F
+from repro.core import poll_ifunc
+from repro.core.registry import LinkCache
+from repro.tasks import (DataDirectory, Decision, LOCAL_SITE,
+                         PlacementEngine, RemoteExecutionError, TaskRuntime,
+                         TaskTimeout)
+from repro.tasks import wire
+from repro.tasks.future import TaskState
+from repro.transport import (Dispatcher, LoopbackFabric, ProgressEngine,
+                             RdmaFabric, TransportError)
+
+
+def _mk_runtime(lib_dir, peers, *, n_slots=4, slot_size=16 << 10, **peer_kw):
+    src = Context("src", lib_dir=lib_dir)
+    rt = TaskRuntime(src, engine=ProgressEngine(flush_threshold=64,
+                                                inflight_window="trailer"),
+                     default_timeout=10.0)
+    for name, fabric in peers:
+        rt.add_peer(name, fabric, Context(name, lib_dir=lib_dir,
+                                          link_mode="remote"),
+                    n_slots=n_slots, slot_size=slot_size,
+                    target_args={}, **peer_kw)
+    return rt
+
+
+@pytest.fixture()
+def rt(lib_dir):
+    return _mk_runtime(lib_dir, [("rdma", RdmaFabric()),
+                                 ("loop", LoopbackFabric())])
+
+
+# ---------------------------------------------------------------------------
+# futures resolve (both host fabrics), core.submit sugar, sent wiring
+
+
+def test_future_resolves_on_host_fabrics(rt):
+    h = register_ifunc(rt.ctx, "task_sum")
+    f1 = rt.submit("rdma", h, b"\x01\x02\x03")
+    f2 = submit(rt, "loop", h, b"\x05" * 10)     # the core.api sugar
+    assert f1.result() == 6
+    assert f2.result() == 50
+    assert f1.done() and f1.state is TaskState.DONE
+    assert rt.stats["resolved"] == 2 and rt.pending() == 0
+
+
+def test_future_marked_sent_at_flush(rt):
+    """PENDING until the progress engine's flush publishes the frame —
+    the completion->future wiring through TxHandle.future."""
+    h = register_ifunc(rt.ctx, "task_sum")
+    fut = rt.submit("rdma", h, b"\x01")
+    assert fut.state is TaskState.PENDING        # posted, trailer withheld
+    rt.dispatcher.engine.flush()
+    assert fut.state is TaskState.SENT
+    assert fut.result() == 1
+
+
+def test_callbacks_and_wait_all(rt):
+    from repro.tasks import wait_all
+
+    h = register_ifunc(rt.ctx, "task_sum")
+    seen = []
+    futs = [rt.submit("loop", h, bytes([i])) for i in range(1, 5)]
+    futs[0].add_done_callback(lambda f: seen.append(f.corr_id))
+    assert wait_all(futs) == [1, 2, 3, 4]
+    assert seen == [futs[0].corr_id]
+    futs[1].add_done_callback(lambda f: seen.append("late"))  # fires inline
+    assert seen[-1] == "late"
+
+
+# ---------------------------------------------------------------------------
+# error paths: target raises -> exception future; ring survives
+
+
+def test_exception_future_and_ring_survival(rt):
+    h = register_ifunc(rt.ctx, "task_sum")
+    bad = rt.submit("rdma", h, b"\xff\x00")      # poison marker: main raises
+    good = rt.submit("rdma", h, b"\x02\x02")
+    with pytest.raises(RemoteExecutionError) as ei:
+        bad.result()
+    assert ei.value.remote_type == "ValueError"
+    assert bad.exception() is ei.value
+    assert good.result() == 4                    # the slot after was not wedged
+    peer = rt.dispatcher.peers["rdma"]
+    assert peer.stats["errors"] == 1
+    assert peer.stats["delivered"] == 2          # poisoned frame consumed
+    assert peer.credits == 4                     # all credits returned
+
+
+def test_fire_and_forget_exception_reraises(rt):
+    """corr_id == 0 has no future to carry an error: the exception must
+    surface to the poll caller (plain-dispatcher visibility), but only
+    after the poisoned slot was consumed — the ring survives."""
+    from repro.core import ifunc_msg_create
+
+    h = register_ifunc(rt.ctx, "task_sum")
+    assert rt.dispatcher.send("loop", ifunc_msg_create(h, b"\xff"))
+    with pytest.raises(ValueError, match="poisoned"):
+        rt.dispatcher.drain()
+    peer = rt.dispatcher.peers["loop"]
+    assert peer.stats["errors"] == 1
+    assert peer.credits == 4                     # slot consumed, not wedged
+    assert rt.submit("loop", h, b"\x01").result() == 1
+
+
+def test_submit_failure_does_not_leak_future(rt):
+    h = register_ifunc(rt.ctx, "task_sum")
+    with pytest.raises(TransportError):          # frame exceeds the 16K slot
+        rt.submit("rdma", h, b"x" * (64 << 10))
+    assert rt.pending() == 0 and not rt.futures
+
+
+def test_reply_lost_times_out(rt):
+    h = register_ifunc(rt.ctx, "task_sum")
+    peer = rt.dispatcher.peers["loop"]
+    peer.reply_channel.put = lambda *a, **k: None   # the wire eats the reply
+    fut = rt.submit("loop", h, b"\x01")
+    with pytest.raises(TaskTimeout):
+        fut.result(timeout=0.2)
+    assert not fut.done()                        # still pending, not resolved
+    assert peer.stats["replies"] == 1            # target did reply; it was lost
+    assert peer.stats["delivered"] == 1
+
+
+def test_duplicate_corr_id_reply_ignored(rt):
+    h = register_ifunc(rt.ctx, "task_sum")
+    fut = rt.submit("loop", h, b"\x03\x04")
+    assert fut.result() == 7
+    # forge a second reply with the same corr-id straight into the ring
+    peer = rt.dispatcher.peers["loop"]
+    mb = peer.reply_mailbox
+    frame = F.pack_reply("task_sum", wire.encode(999), F.CodeKind.PYBC,
+                         fut.corr_id)
+    mb.slot_view(mb.head)[:len(frame)] = frame
+    assert rt.dispatcher.poll_replies() == 1
+    assert rt.stats["orphan_replies"] == 1       # routed nowhere, counted
+    assert fut.result() == 7                     # value unchanged
+    # and a direct double-resolve is refused by the future itself
+    assert not fut.set_result(123)
+
+
+def test_reply_frame_rejected_on_request_ring(lib_dir):
+    """A FLAG_REPLY frame must never link/execute via poll_ifunc."""
+    ctx = Context("t", lib_dir=lib_dir)
+    frame = F.pack_reply("task_sum", wire.encode(1), F.CodeKind.PYBC, 9)
+    buf = bytearray(4 << 10)
+    buf[:len(frame)] = frame
+    assert poll_ifunc(ctx, buf, None, {}) == Status.REJECTED
+    assert "reply frame" in ctx.stats["last_reject"]
+
+
+# ---------------------------------------------------------------------------
+# corr-id survives the cached-fast-path NACK fallback
+
+
+def test_corr_id_survives_nack_retransmit(lib_dir):
+    src = Context("src", lib_dir=lib_dir)
+    rt = TaskRuntime(src, engine=ProgressEngine(flush_threshold=64),
+                     default_timeout=10.0)
+    tgt = Context("tgt", lib_dir=lib_dir, link_mode="remote")
+    rt.add_peer("p", RdmaFabric(), tgt, n_slots=4, slot_size=16 << 10,
+                target_args={})
+    h = register_ifunc(src, "task_sum")
+    assert rt.submit("p", h, b"\x01").result() == 1   # FULL; confirms digest
+    # evict at the target: the next SLIM task NACKs, retransmits FULL,
+    # and the future still resolves with the right value
+    assert tgt.link_cache.evict("task_sum", h.digest)
+    fut = rt.submit("p", h, b"\x02\x03")
+    assert fut.result() == 5
+    peer = rt.dispatcher.peers["p"]
+    assert peer.stats["nacks"] == 1 and peer.stats["resent"] == 1
+    assert rt.stats["orphan_replies"] == 0
+
+
+# ---------------------------------------------------------------------------
+# LinkCache LRU: bounded capacity makes eviction/NACK operational
+
+
+def test_link_cache_lru_eviction_and_stats():
+    c = LinkCache(capacity=2)
+    c.insert("a", b"1" * 16, "fa")
+    c.insert("b", b"2" * 16, "fb")
+    assert c.lookup("a", b"1" * 16) == "fa"      # touches a: b is now LRU
+    c.insert("c", b"3" * 16, "fc")               # evicts b
+    assert c.lookup("b", b"2" * 16) is None
+    assert c.lookup("a", b"1" * 16) == "fa"
+    s = c.stats()
+    assert s["evictions"] == 1 and s["size"] == 2 and s["capacity"] == 2
+    assert s["hits"] == 2 and s["misses"] == 1
+    with pytest.raises(Exception):
+        LinkCache(capacity=0)
+
+
+def test_link_cache_capacity_pressure_drives_nack_recovery(lib_dir):
+    """A capacity-1 target churns between two ifuncs: every SLIM send of
+    the evicted one NACKs and the dispatcher's FULL retransmit recovers —
+    the PR-2 fallback path exercised by cache pressure, not restarts."""
+    src = Context("src", lib_dir=lib_dir)
+    tgt = Context("tgt", lib_dir=lib_dir, link_mode="remote",
+                  link_cache=LinkCache(capacity=1))
+    d = Dispatcher(src, ProgressEngine(flush_threshold=64))
+    d.add_peer("p", RdmaFabric(), tgt, n_slots=4, slot_size=16 << 10,
+               target_args={"db": []})
+    from repro.core import ifunc_msg_create
+
+    h_sum = register_ifunc(src, "task_sum")
+    h_rle = register_ifunc(src, "rle_insert")
+    delivered = 0
+    for round_ in range(3):                      # alternate: constant churn
+        assert d.send("p", ifunc_msg_create(h_sum, b"\x01"))
+        delivered += d.drain()
+        assert d.send("p", ifunc_msg_create(h_rle, b"x"))
+        delivered += d.drain()
+    peer = d.peers["p"]
+    # every post-confirmation SLIM send of the evicted digest NACKed and
+    # was recovered by a FULL retransmit; nothing was lost
+    assert peer.stats["nacks"] >= 2
+    assert peer.stats["resent"] == peer.stats["nacks"]
+    assert peer.stats.get("nack_lost", 0) == 0
+    assert delivered == 6
+    assert tgt.link_cache.stats()["evictions"] >= 5
+    assert tgt.stats["nacks"] == peer.stats["nacks"]
+
+
+# ---------------------------------------------------------------------------
+# graph verbs over futures (host tier)
+
+
+def test_graph_relax_future_roundtrip(rt):
+    from repro.tasks.graph import decode_updates, local_relax, pack_csr_shard
+
+    h = register_ifunc(rt.ctx, "graph_relax")
+    edges = [(0, 1, 0.5), (0, 2, 2.0), (1, 2, 0.25), (3, 0, 1.0)]
+    packed = pack_csr_shard(0, 4, edges)
+    rt.dispatcher.peers["rdma"].target_args["shards"] = {7: packed}
+    frontier = [(0, 0.0), (1, 0.5)]
+    fut = rt.submit("rdma", h, {"sid": 7, "frontier": frontier})
+    upd = decode_updates(fut.result())
+    assert upd == {1: 0.5, 2: pytest.approx(0.75)}
+    # the shipped main and the source-side mirror agree exactly
+    assert upd == pytest.approx(local_relax(packed, frontier))
+    # unknown shard -> exception future, not a wedged ring
+    with pytest.raises(RemoteExecutionError):
+        rt.submit("rdma", h, {"sid": 99, "frontier": [(0, 0.0)]}).result()
+
+
+def test_graph_fetch_returns_shard_bytes(rt):
+    h = register_ifunc(rt.ctx, "graph_fetch")
+    blob = struct.pack("<IIf", 1, 2, 3.0) * 50
+    rt.dispatcher.peers["loop"].target_args["shards"] = {0: blob}
+    assert rt.submit("loop", h, {"sid": 0}).result() == blob
+
+
+# ---------------------------------------------------------------------------
+# device-mesh futures (sweep-correlated replies)
+
+
+def test_device_future_resolves(lib_dir):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.codegen import deserialize_uvm
+    from repro.parallel.sharding import make_mesh
+    from repro.transport.device_fabric import DeviceMeshFabric
+
+    T = 128
+    mesh = make_mesh((len(jax.devices()),), ("model",))
+    n_dev = mesh.shape["model"]
+    src = Context("src", lib_dir=lib_dir)
+    rt = TaskRuntime(src, Dispatcher(src, ProgressEngine(
+        inflight_window="trailer")), default_timeout=60.0)
+    h = register_ifunc(src, "uvm_affine")
+    W = np.eye(T, dtype=np.float32) * 0.5
+    rt.add_peer("tpu", DeviceMeshFabric(mesh, "model", shift=0), None,
+                n_slots=2, slot_size=128 << 10,
+                prog=deserialize_uvm(h.lib.code),
+                externals=jnp.broadcast_to(jnp.asarray(W)[None, None],
+                                           (n_dev, 1, T, T)))
+    x = np.random.default_rng(0).standard_normal((1, T, T)).astype(np.float32)
+    fut = rt.submit("tpu", h, x)
+    np.testing.assert_allclose(np.asarray(fut.result())[0],
+                               np.maximum(x[0] @ W, 0), rtol=1e-4, atol=1e-5)
+    assert rt.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# placement engine
+
+
+def _mk_placement(lib_dir, *, shard_bytes, code_confirmed=False):
+    rt = _mk_runtime(lib_dir, [("owner", LoopbackFabric()),
+                               ("idle", LoopbackFabric())])
+    h = register_ifunc(rt.ctx, "graph_relax")
+    directory = DataDirectory()
+    directory.register(0, "owner", shard_bytes)
+    eng = PlacementEngine(directory, rt.dispatcher)
+    if code_confirmed:
+        rt.dispatcher.peers["owner"].cached.add(h.lib.code_digest)
+    return rt, h, directory, eng
+
+
+def test_placement_migrate_vs_fetch_vs_local(lib_dir):
+    # big shard, confirmed code: shipping the frontier is cheap -> MIGRATE
+    rt, h, directory, eng = _mk_placement(lib_dir, shard_bytes=1 << 20,
+                                          code_confirmed=True)
+    p = eng.decide(0, h, arg_bytes=128)
+    assert p.decision is Decision.MIGRATE and p.peer == "owner"
+    assert p.costs["migrate"] < p.costs["fetch"]
+    assert eng.stats["migrate"] == 1
+    # tiny shard, cold code cache: pulling the data beats shipping code
+    rt, h, directory, eng = _mk_placement(lib_dir, shard_bytes=64)
+    p = eng.decide(0, h, arg_bytes=128)
+    assert p.decision is Decision.FETCH
+    # a local replica wins outright
+    directory.add_replica(0, LOCAL_SITE)
+    p = eng.decide(0, h, arg_bytes=128)
+    assert p.decision is Decision.LOCAL and p.peer is None
+    assert eng.stats["fetch"] == 1 and eng.stats["local"] == 1
+
+
+def test_placement_queue_pressure_steals(lib_dir):
+    """Locality says migrate; a backlogged owner flips the decision to a
+    fetch from an *uncongested* replica holder (fetching from the owner
+    itself would queue behind the same backlog and win nothing)."""
+    rt, h, directory, eng = _mk_placement(lib_dir, shard_bytes=1 << 20,
+                                          code_confirmed=True)
+    from repro.core import ifunc_msg_create
+
+    directory.add_replica(0, "idle")
+    hb = register_ifunc(rt.ctx, "task_sum")
+    for _ in range(4):                      # fill the ring, never drain
+        assert rt.dispatcher.send("owner", ifunc_msg_create(hb, b"x"))
+    assert eng.queue_depth("owner") == 4
+    p = eng.decide(0, h, arg_bytes=128)
+    assert p.decision is Decision.FETCH and p.stolen
+    assert p.peer == "idle"                 # sourced around the congestion
+    assert eng.stats["stolen"] == 1
+
+
+def test_placement_rebalance_moves_hot_shard(lib_dir):
+    rt, h, directory, eng = _mk_placement(lib_dir, shard_bytes=4 << 10,
+                                          code_confirmed=True)
+    from repro.core import ifunc_msg_create
+
+    hb = register_ifunc(rt.ctx, "task_sum")
+    assert eng.rebalance() == []            # no divergence yet
+    for _ in range(4):
+        assert rt.dispatcher.send("owner", ifunc_msg_create(hb, b"x"))
+    directory.touch(0, 5.0)
+    moves = eng.rebalance(eligible=["owner", "idle"])
+    assert moves == [(0, "owner", "idle")]
+    assert directory.owner(0) == "idle"
+    assert "idle" in directory.lookup(0).replicas
+    assert eng.stats["rebalances"] == 1
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+
+
+def test_wire_roundtrips():
+    assert wire.decode(wire.encode(b"raw")) == b"raw"
+    assert wire.decode(wire.encode({"a": [1, 2], "b": None})) == {
+        "a": [1, 2], "b": None}
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    np.testing.assert_array_equal(wire.decode(wire.encode(arr)), arr)
+    scalar = wire.decode(wire.encode(np.float32(2.5)))
+    assert scalar == np.float32(2.5) and scalar.shape == ()
+    err = wire.decode(wire.encode_error(ValueError("boom")))
+    assert isinstance(err, RemoteExecutionError)
+    assert err.remote_type == "ValueError" and "boom" in str(err)
+    with pytest.raises(wire.WireError):
+        wire.decode(b"")
+    with pytest.raises(wire.WireError):
+        wire.encode(object())
+
+
+def test_run_local_uniform_future(rt):
+    ok = rt.run_local(lambda a, b: a + b, 2, 3)
+    assert ok.done() and ok.result() == 5
+    bad = rt.run_local(lambda: 1 / 0)
+    with pytest.raises(ZeroDivisionError):
+        bad.result()
