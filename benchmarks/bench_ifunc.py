@@ -428,3 +428,78 @@ def bench_uvm(n_tiles: int = 8, iters: int = 5) -> list[dict]:
     dt = (time.perf_counter() - t0) / iters
     return [{"bench": "uvm", "api": "ifunc-vm", "size": n_tiles * 128 * 128 * 4,
              "us": dt * 1e6}]
+
+
+def bench_flow_chain(n_iters: int = 40, stage_counts: tuple = (3, 5),
+                     payload_bytes: int = 32 << 10) -> list[dict]:
+    """'fig_flow': an N-stage continuation chain vs the same N stages as
+    host-coordinated round-trips.
+
+    Both arms run the identical ``flow_xform`` stage at the identical
+    peers over the identical fabrics (alternating RDMA / loopback), so
+    the compute and the per-hop wire work cancel out.  What differs is
+    the *coordination*: the chain submits one frame and the result
+    forwards peer-to-peer via continuation descriptors (N+1 frames, no
+    intermediate reply codec passes, one future); the round-trip arm
+    pays, per stage, a reply encode + reply frame + drain + decode + a
+    fresh submit (2N frames, N futures).  An N-stage chain finishing
+    faster than N round-trips is the PR's acceptance bar, enforced by
+    ``check_bench.py`` on the persisted rows.
+    """
+    from repro.flow import Flow, FlowEngine
+    from repro.tasks import TaskRuntime
+    from repro.transport import LoopbackFabric, ProgressEngine, RdmaFabric
+
+    libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
+    blob = bytes(range(256)) * (payload_bytes // 256)
+    SLOT = 128 << 10
+    rows = []
+    for n_stages in stage_counts:
+        peers = [f"hop{i}" for i in range(n_stages)]
+        fabrics = [RdmaFabric() if i % 2 == 0 else LoopbackFabric()
+                   for i in range(n_stages)]
+        expect = blob if n_stages % 2 == 0 else blob[::-1]
+
+        # -- continuation chain ------------------------------------------
+        eng = FlowEngine(Context("host", lib_dir=libdir),
+                         default_timeout=60.0)
+        for p, fab in zip(peers, fabrics):
+            eng.add_node(p, fab, slot_size=SLOT)
+        flow = Flow(f"chain{n_stages}")
+        for p in peers:
+            flow.stage("flow_xform", at=p)
+        assert eng.submit(flow, blob).result() == expect  # link + warm SLIM
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            assert eng.submit(flow, blob).result() == expect
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "fig_flow", "api": "chain",
+                     "size": payload_bytes,
+                     "cell": f"chain/{n_stages}stage", "us": dt * 1e6,
+                     "msgs_per_s": 1 / dt})
+
+        # -- host-coordinated round-trips --------------------------------
+        rt = TaskRuntime(Context("host-rt", lib_dir=libdir),
+                         engine=ProgressEngine(flush_threshold=8,
+                                               inflight_window="trailer"),
+                         default_timeout=60.0)
+        for p, fab in zip(peers, fabrics):
+            rt.add_peer(p, fab, Context(p, lib_dir=libdir),
+                        n_slots=8, slot_size=SLOT, target_args={})
+        h = register_ifunc(rt.ctx, "flow_xform")
+
+        def roundtrip(data):
+            for p in peers:
+                data = rt.submit(p, h, data).result()
+            return data
+
+        assert roundtrip(blob) == expect                  # link + warm SLIM
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            assert roundtrip(blob) == expect
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "fig_flow", "api": "roundtrip",
+                     "size": payload_bytes,
+                     "cell": f"roundtrip/{n_stages}stage", "us": dt * 1e6,
+                     "msgs_per_s": 1 / dt})
+    return rows

@@ -10,7 +10,10 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
    fast path;
 3. (BENCH_PR3 / any file with fig_graph rows) at the *largest* shard
    size, migrate-code-to-data beats fetch-data-to-host — the locality
-   bet the placement engine's cost model is built on.
+   bet the placement engine's cost model is built on;
+4. (BENCH_PR4 / any file with fig_flow rows) at every stage count, the
+   continuation chain beats the same stages as host-coordinated
+   round-trips — forwarding results along the path must actually win.
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -67,6 +70,20 @@ def check(path: pathlib.Path) -> int:
         assert mig < fet, (
             f"migrate not faster than fetch at the largest shard "
             f"({big}B: {mig} >= {fet}) — moving code must beat moving data")
+
+    flow = {r["cell"]: r["us"] for r in rows if r["bench"] == "fig_flow"}
+    nstages = sorted(int(c.split("/")[1].rstrip("stage")) for c in flow
+                     if c.startswith("chain/"))
+    if "PR4" in path.name:
+        assert nstages, "no fig_flow chain/* rows"
+    for n in nstages:
+        chain, rtrip = flow[f"chain/{n}stage"], flow[f"roundtrip/{n}stage"]
+        print(f"fig_flow   {n:>2}stages: chain={chain:8.2f}us "
+              f"roundtrip={rtrip:8.2f}us -> {rtrip / chain:.2f}x")
+        assert chain < rtrip, (
+            f"{n}-stage continuation chain not faster than host-coordinated "
+            f"round-trips ({chain} >= {rtrip}) — forwarding along the path "
+            f"must beat hailing the host between stages")
 
     print(f"{path.name}: {len(rows)} rows OK")
     return 0

@@ -5,6 +5,8 @@
   fig5_cached      FULL re-injection vs SLIM cached invocation vs AM
   fig_graph        task placement: migrate-code-to-data vs fetch-data-to-
                    host vs run-local across shard sizes
+  fig_flow         N-stage continuation chain vs N host-coordinated
+                   round-trips
   s34_link_cost    first-arrival link+verify vs hash-table-cached dispatch
   tierB_uvm        device-tier μVM injected-program execution
   micro_slab       fresh-bytearray vs slab in-place frame packing
@@ -13,14 +15,17 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
 normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?}``
-so future PRs can diff the trajectory: transport/cached-fast-path rows to
-``BENCH_PR2.json``, task-placement (``fig_graph``) rows to
-``BENCH_PR3.json``, both at the repo root; a full run additionally keeps
-the raw rows in experiments/bench_results.json.
+to the CURRENT PR's trajectory file only (``BENCH_PR4.json`` at the repo
+root) — prior ``BENCH_PR*.json`` files are committed history and are
+never rewritten (PR 3's harness accidentally churned ``BENCH_PR2.json``
+on every re-run; the per-PR-file routing that caused that is gone).  The
+output is deterministic: rows sorted by (bench, cell), keys sorted, so a
+re-run with identical numbers produces an identical file.  A full run
+additionally keeps the raw rows in experiments/bench_results.json.
 
 ``--quick`` (the CI smoke mode) runs the cached-fast-path suite
-(fig5_cached + the two microbenches) plus fig_graph with reduced
-iteration counts.
+(fig5_cached + the two microbenches) plus fig_graph and fig_flow with
+reduced iteration counts.
 """
 
 from __future__ import annotations
@@ -37,9 +42,7 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
-BENCH_OUT = ROOT / "BENCH_PR2.json"
-BENCH_OUT3 = ROOT / "BENCH_PR3.json"
-PR3_BENCHES = {"fig_graph"}     # task-runtime rows live in their own file
+CURRENT = ROOT / "BENCH_PR4.json"    # the ONE file this harness writes
 
 
 def _emit(rows: list[dict]) -> None:
@@ -108,6 +111,12 @@ def fig_graph(quick: bool = False) -> list[dict]:
     return B.bench_graph_placement()
 
 
+def fig_flow(quick: bool = False) -> list[dict]:
+    if quick:
+        return B.bench_flow_chain(n_iters=15, stage_counts=(3,))
+    return B.bench_flow_chain()
+
+
 def s34_link_cost() -> list[dict]:
     return B.bench_link_cost()
 
@@ -151,36 +160,37 @@ def main() -> None:
     if args.quick:
         suites = [lambda: fig5_cached(quick=True),
                   lambda: fig_graph(quick=True),
+                  lambda: fig_flow(quick=True),
                   lambda: micro_slab(quick=True),
                   lambda: micro_checksum(quick=True)]
     else:
         suites = [fig3_latency, fig4_throughput, fig5_cached, fig_graph,
-                  s34_link_cost, tierB_uvm, transport_fanout, micro_slab,
-                  micro_checksum, roofline_summary]
+                  fig_flow, s34_link_cost, tierB_uvm, transport_fanout,
+                  micro_slab, micro_checksum, roofline_summary]
     all_rows = []
     for fn in suites:
         rows = fn()
         _emit(rows)
         all_rows += rows
-    # merge by (bench, cell): a --quick run refreshes only the cells it
-    # measured and preserves the rest of a committed full-run trajectory;
-    # task-runtime benches persist to their own PR3 file
-    for path, mine in ((BENCH_OUT, lambda b: b not in PR3_BENCHES),
-                       (BENCH_OUT3, lambda b: b in PR3_BENCHES)):
-        merged: dict[tuple, dict] = {}
-        if path.exists():
-            try:
-                for r in json.loads(path.read_text()):
-                    merged[(r["bench"], r["cell"])] = r
-            except (ValueError, KeyError, TypeError):
-                merged = {}                    # unparseable: start fresh
-        rows = [r for r in _normalize(all_rows) if mine(r["bench"])]
-        for r in rows:
-            merged[(r["bench"], r["cell"])] = r
-        if merged:
-            path.write_text(json.dumps(list(merged.values()), indent=1))
-            print(f"# {len(rows)} rows measured, {len(merged)} in trajectory "
-                  f"-> {path}", file=sys.stderr)
+    # merge by (bench, cell) into the CURRENT PR's file only: a --quick
+    # run refreshes just the cells it measured and preserves the rest of
+    # a committed full-run trajectory.  Prior BENCH_PR*.json files are
+    # frozen history — this harness never opens them for writing.
+    merged: dict[tuple, dict] = {}
+    if CURRENT.exists():
+        try:
+            for r in json.loads(CURRENT.read_text()):
+                merged[(r["bench"], r["cell"])] = r
+        except (ValueError, KeyError, TypeError):
+            merged = {}                        # unparseable: start fresh
+    rows = _normalize(all_rows)
+    for r in rows:
+        merged[(r["bench"], r["cell"])] = r
+    if merged:
+        out = sorted(merged.values(), key=lambda r: (r["bench"], r["cell"]))
+        CURRENT.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
+        print(f"# {len(rows)} rows measured, {len(merged)} in trajectory "
+              f"-> {CURRENT}", file=sys.stderr)
     if not args.quick:
         OUT.parent.mkdir(parents=True, exist_ok=True)
         OUT.write_text(json.dumps(all_rows, indent=1))

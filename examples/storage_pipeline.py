@@ -1,0 +1,176 @@
+"""Storage ETL + scatter/gather analytics over the flow engine — remote
+continuations end to end.
+
+The paper's tiered-offload scenario (host CPU, SmartNICs/DPUs, CSDs) with
+the PR-4 twist: multi-step computations chain *along the path* instead of
+round-tripping every stage's result through the submitting host.
+
+Topology (all host-tier fabrics):
+
+* ``csd``            LoopbackFabric — the bus-attached computational
+                     storage device holding compressed record blobs
+* ``dpu_a``/``dpu_b`` RdmaFabric — two filter offload engines; each chain
+                     picks one at submit time by *hop pricing* (wire model
+                     + live queue depth), so a congested DPU loses work
+* ``agg``            RdmaFabric — the aggregation server
+
+Act 1 — ETL chain (``csd_decompress -> dpu_filter -> host_aggregate``):
+the host submits ONE frame per batch; the CSD decompresses, forwards the
+records peer-to-peer to a DPU (continuation descriptor in the frame), the
+DPU filters, forwards the survivors to the aggregator, and only the final
+summary comes back.  Mid-run, a burst of unconsumed frames congests
+``dpu_a`` and the hop pricer steers subsequent chains to ``dpu_b``.
+
+Act 2 — scatter/gather analytics: a weight-threshold edge count over CSR
+graph shards resident at three peers.  The query scatters ``graph_count``
+to every shard owner, the partial counts rendezvous at ``agg`` where
+``flow_reduce`` sums them (partial aggregation at the gather peer, not
+the host), and one integer comes home.
+
+Act 3 — error short-circuit: a chain probing a nonexistent shard dies at
+its second hop; the ERR reply carries the failing hop and the downstream
+aggregate stage never runs.
+
+    PYTHONPATH=src python examples/storage_pipeline.py
+"""
+
+import os
+import pathlib
+import struct
+import sys
+
+os.environ.setdefault("REPRO_IFUNC_LIB_DIR",
+                      str(pathlib.Path(__file__).resolve().parents[1] / "ifunc_libs"))
+
+import numpy as np
+
+from repro.core import Context, register_ifunc
+from repro.flow import Flow, FlowEngine
+from repro.tasks.graph import pack_csr_shard
+from repro.tasks.wire import RemoteExecutionError
+from repro.transport import LoopbackFabric, RdmaFabric
+
+THRESHOLD = 3_000_000_000           # keep the top ~30% of u32 records
+BATCHES = 6
+CONGEST_BATCH = 3
+
+origin = Context("host")
+eng = FlowEngine(origin, default_timeout=60.0)
+eng.add_node("csd", LoopbackFabric(), slot_size=256 << 10)
+eng.add_node("dpu_a", RdmaFabric(), slot_size=256 << 10)
+eng.add_node("dpu_b", RdmaFabric(), slot_size=256 << 10)
+eng.add_node("agg", RdmaFabric(), slot_size=256 << 10)
+
+# --- Act 1: the ETL chain ---------------------------------------------------
+rng = np.random.default_rng(11)
+
+
+def make_blob(nrecords: int) -> tuple[bytes, np.ndarray]:
+    """RLE-compressed u32 records (runs of 1..8) + the expanded reference."""
+    vals = rng.integers(0, 1 << 32, size=nrecords // 4, dtype=np.uint32)
+    counts = rng.integers(1, 9, size=vals.size, dtype=np.uint32)
+    blob = struct.pack("<I", vals.size) + b"".join(
+        struct.pack("<II", int(v), int(c)) for v, c in zip(vals, counts))
+    return blob, np.repeat(vals, counts)
+
+
+def etl_flow() -> Flow:
+    return (Flow("etl")
+            .stage("csd_decompress", at="csd")
+            .then("dpu_filter", at=["dpu_a", "dpu_b"],
+                  bind={"mode": "kw", "key": "data",
+                        "static": {"threshold": THRESHOLD}},
+                  est_bytes=64 << 10)
+            .then("host_aggregate", at="agg"))
+
+
+picked = {"dpu_a": 0, "dpu_b": 0}
+for batch in range(BATCHES):
+    if batch == CONGEST_BATCH:
+        # background burst: unconsumed frames pile up on csd's lane to
+        # dpu_a, so the hop pricer's queue term steers chains to dpu_b
+        bump = register_ifunc(eng.nodes["csd"].ctx, "counter_bump")
+        for _ in range(6):
+            eng.nodes["csd"].dispatcher.send_ifunc("dpu_a", bump, b"bg")
+        print(f"  batch {batch}: congested dpu_a "
+              f"(queue depth {eng.nodes['csd'].pricer.queue_depth('dpu_a')})")
+    blob, records = make_blob(2048)
+    entries = etl_flow().compile(eng)
+    picked[entries[1].peer] += 1
+    fut = eng.submit(etl_flow(), blob)
+    got = fut.result()
+    kept = records[records >= THRESHOLD]
+    want = {"count": int(kept.size), "sum": int(kept.sum()),
+            "min": int(kept.min()) if kept.size else 0,
+            "max": int(kept.max()) if kept.size else 0}
+    assert got == want, (got, want)
+    print(f"  batch {batch}: {len(blob)}B blob -> {records.size} records "
+          f"-> {got['count']} kept (filter @ {entries[1].peer}), "
+          f"sum verified")
+
+eng.drain()
+assert picked["dpu_a"] > 0 and picked["dpu_b"] > 0, (
+    f"hop pricing never steered around congestion: {picked}")
+
+# steady state is the cached fast path: post-warmup hops go SLIM
+slim_sent = sum(p.stats["slim_sent"]
+                for node in eng.nodes.values()
+                for p in node.dispatcher.peers.values())
+assert slim_sent > 0, "no SLIM frames — cached fast path never engaged"
+
+# --- Act 2: scatter/gather analytics over graph shards ----------------------
+V, N_SHARDS = 96, 3
+edges = [(int(rng.integers(0, V)), int(rng.integers(0, V)),
+          float(rng.uniform(0.0, 1.0))) for _ in range(4000)]
+RANGE = V // N_SHARDS
+owners = ["csd", "dpu_a", "dpu_b"]
+for s, owner in enumerate(owners):
+    shard = [(u, v, w) for u, v, w in edges if u // RANGE == s]
+    eng.nodes[owner].target_args.setdefault("shards", {})[s] = \
+        pack_csr_shard(s * RANGE, RANGE, shard)
+
+WMIN = 0.75
+query = (Flow("edge-count")
+         .scatter("graph_count", at=owners,
+                  binds=[{"mode": "static",
+                          "static": {"sid": s, "wmin": WMIN}}
+                         for s in range(N_SHARDS)])
+         .gather("flow_reduce", at="agg"))
+total = eng.submit(query, None).result()
+want_total = sum(1 for _, _, w in edges if w >= WMIN)
+assert total == want_total, (total, want_total)
+agg = eng.nodes["agg"].stats
+assert agg["gather_reduced"] >= 1 and agg["gather_buffered"] >= N_SHARDS
+print(f"  analytics: {total} edges with w >= {WMIN} across {N_SHARDS} "
+      f"shards (reduced at agg: {agg['gather_buffered']} branch arrivals, "
+      f"{agg['gather_reduced']} reductions)")
+
+# --- Act 3: error short-circuit ---------------------------------------------
+bad = (Flow("bad-probe")
+       .stage("csd_decompress", at="csd")
+       .then("graph_count", at="dpu_a",
+             bind={"mode": "static", "static": {"sid": 99, "wmin": 0.0}})
+       .then("host_aggregate", at="agg"))
+agg_execd = eng.nodes["agg"].ctx.stats["executed"]
+try:
+    eng.submit(bad, make_blob(64)[0]).result()
+    raise SystemExit("expected the bad chain to fail")
+except RemoteExecutionError as e:
+    assert e.hop == "graph_count@dpu_a", e.hop
+    assert eng.nodes["agg"].ctx.stats["executed"] == agg_execd, (
+        "downstream stage ran after the short-circuit")
+    print(f"  short-circuit: chain died at {e.hop} "
+          f"({e.remote_type}); aggregate stage never ran")
+
+# --- the invariant the whole PR is about ------------------------------------
+eng.drain()
+host = eng.origin.dispatcher.stats
+assert eng.pending() == 0 and eng.stats["orphan_replies"] == 0
+print(f"host sent {host['sent']} frames for "
+      f"{eng.stats['submitted']} flows "
+      f"({eng.stats['completed']} completed, {eng.stats['errors']} failed) "
+      f"— intermediate results never touched the host")
+print("per-node flow stats:")
+eng.print_stats()
+print("FLOW_OK")
+sys.exit(0)

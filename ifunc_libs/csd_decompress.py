@@ -1,0 +1,37 @@
+"""Storage verb: RLE-decompress a record blob *at the CSD* — stage one of
+the ETL chain in ``examples/storage_pipeline.py``.
+
+The computational-storage move: the compressed blob never crosses to the
+host — it is injected to (or already resident at) the bus-attached
+target, decompresses there, and the flow layer forwards the expanded
+records straight to the next hop (the DPU filter) via the frame's
+continuation descriptor.
+
+Payload: ``nruns(u32) | (value u32, count u32) x nruns``  (RLE runs)
+Result:  the expanded records, one u32 each (``target_args["result"]``).
+
+Like every shipped verb, the main leans only on resident symbols
+(``struct``) — it relinks on a target that never imported this module.
+"""
+
+
+def csd_decompress_main(payload, payload_size, target_args):
+    (nruns,) = struct.unpack_from("<I", payload, 0)      # noqa: F821
+    out = bytearray()
+    off = 4
+    for _ in range(nruns):
+        v, c = struct.unpack_from("<II", payload, off)   # noqa: F821
+        out += struct.pack("<I", v) * c                  # noqa: F821
+        off += 8
+    target_args["result"] = bytes(out)
+
+
+def csd_decompress_payload_get_max_size(source_args, source_args_size):
+    return max(len(source_args), 4)
+
+
+def csd_decompress_payload_init(payload, payload_size, source_args,
+                                source_args_size):
+    n = len(source_args)
+    payload[:n] = bytes(source_args)
+    return max(n, 4)

@@ -1,0 +1,35 @@
+"""Storage verb: predicate-filter u32 records *on the DPU* — stage two of
+the ETL chain in ``examples/storage_pipeline.py``.
+
+Receives the decompressed records forwarded peer-to-peer by the CSD stage
+(a ``kw`` bind: ``{"mode": "kw", "key": "data", "static": {"threshold":
+T}}``), keeps the records ``>= threshold``, and hands the survivors to
+the next hop.  Only the filtered subset continues down the chain — the
+bandwidth asymmetry in-network filtering exists for.
+
+Payload: ``threshold(u32) | record u32 x n``
+Result:  the surviving records, one u32 each (``target_args["result"]``).
+"""
+
+
+def dpu_filter_main(payload, payload_size, target_args):
+    (threshold,) = struct.unpack_from("<I", payload, 0)  # noqa: F821
+    n = (payload_size - 4) // 4
+    vals = struct.unpack_from("<%dI" % n, payload, 4)    # noqa: F821
+    kept = [v for v in vals if v >= threshold]
+    target_args["result"] = struct.pack(                 # noqa: F821
+        "<%dI" % len(kept), *kept)
+
+
+def dpu_filter_payload_get_max_size(source_args, source_args_size):
+    return 4 + len(source_args["data"])
+
+
+def dpu_filter_payload_init(payload, payload_size, source_args,
+                            source_args_size):
+    import struct
+
+    data = bytes(source_args["data"])
+    struct.pack_into("<I", payload, 0, int(source_args["threshold"]))
+    payload[4:4 + len(data)] = data
+    return 4 + len(data)

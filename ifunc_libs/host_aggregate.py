@@ -1,0 +1,32 @@
+"""Storage verb: aggregate u32 records — the ETL chain's terminal stage.
+
+Receives the filtered records from the DPU hop and reduces them to
+summary statistics; with an empty remaining chain, the flow layer packs
+this result into the final OK reply to the origin — the only frame the
+submitting host ever sees for the whole chain.
+
+Payload: ``record u32 x n``  (raw bind: the upstream result as-is)
+Result:  ``{"count": n, "sum": s, "min": lo, "max": hi}``
+"""
+
+
+def host_aggregate_main(payload, payload_size, target_args):
+    n = payload_size // 4
+    vals = struct.unpack_from("<%dI" % n, payload, 0)    # noqa: F821
+    target_args["result"] = {
+        "count": n,
+        "sum": sum(vals),
+        "min": min(vals) if vals else 0,
+        "max": max(vals) if vals else 0,
+    }
+
+
+def host_aggregate_payload_get_max_size(source_args, source_args_size):
+    return max(len(source_args), 1)
+
+
+def host_aggregate_payload_init(payload, payload_size, source_args,
+                                source_args_size):
+    data = bytes(source_args)
+    payload[:len(data)] = data
+    return max(len(data), 1)

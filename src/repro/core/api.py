@@ -61,6 +61,9 @@ class Context:
     lib_dir: pathlib.Path | None = None      # target-side library search dir
     link_mode: str = "remote"                # "remote" (GOT reconstruction) |
                                              # "local" (paper prototype: lib on fs)
+    flow: object = None                      # continuation hook (repro.flow):
+                                             # handles FLAG_CONT frames —
+                                             # execute + forward peer-to-peer
     symbol_space: CG.SymbolSpace = field(default_factory=CG.SymbolSpace)
     link_cache: LinkCache = field(default_factory=LinkCache)
     handles: dict[str, "IfuncHandle"] = field(default_factory=dict)
@@ -95,6 +98,8 @@ class IfuncMsg:
     slim: bool = False
     corr_id: int = 0       # mirrors the sealed header field so the send
     #                        path never re-parses the header to learn it
+    cont: bytes | None = None   # mirrors the sealed continuation section,
+    #                             for the same no-reparse reason
 
     @property
     def nbytes(self) -> int:
@@ -103,7 +108,12 @@ class IfuncMsg:
     @property
     def payload_view(self) -> memoryview:
         hdr = F.peek_header(self.frame)
-        return memoryview(self.frame)[hdr.payload_offset:hdr.frame_len - F.TRAILER_LEN]
+        return memoryview(self.frame)[hdr.payload_offset:hdr.cont_offset]
+
+    @property
+    def cont_view(self) -> memoryview | None:
+        """The continuation descriptor section, if the frame carries one."""
+        return F.frame_cont(self.frame, F.peek_header(self.frame))
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +135,8 @@ def deregister_ifunc(ctx: Context, handle: IfuncHandle) -> None:
 
 def ifunc_msg_create(handle: IfuncHandle, source_args,
                      source_args_size: int | None = None, *,
-                     slim: bool = False, corr_id: int = 0) -> IfuncMsg:
+                     slim: bool = False, corr_id: int = 0,
+                     cont: bytes | None = None) -> IfuncMsg:
     """Build a frame.  payload_init writes *directly into the frame buffer*
     (zero-copy, paper §3.1 'eliminate unnecessary memory copies'); a
     shrinking payload truncates the buffer in place — the code section is
@@ -138,6 +149,10 @@ def ifunc_msg_create(handle: IfuncHandle, source_args,
     ``corr_id`` nonzero asks the target for a result-return reply frame
     carrying the same id (the task runtime's Future path; see
     ``repro.tasks``).
+
+    ``cont`` appends a packed continuation descriptor (``repro.flow``):
+    the executing target forwards its result straight to the descriptor's
+    next hop instead of replying to the source.
     """
     lib = handle.lib
     if source_args_size is None:
@@ -147,35 +162,41 @@ def ifunc_msg_create(handle: IfuncHandle, source_args,
             source_args_size = 0
     max_size = int(lib.payload_get_max_size(source_args, source_args_size))
     code = b"" if slim else lib.code
-    frame = bytearray(F.HEADER_LEN + len(code) + max_size + F.TRAILER_LEN)
+    cont_len = 0 if cont is None else len(cont)
+    frame = bytearray(F.HEADER_LEN + len(code) + max_size + cont_len
+                      + F.TRAILER_LEN)
     pv = F.frame_payload_view(frame, len(code), max_size)
     used = lib.payload_init(pv, max_size, source_args, source_args_size)
     used = max_size if used in (None, 0) else int(used)
     frame_len = F.seal_frame(frame, lib.name, code, lib.kind, used,
                              digest=lib.code_digest, slim=slim,
-                             corr_id=corr_id)
+                             corr_id=corr_id, cont=cont)
     if frame_len < len(frame):       # shrink: truncate, don't re-pack
         try:
             pv.release()
             del frame[frame_len:]
         except BufferError:          # payload_init leaked a view: copy out
             frame = bytearray(memoryview(frame)[:frame_len])
-    return IfuncMsg(handle, frame, slim=slim, corr_id=corr_id)
+    return IfuncMsg(handle, frame, slim=slim, corr_id=corr_id, cont=cont)
 
 
 def ifunc_msg_to_full(msg: IfuncMsg) -> IfuncMsg:
     """Rebuild a FULL frame from a SLIM message (same payload, code
     restored from the handle's library) — the NACK_UNCACHED fallback.
-    The correlation id survives the rebuild, so a retransmitted task
-    still resolves its Future."""
+    The correlation id *and* any continuation descriptor survive the
+    rebuild, so a retransmitted task still resolves its Future and a
+    retransmitted flow hop still knows where to forward."""
     if not msg.slim:
         return msg
     lib = msg.handle.lib
     hdr = F.peek_header(msg.frame)
     corr = msg.corr_id or (0 if hdr is None else hdr.corr_id)
+    cont = None if hdr is None else F.frame_cont(msg.frame, hdr)
+    cont = msg.cont if cont is None else bytes(cont)
     frame = F.pack_frame(lib.name, lib.code, bytes(msg.payload_view),
-                         lib.kind, digest=lib.code_digest, corr_id=corr)
-    return IfuncMsg(msg.handle, frame, slim=False, corr_id=corr)
+                         lib.kind, digest=lib.code_digest, corr_id=corr,
+                         cont=cont)
+    return IfuncMsg(msg.handle, frame, slim=False, corr_id=corr, cont=cont)
 
 
 def ifunc_msg_free(msg: IfuncMsg) -> None:
@@ -287,6 +308,11 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
                 return Status.IN_PROGRESS
             ctx.wait_mem(spins)
         code, payload = F.frame_sections(buf, hdr)
+        cont = F.frame_cont(buf, hdr)
+        if cont is not None and ctx.flow is None:
+            # a continuation frame needs a forwarding hook installed — one
+            # landing on a plain target is a flow-topology routing bug
+            raise F.FrameError("continuation frame on a flow-less target")
         # Cached dispatch (§3.4): the header digest IS the cache key — a
         # hit costs one dict lookup, no sha256, no code-section read.
         fn = ctx.link_cache.lookup(hdr.name, hdr.digest)
@@ -313,8 +339,24 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
         if clear:
             F.scrub_slot(buf)     # best-effort clear of the bad slot
         return Status.REJECTED
-    fn(payload, len(payload), target_args)
-    ctx.stats["executed"] += 1
+    if cont is not None:
+        # flow frame: the hook owns execution — it runs (or buffers, for a
+        # gather rendezvous) the linked fn, catches the stage's exception
+        # as an ERR short-circuit to the flow's origin, and forwards the
+        # result to the descriptor's next hop via this node's dispatcher.
+        # A FrameError out of the hook means the descriptor itself is
+        # ill-formed: reject the frame like any other corruption.
+        try:
+            ctx.flow.on_flow_frame(ctx, hdr, fn, payload, cont, target_args)
+        except F.FrameError as e:
+            ctx.stats["rejected"] += 1
+            ctx.stats["last_reject"] = f"{type(e).__name__}: {e}"
+            if clear:
+                F.scrub_slot(buf)
+            return Status.REJECTED
+    else:
+        fn(payload, len(payload), target_args)
+        ctx.stats["executed"] += 1
     ctx.stats["bytes_in"] += hdr.frame_len
     if clear:
         F.clear_frame(buf, hdr)

@@ -1,13 +1,13 @@
 """ifunc message frame, v2 (paper Fig. 1 + the §3.4 cached fast path +
-the task-runtime reply path).
+the task-runtime reply path + the flow layer's continuation section).
 
 Layout (little-endian), extending the paper's
 ``FRAME_LEN | GOT_OFFSET | PAYLOAD_OFFSET | IFUNC_NAME | SIGNAL | CODE |
-PAYLOAD | SIGNAL`` with a flags word, a 16-byte code digest, and a 64-bit
-correlation id:
+PAYLOAD | SIGNAL`` with a flags word, a 16-byte code digest, a 64-bit
+correlation id, and an optional continuation descriptor section:
 
     offset  size  field
-    0       4     magic            0x1F5C0DE7 (frame format v2.1)
+    0       4     magic            0x1F5C0DE8 (frame format v2.2)
     4       8     frame_len        total bytes incl. trailer
     12      4     code_offset      start of code section (== HEADER_LEN)
     16      8     payload_offset   start of payload section
@@ -16,12 +16,17 @@ correlation id:
     60      4     flags            bit 0: FLAG_SLIM (code section elided)
                                    bit 1: FLAG_REPLY (result-return frame)
                                    bit 2: FLAG_ERR (reply carries an error)
+                                   bit 3: FLAG_CONT (continuation present)
     64      16    code_digest      truncated sha256 of the FULL code section
     80      8     corr_id          request/reply correlation (0 = no reply
                                    expected; covered by the header signal)
-    88      4     header_signal    fletcher32 over bytes [0, 88)
-    92      ...   code             serialized code section (empty when SLIM)
+    88      8     cont_offset      start of the continuation descriptor
+                                   section (== end of payload; the section
+                                   is empty unless FLAG_CONT is set)
+    96      4     header_signal    fletcher32 over bytes [0, 96)
+    100     ...   code             serialized code section (empty when SLIM)
     ...     ...   payload
+    ...     ...   continuation descriptor (only with FLAG_CONT)
     last 4        trailer_signal   0xD0E1F2A3 — written last; its arrival
                                    means the whole frame has been delivered
 
@@ -54,6 +59,20 @@ v2.1 additions (the task-runtime reply path):
   reply whose payload encodes the exception the ifunc raised instead of
   a value.  Reply frames never link or execute: ``poll_ifunc`` rejects
   one arriving on a request ring.
+
+v2.2 additions (the flow layer's remote continuations, ``repro.flow``):
+
+* ``FLAG_CONT`` marks a frame that carries a *continuation descriptor
+  section* between the payload and the trailer: next-hop peer route, next
+  ifunc digest, arg-binding spec, and the originating corr_id (see
+  ``repro.flow.descriptor``).  ``cont_offset`` bounds the payload from
+  above, so the executing ifunc never sees the descriptor bytes; the
+  target's flow hook reads them via :func:`frame_cont` after (or, for
+  gather rendezvous, before) execution and forwards the result straight
+  to the next hop — the source only ever sees the final reply.
+* Continuations and replies are mutually exclusive: a FLAG_REPLY frame
+  with a non-empty continuation section is rejected as ill-formed, as is
+  a FLAG_CONT frame arriving at a target with no flow hook installed.
 """
 
 from __future__ import annotations
@@ -68,19 +87,21 @@ try:  # vectorized checksum; core still works on a numpy-free interpreter
 except ImportError:  # pragma: no cover - numpy is a repo-wide dependency
     _np = None
 
-MAGIC = 0x1F5C0DE7          # bumped: v2.1 header (flags + digest + corr_id)
+MAGIC = 0x1F5C0DE8          # bumped: v2.2 header (+ continuation section)
 TRAILER = 0xD0E1F2A3
-HEADER_LEN = 92
+HEADER_LEN = 100
 NAME_LEN = 32
 TRAILER_LEN = 4
 DIGEST_LEN = 16
 FLAG_SLIM = 0x1
 FLAG_REPLY = 0x2
 FLAG_ERR = 0x4
-SIGNAL_OFF = 88             # header signal location; fletcher32 over [0, 88)
+FLAG_CONT = 0x8
+SIGNAL_OFF = 96             # header signal location; fletcher32 over [0, 96)
 
-_HEADER_FMT = "<IQIQI32sI16sQ"  # magic, frame_len, code_off, payload_off,
-                                # kind, name, flags, digest, corr_id
+_HEADER_FMT = "<IQIQI32sI16sQQ"  # magic, frame_len, code_off, payload_off,
+                                 # kind, name, flags, digest, corr_id,
+                                 # cont_off
 assert struct.calcsize(_HEADER_FMT) == SIGNAL_OFF
 
 
@@ -158,6 +179,7 @@ class FrameHeader:
     flags: int = 0
     digest: bytes = b"\0" * DIGEST_LEN
     corr_id: int = 0
+    cont_offset: int = 0
 
     @property
     def is_slim(self) -> bool:
@@ -171,6 +193,10 @@ class FrameHeader:
     def is_err(self) -> bool:
         return bool(self.flags & FLAG_ERR)
 
+    @property
+    def has_cont(self) -> bool:
+        return bool(self.flags & FLAG_CONT)
+
 
 def _name_bytes(name: str) -> bytes:
     nb = name.encode()
@@ -181,25 +207,35 @@ def _name_bytes(name: str) -> bytes:
 
 def seal_frame(buf, name: str, code, kind: CodeKind, payload_len: int, *,
                digest: bytes | None = None, slim: bool = False,
-               corr_id: int = 0, flags: int = 0) -> int:
+               corr_id: int = 0, flags: int = 0,
+               cont: bytes | None = None) -> int:
     """Write header + code + trailer around a payload *already in place*
     (via :func:`frame_payload_view`), directly into ``buf``.  Returns the
     frame length.  This is the zero-copy finalizer: the payload bytes are
     never touched, and nothing is allocated beyond the header.
+
+    ``cont`` appends a continuation descriptor section after the payload
+    (and sets ``FLAG_CONT``) — the flow layer's next-hop routing rides
+    inside the frame, invisible to the executing ifunc.
     """
     nb = _name_bytes(name)
     code_len = 0 if slim else len(code)
     payload_off = HEADER_LEN + code_len
-    frame_len = payload_off + payload_len + TRAILER_LEN
+    cont_off = payload_off + payload_len
+    cont_len = 0 if cont is None else len(cont)
+    frame_len = cont_off + cont_len + TRAILER_LEN
     if len(buf) < frame_len:
         raise FrameError(f"frame {frame_len}B exceeds buffer {len(buf)}B")
     if digest is None:
         digest = compute_digest(code)
     if not slim and code_len:
         buf[HEADER_LEN:payload_off] = code
+    if cont_len:
+        buf[cont_off:cont_off + cont_len] = cont
+        flags |= FLAG_CONT
     hdr = struct.pack(_HEADER_FMT, MAGIC, frame_len, HEADER_LEN, payload_off,
                       int(kind), nb, flags | (FLAG_SLIM if slim else 0),
-                      digest, corr_id)
+                      digest, corr_id, cont_off)
     buf[:SIGNAL_OFF] = hdr
     struct.pack_into("<I", buf, SIGNAL_OFF, fletcher32(hdr))
     struct.pack_into("<I", buf, frame_len - TRAILER_LEN, TRAILER)
@@ -217,35 +253,39 @@ def frame_payload_view(buf, code_len: int, max_payload: int,
 
 def pack_frame_into(buf, name: str, code, payload, kind: CodeKind, *,
                     digest: bytes | None = None, slim: bool = False,
-                    corr_id: int = 0, flags: int = 0) -> int:
+                    corr_id: int = 0, flags: int = 0,
+                    cont: bytes | None = None) -> int:
     """Pack a complete frame into a preallocated buffer (a transport slab
     slot).  Returns frame_len; no intermediate bytearray is created."""
     code_len = 0 if slim else len(code)
     payload_off = HEADER_LEN + code_len
-    if len(buf) < payload_off + len(payload) + TRAILER_LEN:
-        raise FrameError(
-            f"frame {payload_off + len(payload) + TRAILER_LEN}B exceeds "
-            f"buffer {len(buf)}B")
+    cont_len = 0 if cont is None else len(cont)
+    need = payload_off + len(payload) + cont_len + TRAILER_LEN
+    if len(buf) < need:
+        raise FrameError(f"frame {need}B exceeds buffer {len(buf)}B")
     buf[payload_off:payload_off + len(payload)] = payload
-    return seal_frame(buf, name, code, kind, len(payload),
-                      digest=digest, slim=slim, corr_id=corr_id, flags=flags)
+    return seal_frame(buf, name, code, kind, len(payload), digest=digest,
+                      slim=slim, corr_id=corr_id, flags=flags, cont=cont)
 
 
 def pack_frame(name: str, code: bytes, payload, kind: CodeKind, *,
                digest: bytes | None = None, slim: bool = False,
-               corr_id: int = 0, flags: int = 0) -> bytearray:
+               corr_id: int = 0, flags: int = 0,
+               cont: bytes | None = None) -> bytearray:
     code_len = 0 if slim else len(code)
-    buf = bytearray(HEADER_LEN + code_len + len(payload) + TRAILER_LEN)
+    cont_len = 0 if cont is None else len(cont)
+    buf = bytearray(HEADER_LEN + code_len + len(payload) + cont_len
+                    + TRAILER_LEN)
     pack_frame_into(buf, name, code, payload, kind, digest=digest, slim=slim,
-                    corr_id=corr_id, flags=flags)
+                    corr_id=corr_id, flags=flags, cont=cont)
     return buf
 
 
 def pack_reply(name: str, payload, kind: CodeKind, corr_id: int, *,
                err: bool = False) -> bytearray:
-    """Build a result-return frame: no code section ever, FLAG_REPLY set,
-    the request's corr_id echoed.  ``err=True`` marks the payload as an
-    encoded exception rather than a value."""
+    """Build a result-return frame: no code section ever, no continuation
+    ever, FLAG_REPLY set, the request's corr_id echoed.  ``err=True`` marks
+    the payload as an encoded exception rather than a value."""
     return pack_frame(name, b"", payload, kind, corr_id=corr_id,
                       flags=FLAG_REPLY | (FLAG_ERR if err else 0))
 
@@ -275,20 +315,28 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     finally:
         mv.release()
     (magic, frame_len, code_off, payload_off, kind, name, flags,
-     digest, corr_id) = struct.unpack_from(_HEADER_FMT, buf, 0)
+     digest, corr_id, cont_off) = struct.unpack_from(_HEADER_FMT, buf, 0)
     if max_frame is not None and frame_len > max_frame:
         raise FrameError(f"frame too long ({frame_len} > {max_frame})")
-    if not (HEADER_LEN <= code_off <= payload_off <= frame_len - TRAILER_LEN):
+    if not (HEADER_LEN <= code_off <= payload_off <= cont_off
+            <= frame_len - TRAILER_LEN):
         raise FrameError("inconsistent offsets")
     if flags & (FLAG_SLIM | FLAG_REPLY) and code_off != payload_off:
         raise FrameError("SLIM/reply frame carries a code section")
+    if flags & FLAG_CONT:
+        if flags & FLAG_REPLY:
+            raise FrameError("reply frame carries a continuation section")
+        if cont_off == frame_len - TRAILER_LEN:
+            raise FrameError("FLAG_CONT with empty continuation section")
+    elif cont_off != frame_len - TRAILER_LEN:
+        raise FrameError("continuation section without FLAG_CONT")
     try:
         kind = CodeKind(kind)
     except ValueError as e:
         raise FrameError(f"unknown code kind {kind}") from e
     return FrameHeader(frame_len, code_off, payload_off, kind,
                        name.rstrip(b"\0").decode(errors="strict"),
-                       flags, bytes(digest), corr_id)
+                       flags, bytes(digest), corr_id, cont_off)
 
 
 def trailer_arrived(buf, hdr: FrameHeader) -> bool:
@@ -302,10 +350,22 @@ def trailer_arrived(buf, hdr: FrameHeader) -> bool:
 def frame_sections(buf, hdr: FrameHeader) -> tuple[memoryview, memoryview]:
     """Zero-copy (code, payload) views into ``buf``.  Callers that keep the
     data past the frame's lifetime (the slot gets cleared/reused) must copy
-    via ``bytes()`` themselves — linking does, execution usually need not."""
+    via ``bytes()`` themselves — linking does, execution usually need not.
+    The payload view stops at ``cont_offset``: an executing ifunc never
+    sees the continuation descriptor bytes."""
     mv = buf if isinstance(buf, memoryview) else memoryview(buf)
     return (mv[hdr.code_offset:hdr.payload_offset],
-            mv[hdr.payload_offset:hdr.frame_len - TRAILER_LEN])
+            mv[hdr.payload_offset:hdr.cont_offset])
+
+
+def frame_cont(buf, hdr: FrameHeader) -> memoryview | None:
+    """Zero-copy view of the continuation descriptor section, or None when
+    the frame carries no continuation.  Same lifetime caveat as
+    :func:`frame_sections` — the flow hook copies what it keeps."""
+    if not hdr.has_cont:
+        return None
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    return mv[hdr.cont_offset:hdr.frame_len - TRAILER_LEN]
 
 
 _ZEROS = bytes(64 << 10)    # shared zeros slab: clear_frame allocates nothing

@@ -1,0 +1,22 @@
+"""Flow layer: remote continuations, peer-to-peer chaining, and
+scatter/gather dataflow over the ifunc transport + task layers.
+
+The missing piece between the task runtime and the paper's "dynamically
+choose where code runs as the application progresses" north star: after
+PR 3 every multi-step computation still round-tripped each stage's result
+back to the submitting host.  Here, a frame's v2.2 continuation section
+carries the rest of the plan, so the peer that *executes* a stage packs
+the result straight into the next request frame and forwards it
+peer-to-peer via its own dispatcher — the host only sees the final reply
+(sPIN-style chaining along the network path).
+
+    from repro.flow import Flow, FlowEngine
+"""
+
+from repro.flow.descriptor import (Chain, FlowError, Hop, Scatter,
+                                   apply_bind, pack_chain, parse_chain)
+from repro.flow.engine import Flow, FlowEngine
+from repro.flow.node import FlowNode
+
+__all__ = ["Chain", "Flow", "FlowEngine", "FlowError", "FlowNode", "Hop",
+           "Scatter", "apply_bind", "pack_chain", "parse_chain"]

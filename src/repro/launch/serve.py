@@ -192,13 +192,19 @@ def main():
     dt = time.time() - t0
     acked = [f.result(timeout=10.0) for f in acks]
     assert all(a["queued"] for a in acked), acked
+    # shutdown drain with the transport liveness floor: if the server ring
+    # wedged, outstanding admission futures fail with a TransportError
+    # after the deadline instead of hanging the frontend forever
+    fe.rt.drain(deadline=5.0)
     stats = fe.dispatcher.per_peer_stats()["server"]
+    assert stats.get("timed_out", 0) == 0, stats
     print(f"served {len(reqs)} requests ({len(acked)} acked, max queue depth "
           f"{max(a['depth'] for a in acked)}), {total} decode tokens in "
           f"{dt:.2f}s ({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots}); "
           f"ingest: sent={stats['sent']} slim={stats['slim_sent']} "
           f"delivered={stats['delivered']} backpressure={stats['backpressure']} "
-          f"replies={stats['replies']} via {stats['bytes']}B of ifunc frames")
+          f"replies={stats['replies']} via {stats['bytes']}B of ifunc frames "
+          f"(oldest in-flight {stats['oldest_inflight_s']:.3f}s)")
     for rid in sorted(done)[:2]:
         r = done[rid]
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out[:args.steps]}")

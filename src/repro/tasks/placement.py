@@ -108,9 +108,13 @@ class DataDirectory:
 
 
 class PlacementEngine:
-    """Per-task migrate / fetch / local decisions + ownership rebalance."""
+    """Per-task migrate / fetch / local decisions + ownership rebalance.
 
-    def __init__(self, directory: DataDirectory, dispatcher, *,
+    ``directory=None`` builds a pure *hop pricer* over the dispatcher —
+    the flow layer uses :meth:`hop_cost` to choose among candidate peers
+    for each chain stage without any shard directory."""
+
+    def __init__(self, directory: DataDirectory | None, dispatcher, *,
                  service_s: float = 50e-6, steal_depth: int = 3,
                  fabric_bw: dict | None = None,
                  fabric_lat: dict | None = None):
@@ -137,6 +141,14 @@ class PlacementEngine:
         return self.lat.get(kind, self.lat[None]) + nbytes / self.bw.get(
             kind, self.bw[None])
 
+    def hop_cost(self, peer_name: str, nbytes: int) -> float:
+        """Modeled seconds for one hop carrying ``nbytes`` to a peer:
+        fabric wire time plus the toll of everything already queued there.
+        The one formula every decision below — and the flow compiler's
+        per-stage candidate pricing — is built from."""
+        return (self._wire(peer_name, nbytes)
+                + self.queue_depth(peer_name) * self.service_s)
+
     def _code_bytes(self, peer_name: str, handle) -> int:
         """Marginal code cost of migrating to this peer: zero once the
         peer's link cache is SLIM-confirmed for the handle's digest (or the
@@ -161,16 +173,13 @@ class PlacementEngine:
         costs: dict[str, float] = {}
         # migrate: code (amortized by SLIM) + args out + reply back, queued
         # behind everything already sitting in the owner's rings
-        costs["migrate"] = (
-            self._wire(owner, self._code_bytes(owner, handle) + arg_bytes
-                       + reply_bytes)
-            + self.queue_depth(owner) * self.service_s)
+        costs["migrate"] = self.hop_cost(
+            owner, self._code_bytes(owner, handle) + arg_bytes + reply_bytes)
         # fetch: the whole shard crosses the wire once, from the cheapest
         # replica holder — the fetch request rides the same rings as a
         # migrated task, so it pays that peer's queue toll too
         def fetch_cost(site: str) -> float:
-            return (self._wire(site, sh.nbytes + arg_bytes)
-                    + self.queue_depth(site) * self.service_s)
+            return self.hop_cost(site, sh.nbytes + arg_bytes)
 
         sources = [s for s in sh.replicas if s in self.dispatcher.peers]
         fetch_src = min(sources, key=fetch_cost) if sources else None

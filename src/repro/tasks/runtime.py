@@ -141,8 +141,12 @@ class TaskRuntime:
         d.engine.progress()
         return d.poll()          # poll() drains reply rings as a side effect
 
-    def drain(self, max_rounds: int = 64) -> int:
-        return self.dispatcher.drain(max_rounds)
+    def drain(self, max_rounds: int = 64,
+              deadline: float | None = None) -> int:
+        """Drain the dispatcher; with ``deadline`` set, requests stuck at a
+        wedged peer past the deadline resolve their futures with a
+        TransportError instead of hanging (the transport liveness floor)."""
+        return self.dispatcher.drain(max_rounds, deadline=deadline)
 
     def pending(self) -> int:
         return sum(1 for f in self.futures.values() if not f.done())

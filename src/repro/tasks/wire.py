@@ -35,12 +35,17 @@ class WireError(Exception):
 
 class RemoteExecutionError(Exception):
     """An ifunc raised at the target; re-raised source-side by
-    ``Future.result()``.  ``remote_type`` names the original exception."""
+    ``Future.result()``.  ``remote_type`` names the original exception;
+    ``hop`` (flow chains only) names the failing stage as
+    ``ifunc@peer`` — the ERR short-circuit carries where the chain died."""
 
-    def __init__(self, remote_type: str, message: str):
-        super().__init__(f"{remote_type}: {message}")
+    def __init__(self, remote_type: str, message: str,
+                 hop: str | None = None):
+        at = f" at {hop}" if hop else ""
+        super().__init__(f"{remote_type}{at}: {message}")
         self.remote_type = remote_type
         self.remote_message = message
+        self.hop = hop
 
 
 def encode(value) -> bytes:
@@ -63,13 +68,18 @@ def encode(value) -> bytes:
         raise WireError(f"unencodable reply value {type(value).__name__}: {e}")
 
 
-def encode_error(exc) -> bytes:
-    """Exception (or message string) -> tagged error payload."""
+def encode_error(exc, hop: str | None = None) -> bytes:
+    """Exception (or message string) -> tagged error payload.  ``hop``
+    records the failing flow stage (``ifunc@peer``) for chain
+    short-circuits."""
     if isinstance(exc, BaseException):
         t, m = type(exc).__name__, str(exc)
     else:
         t, m = "RuntimeError", str(exc)
-    return bytes([TAG_ERR]) + json.dumps({"type": t, "msg": m}).encode()
+    d = {"type": t, "msg": m}
+    if hop:
+        d["hop"] = hop
+    return bytes([TAG_ERR]) + json.dumps(d).encode()
 
 
 def decode(payload):
@@ -94,9 +104,37 @@ def decode(payload):
     if tag == TAG_ERR:
         d = json.loads(body.decode())
         return RemoteExecutionError(d.get("type", "Exception"),
-                                    d.get("msg", ""))
+                                    d.get("msg", ""), hop=d.get("hop"))
     raise WireError(f"unknown reply tag {tag}")
 
 
+def pack_chunks(chunks) -> bytes:
+    """Frame an ordered list of byte blobs as one payload:
+    ``u32 n | (u32 len | bytes) x n`` — how a gather rendezvous hands its
+    collected branch results to the reduce ifunc in a single frame.  The
+    layout leans only on ``struct``, so shipped reduce mains can parse it
+    with resident symbols (see ``ifunc_libs/flow_reduce.py``)."""
+    out = bytearray(struct.pack("<I", len(chunks)))
+    for c in chunks:
+        b = bytes(c)
+        out += struct.pack("<I", len(b)) + b
+    return bytes(out)
+
+
+def unpack_chunks(payload) -> list[bytes]:
+    """Inverse of :func:`pack_chunks`."""
+    buf = bytes(payload)
+    (n,) = struct.unpack_from("<I", buf, 0)
+    off, out = 4, []
+    for _ in range(n):
+        (ln,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        out.append(buf[off:off + ln])
+        off += ln
+    if off != len(buf):
+        raise WireError(f"chunk framing trailing bytes ({len(buf) - off})")
+    return out
+
+
 __all__ = ["RemoteExecutionError", "WireError", "decode", "encode",
-           "encode_error"]
+           "encode_error", "pack_chunks", "unpack_chunks"]

@@ -47,10 +47,22 @@ And the *result-return path* (the task runtime's wire, see ``repro.tasks``):
   the same ``reply_router``;
 * encoding is delegated to a pluggable ``reply_codec`` (the task layer's
   wire module) so the transport stays value-format-agnostic.
+
+Plus the flow layer's *continuation frames* and the *liveness floor*:
+
+* ``send``/``send_ifunc`` carry an optional packed continuation
+  descriptor (frame v2.2 ``cont`` section, host fabrics only); the
+  on-the-fly SLIM repack and the NACK FULL-rebuild both preserve it, so
+  a retransmitted hop never loses its route;
+* every tracked in-flight frame is timestamped: ``per_peer_stats()``
+  surfaces the oldest age per peer, and ``drain(deadline=...)`` fails
+  the futures of frames stuck at a wedged peer (``fail_inflight``)
+  instead of letting them hang forever.
 """
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -65,13 +77,14 @@ DEFAULT_N_SLOTS = 8
 @dataclass
 class _TxRec:
     """Source-side record of one in-flight frame (for digest confirmation,
-    NACK retransmission, and reply correlation)."""
+    NACK retransmission, reply correlation, and liveness tracking)."""
 
     name: str
     digest: bytes
     handle: object          # IfuncHandle (None for raw-frame sends)
     slim: bool
     corr_id: int = 0
+    sent_at: float = field(default_factory=time.monotonic)
 
 
 @dataclass
@@ -83,8 +96,8 @@ class RingState:
     tail: int = 0            # source-side produce index
     inflight: dict = field(default_factory=dict)   # abs slot -> _TxRec
     corr_by_coords: dict = field(default_factory=dict)  # device lanes:
-    #                                    (shard, slot) -> corr_id awaiting
-    #                                    a sweep result
+    #                                    (shard, slot) -> (corr_id, sent_at)
+    #                                    awaiting a sweep result
 
     @property
     def credits(self) -> int:
@@ -119,6 +132,25 @@ class Peer:
             return 0
         return self.reply_mailbox.n_slots - (self.reply_tail
                                              - self.reply_mailbox.consumed)
+
+    def oldest_inflight_age(self, now: float | None = None) -> float:
+        """Age (seconds) of the oldest tracked frame still awaiting its
+        target's sweep — the liveness floor signal.  0.0 when nothing is
+        in flight.  Covers handle sends on host lanes and corr-carrying
+        stages on device lanes (``corr_by_coords``), so a wedged mesh is
+        as visible as a wedged host ring."""
+        now = time.monotonic() if now is None else now
+        oldest = None
+        for r in self.rings:
+            for slot, rec in r.inflight.items():
+                if slot < r.mailbox.consumed:
+                    continue            # consumed by an external sweeper
+                if oldest is None or rec.sent_at < oldest:
+                    oldest = rec.sent_at
+            for _, sent_at in r.corr_by_coords.values():
+                if oldest is None or sent_at < oldest:
+                    oldest = sent_at
+        return 0.0 if oldest is None else max(0.0, now - oldest)
 
     def summary(self) -> str:
         s = self.stats
@@ -200,11 +232,14 @@ class Dispatcher:
             return True
         return lib.code_digest in peer.cached
 
-    def _check_full_fits(self, lane: RingState, lib, payload_len: int) -> None:
+    def _check_full_fits(self, lane: RingState, lib, payload_len: int,
+                         cont_len: int = 0) -> None:
         """A SLIM frame must stay FULL-retransmittable: if the target evicts
-        the digest, the NACK fallback rebuilds code + payload into this same
-        ring — reject at send time rather than crash a later drain."""
-        need = F.HEADER_LEN + len(lib.code) + payload_len + F.TRAILER_LEN
+        the digest, the NACK fallback rebuilds code + payload (+ any
+        continuation descriptor) into this same ring — reject at send time
+        rather than crash a later drain."""
+        need = (F.HEADER_LEN + len(lib.code) + payload_len + cont_len
+                + F.TRAILER_LEN)
         if need > lane.mailbox.slot_size:
             raise TransportError(
                 f"SLIM frame's FULL fallback ({need}B) exceeds slot "
@@ -231,8 +266,8 @@ class Dispatcher:
                 and peer.fabric.kind == "device"):
             # device replies come back as sweep results at the coordinates
             # this send stages into (the Mailbox.slot_coords contract)
-            lane.corr_by_coords[
-                lane.mailbox.slot_coords(lane.tail)] = rec.corr_id
+            lane.corr_by_coords[lane.mailbox.slot_coords(lane.tail)] = (
+                rec.corr_id, rec.sent_at)
         lane.tail += 1
         peer.stats["sent"] += 1
         peer.stats["bytes"] += len(view)
@@ -305,19 +340,26 @@ class Dispatcher:
         lib = handle.lib
         corr_id = getattr(msg, "corr_id", 0)   # mirrored from the header at
         #                          msg-create time: no hot-path header parse
+        cont = getattr(msg, "cont", None)   # mirrored at msg-create time
+        if cont is not None and peer.fabric.kind == "device":
+            raise TransportError(
+                "continuation frames are host-tier only (the device sweep "
+                "has no forwarding hook)")
         already_slim = bool(getattr(msg, "slim", False))
         want_slim = self._slim_ok(peer, lib)
         rec = _TxRec(lib.name, lib.code_digest, handle,
                      already_slim or want_slim, corr_id=corr_id)
         if rec.slim and peer.fabric.kind != "device":
-            self._check_full_fits(lane, lib, len(msg.payload_view))
+            self._check_full_fits(lane, lib, len(msg.payload_view),
+                                  0 if cont is None else len(cont))
         if want_slim and not already_slim:
             # elide the code section while staging — the slab cell is the
-            # only buffer the SLIM frame ever occupies
+            # only buffer the SLIM frame ever occupies; the continuation
+            # descriptor rides along untouched
             slab = self.engine.slab_slot(lane.channel, lane.tail)
             n = F.pack_frame_into(slab, lib.name, b"", msg.payload_view,
                                   lib.kind, digest=lib.code_digest, slim=True,
-                                  corr_id=corr_id)
+                                  corr_id=corr_id, cont=cont)
             self._post_view(peer, lane, slab[:n], rec, on_complete, future)
         else:
             self._slab_post(peer, lane, frame, rec, on_complete, future)
@@ -326,13 +368,20 @@ class Dispatcher:
     def send_ifunc(self, peer_name: str, handle, source_args,
                    source_args_size: int | None = None, *,
                    ring: int | None = None, on_complete=None,
-                   corr_id: int = 0, future=None) -> bool:
+                   corr_id: int = 0, future=None,
+                   cont: bytes | None = None) -> bool:
         """Fully zero-copy send: skips IfuncMsg materialization — the
         payload codec writes directly into the peer's slab cell and the
         header is sealed around it in place.  SLIM framing is applied
         automatically once the peer's cache is known-warm.  ``corr_id``
-        nonzero requests a result-return reply (the Future path)."""
+        nonzero requests a result-return reply (the Future path);
+        ``cont`` appends a packed continuation descriptor (the flow
+        layer's peer-to-peer forwarding path — host fabrics only)."""
         peer = self.peers[peer_name]
+        if cont is not None and peer.fabric.kind == "device":
+            raise TransportError(
+                "continuation frames are host-tier only (the device sweep "
+                "has no forwarding hook)")
         if not self._flush_resends(peer):
             peer.stats["backpressure"] += 1
             return False
@@ -347,19 +396,22 @@ class Dispatcher:
             except TypeError:
                 source_args_size = 0
         max_size = int(lib.payload_get_max_size(source_args, source_args_size))
+        cont_len = 0 if cont is None else len(cont)
         slim = self._slim_ok(peer, lib)
         if slim and peer.fabric.kind != "device":
-            self._check_full_fits(lane, lib, max_size)
+            self._check_full_fits(lane, lib, max_size, cont_len)
         code = b"" if slim else lib.code
         slab = self.engine.slab_slot(lane.channel, lane.tail)
-        if F.HEADER_LEN + len(code) + max_size + F.TRAILER_LEN > len(slab):
+        if (F.HEADER_LEN + len(code) + max_size + cont_len
+                + F.TRAILER_LEN) > len(slab):
             raise TransportError(
                 f"frame would exceed slot {lane.mailbox.slot_size}B")
         pv = F.frame_payload_view(slab, len(code), max_size)
         used = lib.payload_init(pv, max_size, source_args, source_args_size)
         used = max_size if used in (None, 0) else int(used)
         n = F.seal_frame(slab, lib.name, code, lib.kind, used,
-                         digest=lib.code_digest, slim=slim, corr_id=corr_id)
+                         digest=lib.code_digest, slim=slim, corr_id=corr_id,
+                         cont=cont)
         self._post_view(peer, lane, slab[:n],
                         _TxRec(lib.name, lib.code_digest, handle, slim,
                                corr_id=corr_id),
@@ -404,10 +456,7 @@ class Dispatcher:
 
         mb = lane.mailbox
         buf = mb.slot_view(mb.head)
-        try:
-            hdr = F.peek_header(buf)
-        except F.FrameError:
-            hdr = None
+        hdr = mb.peek()                      # fabric-contract header peek
         corr = 0 if hdr is None else hdr.corr_id
         name = "" if hdr is None else hdr.name
         kind = F.CodeKind.PYBC if hdr is None else hdr.code_kind
@@ -574,17 +623,18 @@ class Dispatcher:
                         if not track:
                             val = res_new[ri] if ri < len(res_new) else None
                             ri += 1
-                            corr = (lane.corr_by_coords.pop(coord, 0)
-                                    if coord is not None else 0)
-                            if corr:         # device reply: the result IS it
-                                self._route_reply(corr, peer.name, val,
+                            ent = (lane.corr_by_coords.pop(coord, None)
+                                   if coord is not None else None)
+                            if ent:          # device reply: the result IS it
+                                self._route_reply(ent[0], peer.name, val,
                                                   False, decoded=True)
                     elif st == Status.REJECTED:
                         peer.stats["rejected"] += 1
                         done += 1
                         progressed = True
                         if not track and coord is not None:
-                            corr = lane.corr_by_coords.pop(coord, 0)
+                            ent = lane.corr_by_coords.pop(coord, None)
+                            corr = ent[0] if ent else 0
                             if corr:
                                 self._route_reply(
                                     corr, peer.name,
@@ -610,27 +660,127 @@ class Dispatcher:
         self.stats["polled"] += done
         return done
 
-    def drain(self, max_rounds: int = 64) -> int:
+    def _pending_inflight(self) -> int:
+        """Tracked frames still awaiting their target's sweep: host-lane
+        inflight records (past-consumed records are pruned as a side
+        effect) plus device-lane corr-ids awaiting a sweep result."""
+        n = 0
+        for peer in self.peers.values():
+            for lane in peer.rings:
+                low = lane.mailbox.consumed
+                for s in [s for s in lane.inflight if s < low]:
+                    del lane.inflight[s]
+                n += len(lane.inflight) + len(lane.corr_by_coords)
+            n += len(peer.resend)
+        return n
+
+    def fail_inflight(self, reason: str = "liveness deadline exceeded",
+                      min_age: float = 0.0) -> int:
+        """Give up on tracked in-flight frames at least ``min_age`` seconds
+        old: corr-carrying records resolve their futures with a
+        TransportError through the reply router (instead of hanging
+        forever on a wedged peer); the records and that peer's queued
+        retransmits are dropped.  ``min_age`` is what makes this a *per
+        frame* liveness floor — a healthy peer actively consuming its
+        backlog only has young records, and keeps them.  Returns futures
+        failed."""
+        now = time.monotonic()
+        failed = 0
+        for peer in self.peers.values():
+            timed_out = 0
+            for lane in peer.rings:
+                low = lane.mailbox.consumed
+                for slot in sorted(lane.inflight):
+                    rec = lane.inflight[slot]
+                    if slot >= low and now - rec.sent_at < min_age:
+                        continue         # young: the peer may still be alive
+                    del lane.inflight[slot]
+                    if slot < low or not rec.corr_id:
+                        continue
+                    self._route_reply(
+                        rec.corr_id, peer.name,
+                        TransportError(
+                            f"{rec.name} to {peer.name!r}: {reason} "
+                            f"(in flight {now - rec.sent_at:.3f}s)"),
+                        True, decoded=True)
+                    timed_out += 1
+                for coords, (corr, sent_at) in list(
+                        lane.corr_by_coords.items()):
+                    if now - sent_at < min_age:
+                        continue
+                    del lane.corr_by_coords[coords]
+                    self._route_reply(
+                        corr, peer.name,
+                        TransportError(
+                            f"device lane {peer.name!r}: {reason}"),
+                        True, decoded=True)
+                    timed_out += 1
+            if timed_out:
+                while peer.resend:       # retransmits to a dead peer: drop
+                    msg = peer.resend.popleft()
+                    corr = getattr(msg, "corr_id", 0)
+                    if corr:
+                        self._route_reply(
+                            corr, peer.name,
+                            TransportError(
+                                f"queued retransmit to {peer.name!r}: "
+                                f"{reason}"),
+                            True, decoded=True)
+                        timed_out += 1
+                peer.stats["timed_out"] = (
+                    peer.stats.get("timed_out", 0) + timed_out)
+                failed += timed_out
+        self.stats["timed_out"] = self.stats.get("timed_out", 0) + failed
+        return failed
+
+    def drain(self, max_rounds: int = 64, deadline: float | None = None) -> int:
         """flush + poll until quiescent: no outstanding puts, no consumable
         frames, no queued retransmits.  Returns total messages
         delivered/rejected (NACK-retransmitted frames count once, when the
-        FULL retry lands)."""
+        FULL retry lands).
+
+        ``deadline`` (seconds) is the liveness floor: the drain keeps
+        cranking while tracked frames are still in flight (``max_rounds``
+        does not apply — the bound is wall time), and once the deadline
+        passes it *fails*, via :meth:`fail_inflight`, the futures of
+        frames that were in flight for at least the whole deadline —
+        frames a peer actively consuming its backlog would have drained.
+        Without a deadline, behavior is the historical round-bounded
+        quiescence check."""
+        t0 = time.monotonic()
         total = 0
-        for _ in range(max_rounds):
+        rounds = 0
+        while True:
+            rounds += 1
             for p in self.peers.values():
                 self._flush_resends(p)
             self.engine.progress()
             n = self.poll()
             total += n
-            if (n == 0 and self.engine.outstanding() == 0
-                    and not any(p.resend for p in self.peers.values())):
-                break
+            idle = (n == 0 and self.engine.outstanding() == 0
+                    and not any(p.resend for p in self.peers.values()))
+            if deadline is None:
+                if idle or rounds >= max_rounds:
+                    break
+            else:
+                if idle and self._pending_inflight() == 0:
+                    break
+                if time.monotonic() - t0 >= deadline:
+                    self.fail_inflight(
+                        f"drain deadline ({deadline:.3g}s) exceeded",
+                        min_age=deadline)
+                    break
+                if idle:
+                    time.sleep(0)    # wedged-peer spin: be scheduler-polite
         return total
 
     # -- reporting ----------------------------------------------------------
 
     def per_peer_stats(self) -> dict[str, dict]:
-        return {name: dict(p.stats, credits=p.credits)
+        now = time.monotonic()
+        return {name: dict(p.stats, credits=p.credits,
+                           oldest_inflight_s=round(
+                               p.oldest_inflight_age(now), 6))
                 for name, p in self.peers.items()}
 
     def print_stats(self) -> None:

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.core import frame as F
 from repro.core import rdma as R
 
 
@@ -67,6 +68,18 @@ class Mailbox:
 
     def slot_view(self, i: int) -> memoryview:
         raise NotImplementedError
+
+    def peek(self):
+        """Best-effort parsed header of the frame at ``head``, or None when
+        the slot is empty/unparsable or the backend exposes no byte view
+        (the device mesh).  Part of the fabric contract: the dispatcher's
+        reply and flow paths read corr/flags *ahead of* the consuming sweep
+        through this instead of duck-typing into backend internals —
+        corruption surfaces later, on the sweep itself."""
+        try:
+            return F.peek_header(self.slot_view(self.head))
+        except (F.FrameError, TransportError, NotImplementedError):
+            return None
 
     def sweep(self, ctx, target_args, budget: int | None = None) -> list:
         """Drain up to ``budget`` slots through ``poll_ifunc``; returns the
