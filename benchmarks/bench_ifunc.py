@@ -235,16 +235,47 @@ def bench_dispatcher_fanout(n_peers: int = 4, n_msgs: int = 256,
     return rows
 
 
-def bench_fig5_cached(n_iters: int = 200, sizes: list | None = None) -> list[dict]:
+def _best_us(chunk_times: list, chunk: int) -> float:
+    """Best (minimum) per-call μs over chunked timings — the ``timeit``
+    estimator.  The emulation shares a noisy host: GC pauses and scheduler
+    preemptions can swing a mean (and even a median, under sustained
+    interference) 2-3x between runs, while the fastest chunk is what the
+    protocol actually costs.  Every fig5 cell uses this same estimator,
+    so the cross-cell ratios CI asserts on (slim < full, slim_agg >= 2x
+    slim) compare like with like."""
+    return min(chunk_times) / chunk * 1e6
+
+
+def bench_fig5_cached(n_iters: int = 200, sizes: list | None = None,
+                      agg_k: int = 64) -> list[dict]:
     """Cached invocation (paper §3.4, 'Fig. 5'): per payload size, compare
 
-    * ``full`` — every message re-injects the ~256 KiB bench_hot code
+    * ``full``     — every message re-injects the ~256 KiB bench_hot code
       section (first-arrival protocol repeated forever);
-    * ``slim`` — code elided after the one warmup FULL frame; the target
-      dispatches from its digest-keyed link cache (no sha256 on the path);
-    * ``am``   — the UCX-AM baseline (handler pre-registered, no code).
+    * ``slim``     — code elided after the one warmup FULL frame; the
+      target dispatches from its digest-keyed link cache (no sha256 on
+      the path);
+    * ``slim_agg`` — coalesced dispatch: ``agg_k`` cached invocations per
+      FLAG_AGG container through the dispatcher's coalescing queue — one
+      put, one ring slot, one sweep pass per K messages.  This is the
+      cell that must close the per-message-overhead gap to AM;
+    * ``am``       — the UCX-AM baseline (handler pre-registered, no code).
+
+    Methodology: per size, the four cells' chunks are timed INTERLEAVED
+    (full, slim, am, one aggregate batch, repeat), each cell reported as
+    its best chunk (:func:`_best_us`), with GC parked for the duration —
+    the ``timeit`` discipline.  Interleaving matters as much as the
+    estimator: the cross-cell ratios CI asserts on (slim < full,
+    slim_agg >= 2x slim) would otherwise ride CPU-frequency and
+    host-contention drift between separately-timed phases.
     """
+    import gc
+
+    from repro.transport import Dispatcher, ProgressEngine, RdmaFabric
+
+    CHUNK = 16
     sizes = sizes if sizes is not None else [16, 256, 4 << 10, 64 << 10]
+    libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
     rows = []
     src, dst, ep = _pair()
     h = register_ifunc(src, "bench_hot")
@@ -255,29 +286,91 @@ def bench_fig5_cached(n_iters: int = 200, sizes: list | None = None) -> list[dic
     assert poll_ifunc(dst, region.view(), None, targs) == Status.OK
     for size in sizes:
         payload = b"x" * size
-        for cell, slim in (("full", False), ("slim", True)):
+
+        def _singleton_chunk(slim):
             t0 = time.perf_counter()
-            for _ in range(n_iters):
-                m = ifunc_msg_create(h, payload, slim=slim)
-                ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
-                while poll_ifunc(dst, region.view(), None, targs) != Status.OK:
+            for _ in range(CHUNK):
+                msg = ifunc_msg_create(h, payload, slim=slim)
+                ifunc_msg_send_nbix(ep, msg, region.base, region.rkey)
+                while poll_ifunc(dst, region.view(), None,
+                                 targs) != Status.OK:
                     pass
-            dt = (time.perf_counter() - t0) / n_iters
-            rows.append({"bench": "fig5_cached", "api": cell, "size": size,
-                         "cell": f"{cell}/{size}B", "us": dt * 1e6,
-                         "msgs_per_s": 1 / dt})
+            return time.perf_counter() - t0
+
         a, b = AmContext("a"), AmContext("b")
         b.register(1, lambda p, n, t: None)
         ab = AmEndpoint(a, b)
-        t0 = time.perf_counter()
-        for _ in range(n_iters):
-            ab.send(1, payload)
-            while b.progress() == 0:
-                pass
-        dt = (time.perf_counter() - t0) / n_iters
-        rows.append({"bench": "fig5_cached", "api": "am", "size": size,
-                     "cell": f"am/{size}B", "us": dt * 1e6,
-                     "msgs_per_s": 1 / dt})
+
+        def _am_chunk():
+            t0 = time.perf_counter()
+            for _ in range(CHUNK):
+                ab.send(1, payload)
+                while b.progress() == 0:
+                    pass
+            return time.perf_counter() - t0
+
+        # coalescing is a small-message-rate lever: past the dispatcher's
+        # max_sub_bytes policy cap the wire is bandwidth-bound, records
+        # bypass the queue as SLIM singletons, and a slim_agg cell would
+        # just re-measure slim — so the cell exists only where the policy
+        # actually aggregates
+        do_agg = size <= 16 << 10
+        if do_agg:
+            src2 = Context("src_agg", lib_dir=libdir)
+            dst2 = Context("dst_agg", lib_dir=libdir, link_mode="remote")
+            d = Dispatcher(src2, ProgressEngine(flush_threshold=2 * agg_k))
+            d.set_coalescing(True, max_subs=agg_k)
+            # the slot must hold a FULL singleton fallback (~256 KiB of
+            # code) AND as much of a K-record aggregate as possible; TWO
+            # slots suffice (one container in flight at a time) and keep
+            # the slab+region working set cache-resident between the
+            # interleaved chunks
+            slot = max(512 << 10, 1 << (size * agg_k + 4096).bit_length())
+            d.add_peer("t", RdmaFabric(), dst2, n_slots=2, slot_size=slot,
+                       target_args={})
+            h2 = register_ifunc(src2, "bench_hot")
+            assert d.send_ifunc("t", h2, b"warm")   # FULL: link + confirm
+            d.drain()
+            batch = [payload] * agg_k
+
+        def _agg_chunk():
+            # the bulk enqueue: codec + queue state hoisted per batch —
+            # this is the API a small-task storm actually uses
+            t0 = time.perf_counter()
+            d.send_ifunc_many("t", h2, batch)
+            d.flush()
+            d.poll()
+            return time.perf_counter() - t0
+
+        # warm every arm untimed (link caches, slabs, numpy paths)
+        _singleton_chunk(False), _singleton_chunk(True), _am_chunk()
+        if do_agg:
+            _agg_chunk()
+            d.drain()
+        chunks = {"full": [], "slim": [], "am": [], "slim_agg": []}
+        gc.collect()
+        gc.disable()                             # timeit discipline: the
+        try:                                     # collector's pauses are not
+            for _ in range(max(n_iters // CHUNK, 8)):   # protocol cost
+                chunks["full"].append(_singleton_chunk(False))
+                chunks["slim"].append(_singleton_chunk(True))
+                chunks["am"].append(_am_chunk())
+                if do_agg:
+                    chunks["slim_agg"].append(_agg_chunk())
+        finally:
+            gc.enable()
+        cells = [("full", CHUNK), ("slim", CHUNK), ("am", CHUNK)]
+        if do_agg:
+            d.drain()
+            peer = d.peers["t"]
+            assert peer.stats["agg_subs"] >= len(chunks["slim_agg"]) * agg_k, \
+                peer.stats
+            cells.append(("slim_agg", agg_k))
+        for cell, per in cells:
+            us = _best_us(chunks[cell], per)
+            rows.append({"bench": "fig5_cached", "api": cell, "size": size,
+                         "cell": f"{cell}/{size}B", "us": us,
+                         "msgs_per_s": 1e6 / us})
     return rows
 
 
@@ -405,6 +498,69 @@ def bench_checksum(n_iters: int = 300, size: int = 64 << 10) -> list[dict]:
         dt = (time.perf_counter() - t0) / iters
         rows.append({"bench": "micro_checksum", "api": cell, "size": size,
                      "cell": f"{cell}/{size}B", "us": dt * 1e6})
+    return rows
+
+
+def bench_header(n_iters: int = 4000, payload_len: int = 256) -> list[dict]:
+    """micro_header: the per-frame header protocol cost — seal + peek +
+    trailer check — as shipped (precompiled ``struct.Struct`` instances,
+    one 48-word unpack for the header checksum) vs a naive reference that
+    re-parses format strings and checksums the header byte-by-byte through
+    a sliced memoryview (the pre-v2.3 code shape).  This cost is paid once
+    per FRAME, which is exactly why aggregates amortize it K ways."""
+    import struct as S
+
+    from repro.core import frame as F
+
+    code = b"c" * 64
+    digest = F.compute_digest(code)
+    payload = b"p" * payload_len
+    buf = bytearray(F.HEADER_LEN + len(code) + payload_len + F.TRAILER_LEN)
+
+    def naive_once():
+        # the old send/poll shape: struct.pack with an inline format, a
+        # fresh memoryview slice + per-byte fletcher, struct.unpack_from
+        # with inline formats on every field access
+        nb = "micro".encode().ljust(F.NAME_LEN, b"\0")
+        payload_off = F.HEADER_LEN + len(code)
+        frame_len = payload_off + payload_len + F.TRAILER_LEN
+        buf[F.HEADER_LEN:payload_off] = code
+        buf[payload_off:payload_off + payload_len] = payload
+        hdr = S.pack(F._HEADER_FMT, F.MAGIC, frame_len, F.HEADER_LEN,
+                     payload_off, int(F.CodeKind.PYBC), nb, 0, digest, 0,
+                     payload_off + payload_len)
+        buf[:F.SIGNAL_OFF] = hdr
+        S.pack_into("<I", buf, F.SIGNAL_OFF, F.fletcher32_py(hdr))
+        S.pack_into("<I", buf, frame_len - F.TRAILER_LEN, F.TRAILER)
+        (magic,) = S.unpack_from("<I", buf, 0)
+        (sig,) = S.unpack_from("<I", buf, F.SIGNAL_OFF)
+        mv = memoryview(buf)[:F.SIGNAL_OFF]
+        try:
+            assert sig == F.fletcher32_py(mv)
+        finally:
+            mv.release()
+        fields = S.unpack_from(F._HEADER_FMT, buf, 0)
+        (t,) = S.unpack_from("<I", buf, frame_len - F.TRAILER_LEN)
+        assert t == F.TRAILER
+        return fields
+
+    def fast_once():
+        F.pack_frame_into(buf, "micro", code, payload, F.CodeKind.PYBC,
+                          digest=digest)
+        hdr = F.peek_header(buf)
+        assert F.trailer_arrived(buf, hdr)
+        return hdr
+
+    rows = []
+    for cell, fn in (("naive", naive_once), ("fast", fast_once)):
+        fn()                                     # warm
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            fn()
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({"bench": "micro_header", "api": cell,
+                     "size": payload_len, "cell": f"{cell}/{payload_len}B",
+                     "us": dt * 1e6})
     return rows
 
 

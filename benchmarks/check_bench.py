@@ -3,7 +3,9 @@
 Checks (used by the CI bench-smoke step and by hand after a full run):
 
 1. the file parses and every row matches the stable schema
-   ``{bench: str, cell: str, us: float, msgs_per_s?: float}``;
+   ``{bench: str, cell: str, us: float, msgs_per_s?: float,
+   ratio?: float}`` (``ratio`` — the vs-AM comparison — entered the
+   schema with BENCH_PR5; frozen older files simply don't carry it);
 2. (BENCH_PR2 / any file with fig5 rows) the ``fig5_cached`` rows exist
    and, per payload size, the SLIM (cached) cell is strictly faster than
    the FULL re-injection cell — the cached fast path must actually be a
@@ -13,7 +15,11 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
    bet the placement engine's cost model is built on;
 4. (BENCH_PR4 / any file with fig_flow rows) at every stage count, the
    continuation chain beats the same stages as host-coordinated
-   round-trips — forwarding results along the path must actually win.
+   round-trips — forwarding results along the path must actually win;
+5. (BENCH_PR5 / any file with slim_agg rows) coalesced dispatch pays:
+   at every payload size measured, the ``slim_agg`` cell moves at least
+   2x the messages/second of the ``slim`` singleton cell (the PR's
+   acceptance floor; target is 3x+, within striking distance of AM).
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -38,13 +44,15 @@ def check(path: pathlib.Path) -> int:
     assert isinstance(rows, list) and rows, f"{path}: empty or not a list"
     for r in rows:
         assert isinstance(r, dict), f"non-dict row: {r!r}"
-        extra = set(r) - {"bench", "cell", "us", "msgs_per_s"}
+        extra = set(r) - {"bench", "cell", "us", "msgs_per_s", "ratio"}
         assert not extra, f"row has out-of-schema keys {extra}: {r!r}"
         assert isinstance(r.get("bench"), str) and r["bench"], r
         assert isinstance(r.get("cell"), str) and r["cell"], r
         assert isinstance(r.get("us"), (int, float)), r
         if "msgs_per_s" in r:
             assert isinstance(r["msgs_per_s"], (int, float)), r
+        if "ratio" in r:
+            assert isinstance(r["ratio"], (int, float)) and r["ratio"] > 0, r
 
     fig5, sizes = _cells(rows, "fig5_cached", "full")
     if "PR2" in path.name:
@@ -55,6 +63,23 @@ def check(path: pathlib.Path) -> int:
               f"-> {full / slim:.2f}x")
         assert slim < full, (
             f"SLIM cell not faster than FULL at {s}B ({slim} >= {full})")
+
+    rate = {r["cell"]: r["msgs_per_s"] for r in rows
+            if r["bench"] == "fig5_cached" and "msgs_per_s" in r}
+    agg_sizes = sorted(int(c.split("/")[1][:-1]) for c in rate
+                       if c.startswith("slim_agg/"))
+    if "PR5" in path.name:
+        assert agg_sizes, "no fig5_cached slim_agg/* rows"
+    for s in agg_sizes:
+        slim, agg = rate[f"slim/{s}B"], rate[f"slim_agg/{s}B"]
+        am = rate.get(f"am/{s}B")
+        gap = f" (am={am:.0f})" if am else ""
+        print(f"fig5_agg   {s:>7}B: slim={slim:8.0f}msg/s "
+              f"slim_agg={agg:8.0f}msg/s -> {agg / slim:.2f}x{gap}")
+        assert agg >= 2 * slim, (
+            f"slim_agg not >= 2x slim msgs/s at {s}B ({agg:.0f} < "
+            f"2 * {slim:.0f}) — coalescing must amortize per-message "
+            f"overhead")
 
     graph, gsizes = _cells(rows, "fig_graph", "migrate")
     if "PR3" in path.name:

@@ -13,6 +13,13 @@ Credit-based flow control handles slow targets (sends beyond ring capacity
 report backpressure and retry after a drain), and per-peer stats come out
 of the dispatcher at the end.
 
+Coalescing is ON (frame v2.3): cache-warm sends to host peers queue and
+ship as FLAG_AGG containers (device lanes batch their own way, via
+generation deposits).  A second act runs a small-message burst
+(``counter_bump``) through the host peers and prints the aggregate
+occupancy — the smoke's AGG_OK line asserts that coalescing actually
+aggregated and that nothing was rejected or lost.
+
     PYTHONPATH=src python examples/multi_peer.py
 """
 
@@ -49,6 +56,7 @@ mesh = make_mesh((n_dev,), ("model",))
 
 dispatcher = Dispatcher(source, ProgressEngine(flush_threshold=8,
                                                inflight_window="trailer"))
+dispatcher.set_coalescing(True, max_subs=16)
 host_args = lambda: {"externals": {"W": W}, "results": []}
 for name in ("rdma_a", "rdma_b"):
     dispatcher.add_peer(name, RdmaFabric(),
@@ -95,11 +103,45 @@ for name, peer in dispatcher.peers.items():
         matched.add(j)
     print(f"  {name}: {len(results)} results verified vs relu(x@W)")
 
+# --- act two: a small-message burst through the coalescing queues -----------
+# counter_bump is a host-tier verb: the first send per peer ships FULL
+# (link + digest confirm), after which the burst coalesces — K invocations
+# per FLAG_AGG container, one ring slot and one sweep pass each.
+h_bump = register_ifunc(source, "counter_bump")
+host_peers = [n for n, p in dispatcher.peers.items() if p.fabric.kind != "device"]
+BURST = 48
+for name in host_peers:
+    dispatcher.send_ifunc(name, h_bump, b"warm")      # FULL warmup
+dispatcher.drain()
+burst_payloads = [bytes([i & 0x7F]) * 8 for i in range(BURST)]
+for name in host_peers:
+    sent = dispatcher.send_ifunc_many(name, h_bump, burst_payloads)
+    assert sent == BURST, (name, sent)
+dispatcher.drain()
+for name in host_peers:
+    peer = dispatcher.peers[name]
+    count = peer.target_args.get("count", 0)
+    assert count == BURST + 1, (name, count)          # warmup + burst
+print(f"burst: {BURST} x {len(host_peers)} coalesced sends verified")
+
 print("per-peer stats:")
 dispatcher.print_stats()
 eng = dispatcher.engine.stats
 print(f"progress engine: posted={eng['posted']} completed={eng['completed']} "
       f"auto_flushes={eng['auto_flushes']}")
+
+# aggregate occupancy: how many invocations each container actually carried
+agg_frames = agg_subs = 0
+for name, peer in dispatcher.peers.items():
+    s = peer.stats
+    if s.get("agg_sent"):
+        print(f"  {name}: {s['agg_subs']} records in {s['agg_sent']} "
+              f"aggregates (occupancy {s['agg_subs'] / s['agg_sent']:.1f}, "
+              f"{s['coalesced']} enqueues)")
+        agg_frames += s["agg_sent"]
+        agg_subs += s["agg_subs"]
+print(f"aggregate occupancy: {agg_subs} records / {agg_frames} containers "
+      f"= {agg_subs / max(agg_frames, 1):.1f} per frame")
 
 # CI contract: any peer reporting rejects, unrecovered NACKs (nack_lost or
 # a resend that never flushed), or undrained traffic fails the smoke run
@@ -118,7 +160,18 @@ for name, peer in dispatcher.peers.items():
         failures.append(f"{name}: {len(peer.resend)} retransmits undrained")
 if dispatcher.engine.outstanding():
     failures.append(f"{dispatcher.engine.outstanding()} puts never flushed")
+# the coalescing contract: the burst must actually have aggregated (an
+# occupancy of 1.0 means the queue never batched anything), and no queued
+# record may be left behind after the drain
+if agg_frames == 0 or agg_subs / agg_frames < 2.0:
+    failures.append(f"no real aggregation: {agg_subs} records in "
+                    f"{agg_frames} containers")
+for name, peer in dispatcher.peers.items():
+    leftover = sum(len(q.subs) for q in peer.coalesce.values())
+    if leftover:
+        failures.append(f"{name}: {leftover} coalesced records undrained")
 if failures:
     print("MULTI_PEER_FAILED:" + "; ".join(failures))
     raise SystemExit(1)
 print("MULTI_PEER_OK")
+print("AGG_OK")

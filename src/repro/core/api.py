@@ -69,6 +69,12 @@ class Context:
     handles: dict[str, "IfuncHandle"] = field(default_factory=dict)
     wait_mem = staticmethod(_default_wait_mem)
     max_trailer_spins: int = 1_000_000
+    last_agg_results: list | None = None     # per-sub outcomes of the most
+    #                     recent FLAG_AGG frame this ctx consumed (set by
+    #                     poll_ifunc, harvested by Mailbox.sweep into
+    #                     Mailbox.last_agg for the dispatcher's completion)
+    _agg_policy_ok: set = field(default_factory=set)   # memoized (name, kind)
+    #                     pairs the policy already cleared (pure check)
     stats: dict = field(default_factory=lambda: {
         "executed": 0, "rejected": 0, "links": 0, "bytes_in": 0, "nacks": 0})
 
@@ -243,6 +249,110 @@ def ifunc_msg_send_nbix(ep, msg: IfuncMsg, remote_addr: int | None = None,
 # target side
 
 
+@dataclass(slots=True)
+class AggSubResult:
+    """Outcome of one sub-record of an aggregate container: its own Status
+    (OK / NACK_UNCACHED / REJECTED), plus — for corr-carrying records — the
+    value the ifunc produced (``target_args["result"]``) or the exception
+    it raised.  A raised sub-record is *delivered* (status OK, error set):
+    siblings keep executing and the error travels back as an ERR reply,
+    mirroring the singleton reply path's poisoned-slot semantics.
+    Slotted: one materializes per sub-record per sweep."""
+
+    status: Status
+    name: str
+    digest: bytes
+    corr_id: int
+    value: object = None
+    error: BaseException | None = None
+
+
+class _AggSubHdr:
+    """Minimal header stand-in handed to the flow hook for a continuation
+    sub-record (the hook only reads ``.name`` for its error labels)."""
+
+    __slots__ = ("name", "code_kind")
+
+    def __init__(self, name: str, code_kind: F.CodeKind):
+        self.name = name
+        self.code_kind = code_kind
+
+
+#: shared outcome for the overwhelmingly common case — a fire-and-forget
+#: record that executed cleanly.  The dispatcher's completion only reads
+#: ``.status``/``.value``/``.error`` (it knows each record's identity from
+#: its own send-side bookkeeping), so one immutable instance serves them
+#: all and the per-record result allocation disappears from the hot loop.
+_AGG_PLAIN_OK = AggSubResult(Status.OK, "", b"", 0)
+
+
+def _run_agg(ctx: Context, subs, target_args) -> list[AggSubResult]:
+    """Execute every sub-record of a decoded aggregate in one pass.  The
+    container's framing was already validated (header signal + the single
+    aggregate fletcher), so the per-record loop is pure dispatch: policy
+    gate, digest-keyed cache lookup, call.  A digest miss NACKs only that
+    record; a policy violation rejects only that record; an ifunc
+    exception poisons only that record.
+
+    The policy gate is memoized per (name, kind) on the context — the
+    regex/kind check is pure in its inputs, so a steady stream of the
+    same verbs pays it once, not once per record."""
+    is_dict = isinstance(target_args, dict)
+    policy_ok = ctx._agg_policy_ok
+    lookup = ctx.link_cache.lookup
+    stats = ctx.stats
+    executed = 0
+    out = []
+    append = out.append
+    for sub in subs:
+        try:
+            gate = (sub.name, sub.kind)
+            if gate not in policy_ok:
+                ctx.policy.check_agg_sub(sub.name, sub.kind)
+                policy_ok.add(gate)
+            fn = lookup(sub.name, sub.digest)
+            if fn is None:
+                # the aggregate analogue of a SLIM miss: this record is
+                # consumed, the source retransmits it as a FULL singleton
+                stats["nacks"] += 1
+                stats["last_nack"] = (sub.name, sub.digest)
+                append(AggSubResult(Status.NACK_UNCACHED, sub.name,
+                                    sub.digest, sub.corr_id))
+                continue
+            if sub.cont is not None:
+                if ctx.flow is None:
+                    raise F.FrameError(
+                        "continuation sub-record on a flow-less target")
+                ctx.flow.on_flow_frame(ctx, _AggSubHdr(sub.name, sub.kind),
+                                       fn, sub.payload, sub.cont, target_args)
+                append(_AGG_PLAIN_OK)
+            elif sub.corr_id and is_dict:
+                target_args.pop("result", None)
+                fn(sub.payload, len(sub.payload), target_args)
+                executed += 1
+                append(AggSubResult(Status.OK, sub.name, sub.digest,
+                                    sub.corr_id,
+                                    value=target_args.get("result")))
+            else:
+                # fire-and-forget: no result capture, and the outcome is
+                # the shared OK marker — zero allocations per record
+                fn(sub.payload, len(sub.payload), target_args)
+                executed += 1
+                append(_AGG_PLAIN_OK)
+        except (F.FrameError, PolicyViolation) as e:
+            stats["rejected"] += 1
+            stats["last_reject"] = f"{type(e).__name__}: {e}"
+            append(AggSubResult(Status.REJECTED, sub.name, sub.digest,
+                                sub.corr_id, error=e))
+        except Exception as e:          # raised *inside* the ifunc: poisoned
+            append(AggSubResult(Status.OK, sub.name, sub.digest,
+                                sub.corr_id, error=e))
+            stats["agg_errors"] = stats.get("agg_errors", 0) + 1
+    if executed:
+        stats["executed"] += executed
+    return out
+
+
 def _link(ctx: Context, hdr: F.FrameHeader, code: bytes):
     """First-arrival linking — the clear_cache/GOT-reconstruction moment."""
     if hdr.code_kind == F.CodeKind.PYBC:
@@ -296,6 +406,7 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
         hdr = F.peek_header(buf, ctx.policy.max_frame_len)
         if hdr is None:
             return Status.NO_MESSAGE
+        ctx.last_agg_results = None      # stale outcomes never misattributed
         ctx.policy.check_header(hdr)
         if hdr.is_reply:
             # result-return frames resolve futures via the transport layer's
@@ -308,6 +419,18 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
                 return Status.IN_PROGRESS
             ctx.wait_mem(spins)
         code, payload = F.frame_sections(buf, hdr)
+        if hdr.is_agg:
+            # coalesced dispatch: ONE container frame carries K cached
+            # invocations — decode the whole batch (one signal check) and
+            # run every record in a single pass; per-record outcomes land
+            # in ctx.last_agg_results for the transport completion.
+            subs = F.unpack_agg(payload)         # FrameError -> REJECTED
+            results = _run_agg(ctx, subs, target_args)
+            ctx.last_agg_results = results
+            ctx.stats["bytes_in"] += hdr.frame_len
+            if clear:
+                F.clear_frame(buf, hdr)
+            return Status.OK
         cont = F.frame_cont(buf, hdr)
         if cont is not None and ctx.flow is None:
             # a continuation frame needs a forwarding hook installed — one

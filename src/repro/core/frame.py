@@ -1,5 +1,6 @@
 """ifunc message frame, v2 (paper Fig. 1 + the §3.4 cached fast path +
-the task-runtime reply path + the flow layer's continuation section).
+the task-runtime reply path + the flow layer's continuation section +
+the coalesced-dispatch aggregate container).
 
 Layout (little-endian), extending the paper's
 ``FRAME_LEN | GOT_OFFSET | PAYLOAD_OFFSET | IFUNC_NAME | SIGNAL | CODE |
@@ -73,6 +74,25 @@ v2.2 additions (the flow layer's remote continuations, ``repro.flow``):
 * Continuations and replies are mutually exclusive: a FLAG_REPLY frame
   with a non-empty continuation section is rejected as ill-formed, as is
   a FLAG_CONT frame arriving at a target with no flow hook installed.
+
+v2.3 additions (coalesced dispatch, the SLIM-vs-AM gap closer):
+
+* ``FLAG_AGG`` marks a *container* frame: one header, one ring slot, one
+  trailer — and a payload that is a packed sequence of K *sub-records*,
+  each a cached invocation in its own right (name-table-interned ifunc
+  ref, code digest, corr_id, payload, optional continuation descriptor).
+  The whole sequence is signed by ONE trailing fletcher32, so a K-message
+  aggregate pays the header/signal/trailer protocol cost once instead of
+  K times (the same lever sPIN and fabric-lib pull for small-message
+  rate).  Sub-records never carry code: an aggregate is by construction
+  a batch of SLIM invocations, and a sub-record whose digest misses the
+  target's link cache NACKs *individually* — the source rebuilds only
+  that record as a FULL singleton, its executed siblings untouched.
+* ``FLAG_AGG | FLAG_REPLY`` coalesces the reply direction symmetrically:
+  several corr_id results ride one frame into the source's reply ring.
+* An aggregate's own header fields are neutral: name ``__agg__``, empty
+  code section, zero digest, zero corr_id, never FLAG_SLIM/FLAG_CONT
+  (continuations ride per-sub-record).
 """
 
 from __future__ import annotations
@@ -87,7 +107,8 @@ try:  # vectorized checksum; core still works on a numpy-free interpreter
 except ImportError:  # pragma: no cover - numpy is a repo-wide dependency
     _np = None
 
-MAGIC = 0x1F5C0DE8          # bumped: v2.2 header (+ continuation section)
+MAGIC = 0x1F5C0DE8          # v2.3: same 100-byte layout as v2.2 (FLAG_AGG
+                            # is a flags bit, not a header change)
 TRAILER = 0xD0E1F2A3
 HEADER_LEN = 100
 NAME_LEN = 32
@@ -97,18 +118,46 @@ FLAG_SLIM = 0x1
 FLAG_REPLY = 0x2
 FLAG_ERR = 0x4
 FLAG_CONT = 0x8
+FLAG_AGG = 0x10
 SIGNAL_OFF = 96             # header signal location; fletcher32 over [0, 96)
+NO_DIGEST = b"\0" * DIGEST_LEN
+AGG_NAME = "__agg__"        # header name of every aggregate container frame
 
 _HEADER_FMT = "<IQIQI32sI16sQQ"  # magic, frame_len, code_off, payload_off,
                                  # kind, name, flags, digest, corr_id,
                                  # cont_off
 assert struct.calcsize(_HEADER_FMT) == SIGNAL_OFF
 
+# Hot-path structs, compiled once.  The header pack/unpack and the 4-byte
+# signal/trailer accesses run per frame on both the send and poll paths;
+# struct.Struct instances skip the per-call format-string parse, and the
+# 48-word view lets the header checksum run off ONE C unpack instead of
+# 96 per-byte buffer reads (see _header_fletcher).
+_HEADER_STRUCT = struct.Struct(_HEADER_FMT)
+_U32 = struct.Struct("<I")
+_HDR_WORDS = struct.Struct(f"<{SIGNAL_OFF // 2}H")
+
+
+def _header_fletcher(buf) -> int:
+    """fletcher32 over the 96 signed header bytes, word-at-a-time via one
+    precompiled unpack — identical to ``fletcher32_py(buf[:SIGNAL_OFF])``
+    (the header is even-length, so no odd-tail term), without slicing a
+    memoryview or touching the buffer byte by byte."""
+    a = b = 0xFFFF
+    for w in _HDR_WORDS.unpack_from(buf, 0):
+        a = (a + w) % 0xFFFF
+        b = (b + a) % 0xFFFF
+    return (b << 16) | a
+
 
 class CodeKind(IntEnum):
     PYBC = 1       # marshalled CPython bytecode + symbol table (host tier)
     HLO = 2        # jax.export serialized StableHLO (host tier, jit-executed)
     UVM = 3        # μVM bytecode for the Pallas interpreter (device tier)
+
+
+_CODE_KIND = {int(k): k for k in CodeKind}   # dict hit beats EnumMeta.__call__
+#                              on the per-frame (and per-sub-record) hot path
 
 
 class FrameError(Exception):
@@ -197,6 +246,10 @@ class FrameHeader:
     def has_cont(self) -> bool:
         return bool(self.flags & FLAG_CONT)
 
+    @property
+    def is_agg(self) -> bool:
+        return bool(self.flags & FLAG_AGG)
+
 
 def _name_bytes(name: str) -> bytes:
     nb = name.encode()
@@ -233,12 +286,12 @@ def seal_frame(buf, name: str, code, kind: CodeKind, payload_len: int, *,
     if cont_len:
         buf[cont_off:cont_off + cont_len] = cont
         flags |= FLAG_CONT
-    hdr = struct.pack(_HEADER_FMT, MAGIC, frame_len, HEADER_LEN, payload_off,
-                      int(kind), nb, flags | (FLAG_SLIM if slim else 0),
-                      digest, corr_id, cont_off)
-    buf[:SIGNAL_OFF] = hdr
-    struct.pack_into("<I", buf, SIGNAL_OFF, fletcher32(hdr))
-    struct.pack_into("<I", buf, frame_len - TRAILER_LEN, TRAILER)
+    _HEADER_STRUCT.pack_into(buf, 0, MAGIC, frame_len, HEADER_LEN,
+                             payload_off, int(kind), nb,
+                             flags | (FLAG_SLIM if slim else 0),
+                             digest, corr_id, cont_off)
+    _U32.pack_into(buf, SIGNAL_OFF, _header_fletcher(buf))
+    _U32.pack_into(buf, frame_len - TRAILER_LEN, TRAILER)
     return frame_len
 
 
@@ -302,27 +355,26 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     has arrived (zeroed magic); raises FrameError on corruption/bounds."""
     if len(buf) < HEADER_LEN:
         return None
-    magic = struct.unpack_from("<I", buf, 0)[0]
+    (magic,) = _U32.unpack_from(buf, 0)
     if magic == 0:
         return None  # nothing written here yet
     if magic != MAGIC:
         raise FrameError(f"bad magic {magic:#x}")
-    (sig,) = struct.unpack_from("<I", buf, SIGNAL_OFF)
-    mv = memoryview(buf)[:SIGNAL_OFF]
-    try:
-        if sig != fletcher32(mv):
-            raise FrameError("header signal mismatch (corrupt header)")
-    finally:
-        mv.release()
+    (sig,) = _U32.unpack_from(buf, SIGNAL_OFF)
+    if sig != _header_fletcher(buf):
+        raise FrameError("header signal mismatch (corrupt header)")
     (magic, frame_len, code_off, payload_off, kind, name, flags,
-     digest, corr_id, cont_off) = struct.unpack_from(_HEADER_FMT, buf, 0)
+     digest, corr_id, cont_off) = _HEADER_STRUCT.unpack_from(buf, 0)
     if max_frame is not None and frame_len > max_frame:
         raise FrameError(f"frame too long ({frame_len} > {max_frame})")
     if not (HEADER_LEN <= code_off <= payload_off <= cont_off
             <= frame_len - TRAILER_LEN):
         raise FrameError("inconsistent offsets")
-    if flags & (FLAG_SLIM | FLAG_REPLY) and code_off != payload_off:
-        raise FrameError("SLIM/reply frame carries a code section")
+    if flags & (FLAG_SLIM | FLAG_REPLY | FLAG_AGG) and code_off != payload_off:
+        raise FrameError("SLIM/reply/aggregate frame carries a code section")
+    if flags & FLAG_AGG and flags & (FLAG_SLIM | FLAG_CONT):
+        raise FrameError("aggregate frame with frame-level SLIM/CONT flags "
+                         "(both ride per sub-record)")
     if flags & FLAG_CONT:
         if flags & FLAG_REPLY:
             raise FrameError("reply frame carries a continuation section")
@@ -330,11 +382,10 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
             raise FrameError("FLAG_CONT with empty continuation section")
     elif cont_off != frame_len - TRAILER_LEN:
         raise FrameError("continuation section without FLAG_CONT")
-    try:
-        kind = CodeKind(kind)
-    except ValueError as e:
-        raise FrameError(f"unknown code kind {kind}") from e
-    return FrameHeader(frame_len, code_off, payload_off, kind,
+    ck = _CODE_KIND.get(kind)
+    if ck is None:
+        raise FrameError(f"unknown code kind {kind}")
+    return FrameHeader(frame_len, code_off, payload_off, ck,
                        name.rstrip(b"\0").decode(errors="strict"),
                        flags, bytes(digest), corr_id, cont_off)
 
@@ -343,7 +394,7 @@ def trailer_arrived(buf, hdr: FrameHeader) -> bool:
     end = hdr.frame_len
     if len(buf) < end:
         raise FrameError("frame exceeds buffer")
-    (t,) = struct.unpack_from("<I", buf, end - TRAILER_LEN)
+    (t,) = _U32.unpack_from(buf, end - TRAILER_LEN)
     return t == TRAILER
 
 
@@ -396,3 +447,230 @@ def scrub_slot(buf) -> None:
     except FrameError:
         pass
     buf[:HEADER_LEN] = memoryview(_ZEROS)[:HEADER_LEN]
+
+
+# ---------------------------------------------------------------------------
+# v2.3 aggregate container payload (FLAG_AGG)
+#
+# Layout of an aggregate frame's payload section:
+#
+#     u16 n_subs | u16 n_names
+#     n_names x (u8 len | name bytes)            -- interned name table
+#     n_subs  x (u16 name_idx | u8 kind | u8 sub_flags | 16s digest |
+#                u64 corr_id | u32 payload_len | u32 cont_len |
+#                payload bytes | cont bytes)
+#     u32 fletcher32 over the STRUCTURAL bytes   -- ONE signal for K records
+#
+# The name table interns each distinct ifunc name once per aggregate; a
+# sub-record references it by index, so a 16-byte invocation costs ~36
+# bytes of framing instead of a full 104-byte header + trailer.
+#
+# The trailing signal covers the structural bytes only — the counts, the
+# name table, and every sub-record's fixed header — NOT the payload
+# bytes.  That is exact parity with the singleton protocol (the header
+# signal covers the 96-byte header; payload integrity rides on the
+# ordered one-sided put + trailer barrier, never a checksum), and it
+# keeps the signing cost O(K), independent of payload size.  What the
+# signal guarantees is that the decode loop cannot walk corrupt framing:
+# any record boundary it derives was exactly what the source packed.
+
+_AGG_COUNT = struct.Struct("<HH")
+_AGG_SUB = struct.Struct("<HBB16sQII")
+AGG_SUB_OVERHEAD = _AGG_SUB.size            # fixed bytes per sub-record
+AGG_SUBFLAG_ERR = 0x1                       # reply sub-record carries an error
+AGG_SUBFLAG_CONT = 0x2                      # sub-record has a cont section
+
+
+@dataclass(slots=True)
+class AggSub:
+    """One packed invocation (or reply) inside a FLAG_AGG container.
+    Slotted: K of these materialize per container on both ends of the
+    wire — they are the hot allocation of the coalesced path."""
+
+    name: str
+    kind: CodeKind
+    digest: bytes
+    corr_id: int
+    payload: object                         # bytes-like
+    cont: bytes | None = None
+    err: bool = False
+
+
+def _agg_names(subs) -> tuple[list[str], dict]:
+    names: list[str] = []
+    idx: dict[str, int] = {}
+    for s in subs:
+        if s.name not in idx:
+            idx[s.name] = len(names)
+            names.append(s.name)
+    return names, idx
+
+
+def agg_payload_len(subs) -> int:
+    """Exact byte length the aggregate payload for ``subs`` will occupy —
+    the slot-budget check the coalescing queue flushes on."""
+    names, _ = _agg_names(subs)
+    n = _AGG_COUNT.size + sum(1 + len(nm.encode()) for nm in names)
+    for s in subs:
+        n += (_AGG_SUB.size + len(s.payload)
+              + (0 if s.cont is None else len(s.cont)))
+    return n + 4                            # the aggregate fletcher trailer
+
+
+def agg_frame_len(subs) -> int:
+    """Full frame length of the aggregate container carrying ``subs``."""
+    return HEADER_LEN + agg_payload_len(subs) + TRAILER_LEN
+
+
+def pack_agg_into(view, subs) -> int:
+    """Pack ``subs`` as an aggregate payload into ``view`` (the payload
+    region of a slab cell — see :func:`frame_payload_view`); returns bytes
+    used.  The caller seals the surrounding FLAG_AGG frame."""
+    if not subs:
+        raise FrameError("empty aggregate")
+    if len(subs) > 0xFFFF:
+        raise FrameError(f"aggregate of {len(subs)} sub-records (max 65535)")
+    names, idx = _agg_names(subs)
+    _AGG_COUNT.pack_into(view, 0, len(subs), len(names))
+    off = _AGG_COUNT.size
+    for nm in names:
+        nb = nm.encode()
+        if not 0 < len(nb) < 256:
+            raise FrameError(f"aggregate ifunc name length {len(nb)}")
+        view[off] = len(nb)
+        view[off + 1:off + 1 + len(nb)] = nb
+        off += 1 + len(nb)
+    spans = [(0, off)]          # structural bytes: counts + name table ...
+    cap = len(view)
+    for s in subs:
+        pl = len(s.payload)
+        cl = 0 if s.cont is None else len(s.cont)
+        if off + _AGG_SUB.size + pl + cl + 4 > cap:
+            raise FrameError(f"aggregate overflows {cap}B buffer")
+        flags = ((AGG_SUBFLAG_ERR if s.err else 0)
+                 | (AGG_SUBFLAG_CONT if s.cont is not None else 0))
+        if len(s.digest) != DIGEST_LEN:
+            raise FrameError(f"sub-record digest length {len(s.digest)}")
+        _AGG_SUB.pack_into(view, off, idx[s.name], int(s.kind), flags,
+                           s.digest, s.corr_id, pl, cl)
+        spans.append((off, off + _AGG_SUB.size))   # ... + sub headers
+        off += _AGG_SUB.size
+        view[off:off + pl] = s.payload
+        off += pl
+        if cl:
+            view[off:off + cl] = s.cont
+            off += cl
+    _U32.pack_into(view, off,
+                   fletcher32(b"".join(view[a:b] for a, b in spans)))
+    return off + 4
+
+
+def unpack_agg(payload) -> list[AggSub]:
+    """Decode an aggregate payload into its sub-records in one pass.  The
+    parse is bounds-checked throughout, then the single trailing fletcher
+    signal is verified over the structural bytes the parse walked — a
+    mismatch rejects the WHOLE container (one corrupt put, one reject),
+    exactly like a corrupt singleton header.  Sub payloads are zero-copy
+    views into ``payload``; callers that keep them past the frame's
+    lifetime copy via ``bytes()``."""
+    mv = payload if isinstance(payload, memoryview) else memoryview(payload)
+    n = len(mv)
+    if n < _AGG_COUNT.size + 4:
+        raise FrameError("aggregate payload too short")
+    try:
+        n_subs, n_names = _AGG_COUNT.unpack_from(mv, 0)
+        off = _AGG_COUNT.size
+        names = []
+        for _ in range(n_names):
+            ln = mv[off]
+            names.append(bytes(mv[off + 1:off + 1 + ln]).decode())
+            off += 1 + ln
+        spans = [mv[0:off]]
+        subs = []
+        sub_size = _AGG_SUB.size
+        limit = n - 4
+        unpack = _AGG_SUB.unpack_from
+        for _ in range(n_subs):
+            (ni, kind, flags, digest, corr, pl, cl) = unpack(mv, off)
+            spans.append(mv[off:off + sub_size])
+            off += sub_size
+            if off + pl + cl > limit:
+                raise FrameError("aggregate sub-record exceeds payload")
+            sub_payload = mv[off:off + pl]
+            off += pl
+            cont = bytes(mv[off:off + cl]) if flags & AGG_SUBFLAG_CONT else None
+            off += cl
+            # struct '16s' already yields bytes (no copy needed); the kind
+            # resolves through a dict, not the enum constructor
+            k = _CODE_KIND.get(kind)
+            if k is None:
+                raise FrameError(f"unknown sub-record code kind {kind}")
+            subs.append(AggSub(names[ni], k, digest, corr, sub_payload, cont,
+                               bool(flags & AGG_SUBFLAG_ERR)))
+    except (IndexError, ValueError, UnicodeDecodeError, struct.error) as e:
+        raise FrameError(f"ill-formed aggregate payload: {e}") from e
+    if off != limit:
+        raise FrameError("aggregate payload trailing bytes")
+    (sig,) = _U32.unpack_from(mv, limit)
+    if sig != fletcher32(b"".join(spans)):   # join accepts memoryviews:
+        raise FrameError(                    # one copy total, not one per span
+            "aggregate signal mismatch (corrupt sub-records)")
+    return subs
+
+
+# -- streaming aggregate pack (zero-scratch): the transport writes each
+# -- record's payload straight into the slab cell via its payload codec,
+# -- so begin/put/finish expose the same layout without a subs list
+
+def begin_agg(view, names: list[str]) -> int:
+    """Write a streaming aggregate's prologue into ``view`` — zero
+    sub-count (patched by :func:`finish_agg`) + the interned name table.
+    Returns the offset where the first sub-record header goes."""
+    _AGG_COUNT.pack_into(view, 0, 0, len(names))
+    off = _AGG_COUNT.size
+    for nm in names:
+        nb = nm.encode()
+        if not 0 < len(nb) < 256:
+            raise FrameError(f"aggregate ifunc name length {len(nb)}")
+        view[off] = len(nb)
+        view[off + 1:off + 1 + len(nb)] = nb
+        off += 1 + len(nb)
+    return off
+
+
+def put_agg_sub(view, off: int, name_idx: int, kind: CodeKind,
+                digest: bytes, corr_id: int, payload_len: int, *,
+                cont_len: int = 0, err: bool = False) -> int:
+    """Write one sub-record's fixed header at ``off`` (its payload bytes —
+    typically already written in place by a payload codec — follow at the
+    returned offset)."""
+    flags = ((AGG_SUBFLAG_ERR if err else 0)
+             | (AGG_SUBFLAG_CONT if cont_len else 0))
+    _AGG_SUB.pack_into(view, off, name_idx, int(kind), flags, digest,
+                       corr_id, payload_len, cont_len)
+    return off + _AGG_SUB.size
+
+
+def finish_agg(view, off: int, n_subs: int, spans) -> int:
+    """Patch the sub-record count, sign the structural ``spans``
+    ((start, end) pairs into ``view``: the prologue + every sub header),
+    and return the aggregate payload length."""
+    struct.pack_into("<H", view, 0, n_subs)
+    _U32.pack_into(view, off,
+                   fletcher32(b"".join(view[a:b] for a, b in spans)))
+    return off + 4
+
+
+def seal_agg_frame(buf, subs, *, reply: bool = False,
+                   kind: CodeKind = CodeKind.PYBC) -> int:
+    """Pack ``subs`` + seal the FLAG_AGG container around them, in place in
+    ``buf`` (a slab cell).  Single pass: the records pack straight into the
+    buffer's payload region (bounds-checked against the buffer itself, no
+    pre-walk to size the payload), then the header wraps around whatever
+    they used."""
+    cap = len(buf) - HEADER_LEN - TRAILER_LEN
+    if cap <= 0:
+        raise FrameError(f"buffer {len(buf)}B cannot hold an aggregate")
+    used = pack_agg_into(frame_payload_view(buf, 0, cap), subs)
+    return seal_frame(buf, AGG_NAME, b"", kind, used, digest=NO_DIGEST,
+                      flags=FLAG_AGG | (FLAG_REPLY if reply else 0))

@@ -42,6 +42,15 @@ class SecurityPolicy:
         if not re.match(self.name_pattern, hdr.name):
             raise PolicyViolation(f"bad ifunc name {hdr.name!r}")
 
+    def check_agg_sub(self, name: str, kind: CodeKind) -> None:
+        """Per-sub-record policy for aggregate containers: each packed
+        invocation clears the same kind/namespace gates a singleton header
+        would (frame length was already bounded on the container)."""
+        if kind not in self.allowed_kinds:
+            raise PolicyViolation(f"code kind {kind.name} not allowed here")
+        if not re.match(self.name_pattern, name):
+            raise PolicyViolation(f"bad ifunc name {name!r}")
+
 
 PERMISSIVE = SecurityPolicy()
 DEVICE_ONLY = SecurityPolicy(allowed_kinds=frozenset({CodeKind.UVM}))

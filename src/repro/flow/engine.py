@@ -132,11 +132,16 @@ class FlowEngine:
 
     def __init__(self, ctx: Context, *, engine: ProgressEngine | None = None,
                  default_timeout: float | None = 60.0,
-                 n_slots: int = 8, slot_size: int = 64 << 10):
+                 n_slots: int = 8, slot_size: int = 64 << 10,
+                 coalesce: bool = False):
         self.ctx = ctx
         self.pe = engine if engine is not None else ProgressEngine(
             flush_threshold=8, inflight_window="trailer")
         self.default_timeout = default_timeout
+        #: coalesced forwarding: every node's dispatcher aggregates
+        #: cache-warm continuation forwards (frame v2.3 FLAG_AGG), so a
+        #: scatter's branches through one downstream peer share a frame
+        self.coalesce = coalesce
         self.nodes: dict[str, FlowNode] = {}
         self.returns: dict[str, dict] = {}   # node -> {mb, ch, tail}
         self.libraries: dict[bytes, object] = {}   # digest -> IfuncLibrary:
@@ -337,7 +342,8 @@ class FlowEngine:
             total += n
             if (n == 0 and self.pe.outstanding() == 0
                     and not any(node.outbox or any(
-                        p.resend for p in node.dispatcher.peers.values())
+                        p.resend or any(q.subs for q in p.coalesce.values())
+                        for p in node.dispatcher.peers.values())
                         for node in self.nodes.values())):
                 break
         return total

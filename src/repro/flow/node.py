@@ -37,6 +37,13 @@ class FlowNode:
         self.fabric = fabric
         self.n_slots, self.slot_size = n_slots, slot_size
         self.dispatcher = Dispatcher(ctx, engine.pe)
+        if getattr(engine, "coalesce", False):
+            # forwards ride the coalescing queue: a scatter fanning N
+            # branches through the same downstream peer ships them as ONE
+            # aggregate container instead of N frames
+            self.dispatcher.set_coalescing(True)
+        self._defer_flush = False       # batch a scatter's forwards into
+        #                                 one flush (aggregation window)
         self.target_args: dict = {}     # shared by every inbound ring
         self.gathers: dict = {}         # (corr, gid) -> {"expect", "chunks"}
         self.outbox: deque = deque()    # forwards deferred on backpressure
@@ -192,11 +199,19 @@ class FlowNode:
                         and rest[0].kind == D.KIND_GATHER):
                     raise D.FlowError("scatter must be followed by a gather")
                 g = rest[0]
-                for i, br in enumerate(head.branches):
-                    g_i = D.Hop(g.peer, g.ifunc, g.digest, g.bind,
-                                expect=len(head.branches), gid=g.gid, idx=i,
-                                kind=D.KIND_GATHER)
-                    self._forward(chain, br, (g_i,) + rest[1:], value)
+                # defer the eager per-forward flush until every branch is
+                # enqueued: branches sharing a downstream peer coalesce
+                # into one aggregate put instead of one frame each
+                self._defer_flush = True
+                try:
+                    for i, br in enumerate(head.branches):
+                        g_i = D.Hop(g.peer, g.ifunc, g.digest, g.bind,
+                                    expect=len(head.branches), gid=g.gid,
+                                    idx=i, kind=D.KIND_GATHER)
+                        self._forward(chain, br, (g_i,) + rest[1:], value)
+                finally:
+                    self._defer_flush = False
+                    self._flush_forwards()
                 return
             if head.kind in (D.KIND_GATHER, D.KIND_GATHER_ARRIVAL):
                 # this value is one branch's result: ship it to the
@@ -222,13 +237,25 @@ class FlowNode:
             # forwards sit on the chain's critical path: publish the
             # trailer now so the downstream sweep — often later in this
             # same progress crank — consumes the hop instead of idling a
-            # crank on an in-flight window
-            for r in peer.rings:
-                self.engine.pe.flush(r.channel)
+            # crank on an in-flight window.  (Inside a scatter the flush
+            # is deferred to the end of the fan-out so the branches get
+            # an aggregation window first.)
             self.stats["forwards"] += 1
+            if not self._defer_flush:
+                self.dispatcher.flush_coalesced(hop.peer)
+                for r in peer.rings:
+                    self.engine.pe.flush(r.channel)
         else:                           # backpressure: retry from pump()
             self.outbox.append((hop.peer, h, args, cont))
             self.stats["deferred"] += 1
+
+    def _flush_forwards(self) -> None:
+        """Pack + publish every queued forward on this node (the scatter
+        batch flush): coalescing queues first, then the channel trailers."""
+        self.dispatcher.flush_coalesced()
+        for peer in self.dispatcher.peers.values():
+            for r in peer.rings:
+                self.engine.pe.flush(r.channel)
 
     def _short_circuit(self, chain: D.Chain, exc: BaseException,
                        hop_label: str) -> None:

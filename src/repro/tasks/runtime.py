@@ -13,7 +13,12 @@ One runtime wraps one :class:`~repro.transport.Dispatcher`:
   corr-id is counted and dropped);
 * ``run_local`` executes a callable inline and wraps it in an
   already-resolved future, so placement decisions (migrate vs fetch vs
-  local) all produce the same object for the caller to wait on.
+  local) all produce the same object for the caller to wait on;
+* with ``coalesce=True`` the underlying dispatcher aggregates cache-warm
+  submits into FLAG_AGG containers (``submit_many`` batches a whole list
+  and flushes once), and the targets' results come back coalesced too —
+  one ``FLAG_AGG|FLAG_REPLY`` frame resolving many futures — so both
+  directions of a small-task storm amortize their per-frame cost.
 
 The runtime is the layer the placement engine (``tasks.placement``) and
 the graph workload (``examples/graph_analysis.py``) sit on.
@@ -32,10 +37,13 @@ class TaskRuntime:
 
     def __init__(self, ctx, dispatcher: Dispatcher | None = None,
                  engine: ProgressEngine | None = None, *,
-                 default_timeout: float | None = 30.0):
+                 default_timeout: float | None = 30.0,
+                 coalesce: bool = False, agg_max_subs: int = 16):
         self.ctx = ctx
         self.dispatcher = (dispatcher if dispatcher is not None
                            else Dispatcher(ctx, engine))
+        if coalesce:
+            self.dispatcher.set_coalescing(True, max_subs=agg_max_subs)
         self.dispatcher.reply_router = self._on_reply
         self.dispatcher.reply_codec = wire
         self.futures: dict[int, Future] = {}
@@ -110,6 +118,51 @@ class TaskRuntime:
             raise
         self.stats["submitted"] += 1
         return fut
+
+    def submit_many(self, peer: str, handle, args_list, *,
+                    source_args_size=None) -> list[Future]:
+        """Submit a batch of same-ifunc tasks and flush once.  With
+        coalescing on, the batch rides the dispatcher's bulk enqueue
+        (``send_ifunc_many`` — codec and queue state hoisted out of the
+        per-record loop) into as few FLAG_AGG containers as the slot
+        budget allows, and the results come back coalesced; records the
+        bulk path cannot accept (backpressure, an oversized record) fall
+        back to per-record ``submit``, which waits for credits or raises
+        the record's error.  Without coalescing it degrades gracefully to
+        sequential submits."""
+        args_list = list(args_list)
+        d = self.dispatcher
+        if not getattr(d, "_coalesce", False):
+            futs = [self.submit(peer, handle, a, source_args_size)
+                    for a in args_list]
+            self.flush()
+            return futs
+        futs, corrs = [], []
+        for _ in args_list:
+            self._corr += 1
+            fut = Future(self, self._corr, peer, handle.name)
+            self.futures[self._corr] = fut
+            futs.append(fut)
+            corrs.append(self._corr)
+        sent = d.send_ifunc_many(peer, handle, args_list,
+                                 corr_ids=corrs, futures=futs)
+        self.stats["submitted"] += sent
+        # refused tail: unregister ALL the bulk futures first (if a
+        # resubmit below raises, nothing stays registered that never went
+        # on the wire), then go through the per-record path
+        # (credit-waiting, per-record errors)
+        for i in range(sent, len(args_list)):
+            self.futures.pop(corrs[i], None)
+        for i in range(sent, len(args_list)):
+            futs[i] = self.submit(peer, handle, args_list[i],
+                                  source_args_size)
+        self.flush()
+        return futs
+
+    def flush(self) -> None:
+        """Publish everything handed to submit: coalescing queues pack
+        into aggregates, then pending puts complete."""
+        self.dispatcher.flush()
 
     def run_local(self, fn, *args, **kw) -> Future:
         """Execute inline, wrapped in an already-resolved Future — the

@@ -159,6 +159,16 @@ class DeviceMeshChannel(Channel):
         hdr = F.peek_header(data)
         if hdr is None:
             raise TransportError("device put of an empty frame")
+        if hdr.is_agg:
+            # the device tier already amortizes per-message cost its own
+            # way: staged word-frames deposit as ONE slot-masked ppermute
+            # generation and the sweep validates/executes the whole ring in
+            # one compiled pass — an aggregate container has no word-frame
+            # encoding (and nothing to gain) here, so coalescing stays
+            # host-tier (the dispatcher never marks device lanes eligible)
+            raise TransportError(
+                "aggregate frames are host-tier only: the device mesh "
+                "batches via generation deposits + whole-ring sweeps")
         if hdr.code_kind != F.CodeKind.UVM:
             raise TransportError(
                 f"device mesh accepts UVM frames only, got {hdr.code_kind.name}")

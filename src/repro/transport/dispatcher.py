@@ -58,6 +58,31 @@ Plus the flow layer's *continuation frames* and the *liveness floor*:
   surfaces the oldest age per peer, and ``drain(deadline=...)`` fails
   the futures of frames stuck at a wedged peer (``fail_inflight``)
   instead of letting them hang forever.
+
+And *coalesced dispatch* (frame v2.3 ``FLAG_AGG``), the small-message
+rate lever:
+
+* with :meth:`set_coalescing` enabled, a cache-warm ``send_ifunc`` to a
+  host peer does not claim a ring slot — it lands in that peer's
+  per-(peer, ring) coalescing queue.  The queue flushes into ONE
+  aggregate container (one put, one slot, one credit, one trailer spin
+  for K invocations) on any of: the slot byte budget filling, the
+  sub-record cap, an explicit ``flush``/``drain``, or the age bound
+  ``agg_max_age`` checked each poll.  A queue holding a single record
+  flushes as a plain SLIM singleton — the latency path never regresses;
+* the target decodes the whole container in one ``poll_ifunc`` pass and
+  reports per-sub-record statuses (``Mailbox.last_agg``): a sub-record
+  whose digest was evicted NACKs *individually* and is rebuilt as a FULL
+  singleton retransmit — its executed siblings are never replayed — on
+  the same quiescence-gated resend queue per-peer FIFO already rides;
+* replies coalesce symmetrically: the corr-carrying records of one
+  aggregate post their results as ONE ``FLAG_AGG|FLAG_REPLY`` frame into
+  the reply ring, and ``poll_replies`` demuxes it back per corr_id;
+* unbudgeted polls (``drain``) sweep a whole ring's worth of ready slots
+  per lane visit instead of one message per poll-loop round — budgeted
+  polls keep the historical one-per-lane-per-round fairness contract;
+* device-mesh lanes never coalesce: the deposit/sweep pipeline already
+  batches generation-wide (aggregates are host-tier by construction).
 """
 
 from __future__ import annotations
@@ -77,7 +102,9 @@ DEFAULT_N_SLOTS = 8
 @dataclass
 class _TxRec:
     """Source-side record of one in-flight frame (for digest confirmation,
-    NACK retransmission, reply correlation, and liveness tracking)."""
+    NACK retransmission, reply correlation, and liveness tracking).
+    ``subs`` non-None marks an aggregate container: the listed
+    :class:`_PendingSub` records are what the frame actually carries."""
 
     name: str
     digest: bytes
@@ -85,6 +112,56 @@ class _TxRec:
     slim: bool
     corr_id: int = 0
     sent_at: float = field(default_factory=time.monotonic)
+    subs: list | None = None
+
+
+@dataclass(slots=True)
+class _PendingSub:
+    """One coalesced invocation awaiting (or riding) an aggregate: the
+    materialized payload plus everything a FULL-singleton rebuild needs.
+    name/kind/digest are copied out of the handle's library at enqueue so
+    the pack loop reads plain slots — and the attribute protocol matches
+    :class:`frame.AggSub`, so ``seal_agg_frame`` packs these directly
+    (no intermediate wire-object per record)."""
+
+    handle: object
+    name: str
+    kind: object
+    digest: bytes
+    payload: bytes
+    corr_id: int
+    cont: bytes | None
+    future: object
+    enq_at: float
+    err: bool = False       # request records never carry the reply-err bit
+
+
+class _CoalesceQ:
+    """One (peer, ring)'s pending sub-records with an exact running byte
+    count of the aggregate frame they would pack into."""
+
+    __slots__ = ("subs", "names", "bytes")
+
+    #: header + sub/name counts + aggregate signal + frame trailer
+    BASE = F.HEADER_LEN + 4 + 4 + F.TRAILER_LEN
+
+    def __init__(self):
+        self.subs: list[_PendingSub] = []
+        self.names: set[str] = set()
+        self.bytes = self.BASE
+
+    def would_take(self, sub: _PendingSub) -> int:
+        extra = (F.AGG_SUB_OVERHEAD + len(sub.payload)
+                 + (0 if sub.cont is None else len(sub.cont)))
+        if sub.name not in self.names:
+            # ifunc names are policy-constrained ASCII: len == byte length
+            extra += 1 + len(sub.name)
+        return self.bytes + extra
+
+    def add(self, sub: _PendingSub) -> None:
+        self.bytes = self.would_take(sub)
+        self.names.add(sub.name)
+        self.subs.append(sub)
 
 
 @dataclass
@@ -113,6 +190,8 @@ class Peer:
     rings: list[RingState] = field(default_factory=list)
     cached: set = field(default_factory=set)       # digests confirmed cached
     resend: deque = field(default_factory=deque)   # FULL msgs queued post-NACK
+    coalesce: dict = field(default_factory=dict)   # ring key -> _CoalesceQ of
+    #                                  sub-records awaiting an aggregate flush
     reply_mailbox: object = None   # source-owned ring the target replies into
     reply_channel: object = None   # target->source path into it
     reply_tail: int = 0            # target-side produce index for replies
@@ -120,7 +199,8 @@ class Peer:
         "sent": 0, "bytes": 0, "delivered": 0, "rejected": 0,
         "backpressure": 0, "inflight_polls": 0,
         "slim_sent": 0, "nacks": 0, "resent": 0,
-        "replies": 0, "errors": 0})
+        "replies": 0, "errors": 0,
+        "coalesced": 0, "agg_sent": 0, "agg_subs": 0})
 
     @property
     def credits(self) -> int:
@@ -154,19 +234,22 @@ class Peer:
 
     def summary(self) -> str:
         s = self.stats
+        agg = (f" agg={s['agg_sent']}x{s['agg_subs'] / s['agg_sent']:.1f}"
+               if s.get("agg_sent") else "")
         return (f"{self.name:<12s} fabric={self.fabric.kind:<9s} "
                 f"sent={s['sent']:<4d} slim={s['slim_sent']:<4d} "
                 f"delivered={s['delivered']:<4d} "
                 f"rejected={s['rejected']:<3d} nacks={s['nacks']:<3d} "
                 f"backpressure={s['backpressure']:<3d} "
                 f"replies={s['replies']:<4d} "
-                f"credits={self.credits}")
+                f"credits={self.credits}{agg}")
 
 
 class Dispatcher:
     """One source fanning ifunc frames out to heterogeneous targets."""
 
-    def __init__(self, src_ctx=None, engine: ProgressEngine | None = None):
+    def __init__(self, src_ctx=None, engine: ProgressEngine | None = None, *,
+                 coalesce: bool = False):
         self.src_ctx = src_ctx
         self.engine = engine if engine is not None else ProgressEngine()
         self.peers: dict[str, Peer] = {}
@@ -178,6 +261,36 @@ class Dispatcher:
         # encode(value)->bytes / encode_error(exc)->bytes for reply frames
         self.reply_router = None
         self.reply_codec = None
+        self._coalesce = False
+        self._agg_max_subs = 16
+        self._agg_max_age = 5e-4
+        self._agg_max_sub_bytes = 16 << 10
+        self._sweep_raise = None   # deferred mid-batch ifunc exception (a
+        #       corr-less poisoned slot behind already-swept frames): poll
+        #       re-raises it only after processing those frames' statuses
+        if coalesce:
+            self.set_coalescing(True)
+
+    def set_coalescing(self, enabled: bool = True, *, max_subs: int = 16,
+                       max_age: float = 5e-4,
+                       max_sub_bytes: int = 16 << 10) -> None:
+        """Turn coalesced dispatch on/off.  ``max_subs`` caps sub-records
+        per aggregate (an enqueue reaching it flushes immediately, so a
+        steady burst ships in full containers); ``max_age`` (seconds)
+        bounds how long the oldest queued record may wait before a poll
+        force-flushes its queue — the adaptive knob that keeps a trickle
+        workload's latency within one poll of the singleton path.
+        ``max_sub_bytes`` bounds the payload size worth aggregating:
+        coalescing amortizes *per-message* protocol overhead, and past a
+        few KiB the wire is bandwidth-bound — bigger records bypass the
+        queue and ship as plain SLIM singletons (after flushing anything
+        queued ahead of them, so FIFO holds)."""
+        if max_subs < 1:
+            raise TransportError(f"max_subs must be >= 1, got {max_subs}")
+        self._coalesce = enabled
+        self._agg_max_subs = max_subs
+        self._agg_max_age = max_age
+        self._agg_max_sub_bytes = max_sub_bytes
 
     # -- topology -----------------------------------------------------------
 
@@ -314,6 +427,325 @@ class Dispatcher:
             peer.stats["resent"] += 1
         return True
 
+    # -- coalesced dispatch (frame v2.3 aggregates) --------------------------
+
+    @staticmethod
+    def _materialize_payload(lib, source_args, source_args_size) -> bytes:
+        """Run the library's payload codec into a scratch buffer.  A
+        coalesced record cannot write straight into a slab cell (its final
+        offset inside the aggregate is unknown until flush), so small
+        payloads pay one copy here — the per-frame header/signal/trailer
+        amortization is worth orders of magnitude more at the sizes
+        coalescing targets."""
+        if source_args_size is None:
+            try:
+                source_args_size = len(source_args)
+            except TypeError:
+                source_args_size = 0
+        max_size = int(lib.payload_get_max_size(source_args, source_args_size))
+        buf = bytearray(max_size)
+        used = lib.payload_init(memoryview(buf), max_size, source_args,
+                                source_args_size)
+        used = max_size if used in (None, 0) else int(used)
+        return bytes(memoryview(buf)[:used])
+
+    def _enqueue_sub(self, peer: Peer, handle, source_args, source_args_size,
+                     ring, corr_id, future, cont) -> bool:
+        """Queue one cache-warm invocation for aggregate packing (no ring
+        credit is claimed until flush); flushes the queue first when this
+        record would overflow the slot byte budget, and after adding when
+        the sub-record cap fills.  The queue is bounded at a full ring's
+        worth of containers (``max_subs * n_slots`` records): past that,
+        with flushes backpressured, the send reports False like any
+        credit-starved send — a producer outrunning its consumer is
+        throttled, not buffered without bound."""
+        lib = handle.lib
+        lane0 = peer.rings[ring if ring is not None else 0]
+        q0 = peer.coalesce.get(ring)
+        if (q0 is not None and len(q0.subs)
+                >= self._agg_max_subs * lane0.mailbox.n_slots):
+            self._flush_coalesce_peer(peer, ring)
+            q0 = peer.coalesce.get(ring)
+            if (q0 is not None and len(q0.subs)
+                    >= self._agg_max_subs * lane0.mailbox.n_slots):
+                peer.stats["backpressure"] += 1
+                return False
+        payload = self._materialize_payload(lib, source_args,
+                                            source_args_size)
+        # the NACK fallback rebuilds this record as a FULL singleton into
+        # the same ring — reject now rather than crash a later drain
+        self._check_full_fits(lane0, lib, len(payload),
+                              0 if cont is None else len(cont))
+        sub = _PendingSub(handle, lib.name, lib.kind, lib.code_digest,
+                          payload, corr_id, cont, future, time.monotonic())
+        if len(payload) > self._agg_max_sub_bytes:
+            # bandwidth-bound record: aggregation buys nothing — ship it
+            # as a plain SLIM singleton, after anything queued before it
+            if not self._flush_coalesce_peer(peer, ring):
+                peer.stats["backpressure"] += 1
+                return False
+            lane = self._pick_lane(peer, ring)
+            if lane is None:
+                peer.stats["backpressure"] += 1
+                return False
+            self._post_agg(peer, lane, [sub])
+            return True
+        q = peer.coalesce.get(ring)
+        if q is None:
+            q = peer.coalesce[ring] = _CoalesceQ()
+        cap = lane0.mailbox.slot_size
+        if q.subs and q.would_take(sub) > cap:
+            self._flush_coalesce_peer(peer, ring)      # slot budget filled
+            q = peer.coalesce.get(ring)
+            if q is None:
+                q = peer.coalesce[ring] = _CoalesceQ()
+        q.add(sub)
+        peer.stats["coalesced"] += 1
+        if len(q.subs) >= self._agg_max_subs or q.bytes > cap:
+            self._flush_coalesce_peer(peer, ring)      # cap (or lone record
+            #                    too big to share a container): best-effort
+            #                    flush now; on backpressure it stays queued
+        return True
+
+    def send_ifunc_many(self, peer_name: str, handle, payloads, *,
+                        ring: int | None = None, corr_ids=None,
+                        futures=None) -> int:
+        """Bulk coalescing enqueue: K invocations of one handle in one
+        call, with the payload codec, digest, and queue state hoisted out
+        of the per-record loop — the per-call interpreter overhead that
+        dominates a small-message burst is paid once per batch, not once
+        per message.  ``corr_ids``/``futures`` (parallel lists) tie
+        records to the task runtime's reply path.  Returns the number of
+        records accepted, stopping early at a record it cannot accept —
+        backpressure on a bypass record, or a record whose FULL fallback
+        would not fit a ring slot (retrying the remainder through
+        :meth:`send_ifunc` surfaces the hard error for that record).
+        Falls back to per-record :meth:`send_ifunc` when coalescing is
+        off or the peer is not aggregate-eligible."""
+        peer = self.peers[peer_name]
+        lib = handle.lib
+        if not (self._coalesce and peer.fabric.kind != "device"
+                and self._slim_ok(peer, lib)):
+            n = 0
+            for i, args in enumerate(payloads):
+                if not self.send_ifunc(
+                        peer_name, handle, args, ring=ring,
+                        corr_id=corr_ids[i] if corr_ids else 0,
+                        future=futures[i] if futures else None):
+                    break
+                n += 1
+            return n
+        lane0 = peer.rings[ring if ring is not None else 0]
+        cap = lane0.mailbox.slot_size
+        full_base = F.HEADER_LEN + len(lib.code) + F.TRAILER_LEN
+        gms, init = lib.payload_get_max_size, lib.payload_init
+        name, kind, digest = lib.name, lib.kind, lib.code_digest
+        max_subs = self._agg_max_subs
+        max_sub_bytes = self._agg_max_sub_bytes
+        now = time.monotonic()
+        payloads = payloads if isinstance(payloads, (list, tuple)) \
+            else list(payloads)
+        N = len(payloads)
+        n = i = 0
+        q = peer.coalesce.get(ring)
+
+        # -- direct slab pack: with nothing queued ahead (FIFO safe) and a
+        # -- ring slot free, each record's payload codec writes STRAIGHT
+        # -- into the slab cell at its final aggregate offset — no scratch
+        # -- buffer, no second copy, no per-record queue bookkeeping
+        if (q is None or not q.subs) and self._flush_resends(peer):
+            sub_fixed = F.AGG_SUB_OVERHEAD
+            while i < N:
+                lane = self._pick_lane(peer, ring)
+                if lane is None:
+                    break                # no credits: queue the remainder
+                slab = self.engine.slab_slot(lane.channel, lane.tail)
+                view = F.frame_payload_view(
+                    slab, 0, len(slab) - F.HEADER_LEN - F.TRAILER_LEN)
+                off = F.begin_agg(view, [name])
+                spans = [(0, off)]
+                subs: list[_PendingSub] = []
+                stop = False
+                while i < N and len(subs) < max_subs:
+                    args = payloads[i]
+                    try:
+                        sz = len(args)
+                    except TypeError:
+                        sz = 0
+                    mx = int(gms(args, sz))
+                    if mx > max_sub_bytes or full_base + mx > cap:
+                        stop = True      # bypass/oversized record: the
+                        break            # generic loop handles it
+                    if off + sub_fixed + mx + 4 > len(view):
+                        break            # container full: seal + continue
+                    pv = view[off + sub_fixed:off + sub_fixed + mx]
+                    used = init(pv, mx, args, sz)
+                    used = mx if used in (None, 0) else int(used)
+                    F.put_agg_sub(view, off, 0, kind, digest,
+                                  corr_ids[i] if corr_ids else 0, used)
+                    spans.append((off, off + sub_fixed))
+                    subs.append(_PendingSub(
+                        handle, name, kind, digest,
+                        view[off + sub_fixed:off + sub_fixed + used],
+                        corr_ids[i] if corr_ids else 0,
+                        None, futures[i] if futures else None, now))
+                    off += sub_fixed + used
+                    i += 1
+                if not subs:
+                    break
+                plen = F.finish_agg(view, off, len(subs), spans)
+                fl = F.seal_frame(slab, F.AGG_NAME, b"", F.CodeKind.PYBC,
+                                  plen, digest=F.NO_DIGEST, flags=F.FLAG_AGG)
+                futs = [s.future for s in subs if s.future is not None]
+                self._post_view(peer, lane, slab[:fl],
+                                _TxRec(F.AGG_NAME, F.NO_DIGEST, None,
+                                       slim=True, subs=subs),
+                                None, futs or None)
+                peer.stats["agg_sent"] += 1
+                peer.stats["agg_subs"] += len(subs)
+                peer.stats["coalesced"] += len(subs)
+                self.stats["agg_sent"] = self.stats.get("agg_sent", 0) + 1
+                n += len(subs)
+                if stop:
+                    break
+
+        # -- generic path: per-record through _enqueue_sub (records behind
+        # -- an existing queue, bypass-sized records, backpressure
+        # -- leftovers) — ONE implementation of the queueing policy
+        while i < N:
+            try:
+                ok = self._enqueue_sub(peer, handle, payloads[i], None,
+                                       ring,
+                                       corr_ids[i] if corr_ids else 0,
+                                       futures[i] if futures else None,
+                                       None)
+            except TransportError:
+                break   # un-retransmittable record: stop here — the caller
+                #         retries it through send_ifunc, which raises the
+                #         TransportError with this record's identity
+            if not ok:
+                break   # queue bound hit with flushes backpressured
+            i += 1
+            n += 1
+        return n
+
+    def _post_agg(self, peer: Peer, lane: RingState,
+                  subs: list[_PendingSub]) -> None:
+        """Pack queued sub-records into the lane's slab cell and post: one
+        container, one credit.  A single queued record ships as a plain
+        SLIM singleton — the aggregate wrapper is never latency overhead."""
+        if len(subs) == 1:
+            sub = subs[0]
+            lib = sub.handle.lib
+            slab = self.engine.slab_slot(lane.channel, lane.tail)
+            n = F.pack_frame_into(slab, lib.name, b"", sub.payload, lib.kind,
+                                  digest=lib.code_digest, slim=True,
+                                  corr_id=sub.corr_id, cont=sub.cont)
+            self._post_view(peer, lane, slab[:n],
+                            _TxRec(lib.name, lib.code_digest, sub.handle,
+                                   slim=True, corr_id=sub.corr_id),
+                            None, sub.future)
+            return
+        # _PendingSub speaks the AggSub attribute protocol: pack directly,
+        # no intermediate wire object per record
+        slab = self.engine.slab_slot(lane.channel, lane.tail)
+        n = F.seal_agg_frame(slab, subs)
+        futs = [s.future for s in subs if s.future is not None]
+        self._post_view(peer, lane, slab[:n],
+                        _TxRec(F.AGG_NAME, F.NO_DIGEST, None, slim=True,
+                               subs=list(subs)),
+                        None, futs or None)
+        peer.stats["agg_sent"] += 1
+        peer.stats["agg_subs"] += len(subs)
+        self.stats["agg_sent"] = self.stats.get("agg_sent", 0) + 1
+
+    @staticmethod
+    def _split_budget(subs: list[_PendingSub], cap: int,
+                      max_subs: int) -> int:
+        """Longest prefix of ``subs`` that packs into ONE container within
+        the slot byte budget and the record cap.  Always >= 1: a lone
+        record posts as a SLIM singleton, whose fit ``_check_full_fits``
+        guaranteed at enqueue."""
+        names: set = set()
+        total = _CoalesceQ.BASE
+        n = 0
+        for s in subs:
+            extra = (F.AGG_SUB_OVERHEAD + len(s.payload)
+                     + (0 if s.cont is None else len(s.cont)))
+            if s.name not in names:
+                extra += 1 + len(s.name)
+            if n and (total + extra > cap or n >= max_subs):
+                break
+            total += extra
+            names.add(s.name)
+            n += 1
+        return n
+
+    def _flush_coalesce_peer(self, peer: Peer,
+                             ring: int | None = "all") -> bool:
+        """Drain a peer's coalescing queue(s) into aggregate posts,
+        splitting into as many containers as the slot budget requires —
+        the enqueue-side byte count is only a flush *trigger*; a queue
+        that overgrew while a flush was backpressured still drains
+        correctly, one slot-sized container at a time.  False when a
+        queue could not fully drain (no ring credits) — its remaining
+        records stay queued, in order, for the next attempt."""
+        if not peer.coalesce:
+            return True
+        if not self._flush_resends(peer):
+            return False     # NACK retransmits outrank queued new traffic
+        keys = list(peer.coalesce) if ring == "all" else [ring]
+        ok = True
+        for key in keys:
+            q = peer.coalesce.get(key)
+            if q is None or not q.subs:
+                peer.coalesce.pop(key, None)
+                continue
+            subs = q.subs
+            cap = peer.rings[key if key is not None else 0].mailbox.slot_size
+            posted = 0
+            while posted < len(subs):
+                lane = self._pick_lane(peer, key)
+                if lane is None:
+                    peer.stats["backpressure"] += 1
+                    ok = False
+                    break
+                take = self._split_budget(subs[posted:], cap,
+                                          self._agg_max_subs)
+                self._post_agg(peer, lane, subs[posted:posted + take])
+                posted += take
+            if posted >= len(subs):
+                peer.coalesce.pop(key, None)
+            elif posted:
+                nq = _CoalesceQ()          # keep the unposted tail queued
+                for s in subs[posted:]:
+                    nq.add(s)
+                peer.coalesce[key] = nq
+        return ok
+
+    def flush_coalesced(self, peer_name: str | None = None,
+                        ring: int | None = "all") -> bool:
+        """Explicit coalescing-queue flush (all peers by default)."""
+        if peer_name is not None:
+            return self._flush_coalesce_peer(self.peers[peer_name], ring)
+        ok = True
+        for p in self.peers.values():
+            ok = self._flush_coalesce_peer(p, ring) and ok
+        return ok
+
+    def _age_flush(self) -> None:
+        """Flush any queue whose oldest record has waited past the age
+        bound — the poll-side half of the adaptive policy."""
+        now = time.monotonic()
+        for p in self.peers.values():
+            if not p.coalesce:
+                continue
+            for key in list(p.coalesce):
+                q = p.coalesce.get(key)
+                if (q is not None and q.subs
+                        and now - q.subs[0].enq_at >= self._agg_max_age):
+                    self._flush_coalesce_peer(p, key)
+
     def send(self, peer_name: str, msg, *, ring: int | None = None,
              on_complete=None, future=None) -> bool:
         """Post one ifunc message to a peer.  Returns False (and counts a
@@ -326,6 +758,11 @@ class Dispatcher:
         across the on-the-fly SLIM repack."""
         peer = self.peers[peer_name]
         if not self._flush_resends(peer):
+            peer.stats["backpressure"] += 1
+            return False
+        if not self._flush_coalesce_peer(peer):
+            # queued coalesced records precede this frame in program order:
+            # they must post first or per-peer FIFO breaks
             peer.stats["backpressure"] += 1
             return False
         lane = self._pick_lane(peer, ring)
@@ -382,8 +819,19 @@ class Dispatcher:
             raise TransportError(
                 "continuation frames are host-tier only (the device sweep "
                 "has no forwarding hook)")
+        if (self._coalesce and on_complete is None
+                and peer.fabric.kind != "device"
+                and self._slim_ok(peer, handle.lib)):
+            # cache-warm host send with coalescing on: queue for aggregate
+            # packing instead of claiming a ring slot per message
+            return self._enqueue_sub(peer, handle, source_args,
+                                     source_args_size, ring, corr_id,
+                                     future, cont)
         if not self._flush_resends(peer):
             peer.stats["backpressure"] += 1
+            return False
+        if not self._flush_coalesce_peer(peer):
+            peer.stats["backpressure"] += 1   # FIFO: queued records go first
             return False
         lane = self._pick_lane(peer, ring)
         if lane is None:
@@ -425,7 +873,10 @@ class Dispatcher:
 
     def flush(self) -> int:
         """Publish all in-flight puts (completes trailers -> frames become
-        consumable at the targets)."""
+        consumable at the targets).  Coalescing queues flush first — an
+        explicit flush means 'everything handed to send is on the wire'."""
+        for p in self.peers.values():
+            self._flush_coalesce_peer(p)
         return self.engine.flush()
 
     # -- target side: fairness-aware poll loop ------------------------------
@@ -442,51 +893,182 @@ class Dispatcher:
         view = self.engine.slab_slot(lane.channel, abs_slot)
         return A.ifunc_msg_to_full(A.IfuncMsg(rec.handle, view, slim=True))
 
-    def _sweep_task(self, peer: Peer, lane: RingState) -> list:
-        """Sweep one slot of a reply-enabled host lane: capture the
-        request's corr_id before execution destroys the frame, capture the
-        ifunc's output (``target_args["result"]``) — or the exception it
-        raised — after, and post the encoded reply.  An ifunc exception
-        consumes the slot (clear + head advance) instead of wedging the
-        ring; the error travels back as a FLAG_ERR reply.  A
-        fire-and-forget frame (corr_id == 0) has no reply to carry the
-        error, so after consuming the slot the exception re-raises to the
-        poll caller — same visibility as a plain dispatcher."""
+    def _sweep_task(self, peer: Peer, lane: RingState,
+                    max_slots: int = 1) -> list:
+        """Sweep up to ``max_slots`` ready slots of a reply-enabled host
+        lane: per slot, capture the request's corr_id before execution
+        destroys the frame, capture the ifunc's output
+        (``target_args["result"]``) — or the exception it raised — after,
+        and post the encoded reply.  An ifunc exception consumes the slot
+        (clear + head advance) instead of wedging the ring; the error
+        travels back as a FLAG_ERR reply.  A fire-and-forget frame
+        (corr_id == 0) has no reply to carry the error, so after consuming
+        the slot the exception re-raises to the poll caller — same
+        visibility as a plain dispatcher; mid-batch, the raise is
+        *deferred* until the statuses of the slots already swept in this
+        batch have been processed (``poll`` re-raises it after this
+        lane's completion), so a delivered aggregate ahead of a poisoned
+        slot still confirms digests and resolves its futures.  Aggregate
+        containers pass through untouched here (header corr is 0); their
+        per-sub-record replies coalesce in :meth:`_complete_agg`."""
         from repro.core.api import Status
 
         mb = lane.mailbox
-        buf = mb.slot_view(mb.head)
-        hdr = mb.peek()                      # fabric-contract header peek
-        corr = 0 if hdr is None else hdr.corr_id
-        name = "" if hdr is None else hdr.name
-        kind = F.CodeKind.PYBC if hdr is None else hdr.code_kind
-        targs = peer.target_args
-        if isinstance(targs, dict):
-            targs.pop("result", None)
-        err = None
-        try:
-            sts = mb.sweep(peer.target_ctx, targs, budget=1)
-        except Exception as e:               # raised *inside* the ifunc
-            err = e
-            F.scrub_slot(buf)
-            mb.head += 1                     # consume the poisoned slot
-            mb.consumed += 1
-            peer.stats["errors"] += 1
-            if not corr:
-                raise                        # no future to carry the error
-            sts = [Status.OK]                # delivered — it just raised
-        if corr and sts and sts[0] in (Status.OK, Status.REJECTED):
-            if err is not None:
-                value, is_err = err, True
-            elif sts[0] == Status.REJECTED:
-                value, is_err = TransportError(
-                    str(peer.target_ctx.stats.get(
-                        "last_reject", "frame rejected"))), True
-            else:
-                value = targs.get("result") if isinstance(targs, dict) else None
-                is_err = False
-            self._post_reply(peer, name, kind, corr, value, is_err)
-        return sts
+        out: list = []
+        for _ in range(max_slots):
+            buf = mb.slot_view(mb.head)
+            hdr = mb.peek()                  # fabric-contract header peek
+            corr = 0 if hdr is None else hdr.corr_id
+            name = "" if hdr is None else hdr.name
+            kind = F.CodeKind.PYBC if hdr is None else hdr.code_kind
+            targs = peer.target_args
+            if isinstance(targs, dict):
+                targs.pop("result", None)
+            err = None
+            try:
+                sts = mb.sweep(peer.target_ctx, targs, budget=1)
+            except Exception as e:           # raised *inside* the ifunc
+                err = e
+                F.scrub_slot(buf)
+                mb.head += 1                 # consume the poisoned slot
+                mb.consumed += 1
+                peer.stats["errors"] += 1
+                if not corr:
+                    if not out:
+                        raise                # no future to carry the error
+                    self._sweep_raise = e    # don't discard what the batch
+                    break                    # already swept: raise after
+                sts = [Status.OK]            # delivered — it just raised
+            if corr and sts and sts[0] in (Status.OK, Status.REJECTED):
+                if err is not None:
+                    value, is_err = err, True
+                elif sts[0] == Status.REJECTED:
+                    value, is_err = TransportError(
+                        str(peer.target_ctx.stats.get(
+                            "last_reject", "frame rejected"))), True
+                else:
+                    value = (targs.get("result")
+                             if isinstance(targs, dict) else None)
+                    is_err = False
+                self._post_reply(peer, name, kind, corr, value, is_err)
+            out.extend(sts)
+            if not sts or sts[-1] not in (Status.OK, Status.REJECTED,
+                                          Status.NACK_UNCACHED):
+                break                        # empty / in-progress: stop here
+        return out
+
+    def _complete_agg(self, peer: Peer, lane: RingState, rec: _TxRec,
+                      abs_slot: int) -> int:
+        """Source-side completion of one delivered aggregate: walk the
+        per-sub-record outcomes the target's sweep left in
+        ``Mailbox.last_agg`` — confirm cached digests, queue FULL-singleton
+        retransmits for digest misses (ONLY the missed records; executed
+        siblings are never replayed), and coalesce corr-carrying results
+        into one reply frame.  Returns the number of consumed (OK or
+        rejected) sub-records, i.e. this container's contribution to the
+        poll budget."""
+        from repro.core import api as A
+
+        Status = A.Status
+        results = lane.mailbox.last_agg.pop(
+            lane.mailbox.slot_coords(abs_slot), None)
+        if results is not None and len(results) != len(rec.subs):
+            # a harvest that does not match the container we sent (an
+            # external sweeper raced us, or the bounded stash evicted):
+            # trusting per-index outcomes would misattribute NACKs —
+            # treat as delivered-without-detail instead
+            peer.stats["agg_harvest_lost"] = (
+                peer.stats.get("agg_harvest_lost", 0) + 1)
+            results = None
+        consumed = n_ok = n_rej = n_nack = n_err = 0
+        cached_add = peer.cached.add
+        reply_subs: list[tuple] = []
+        for i, sub in enumerate(rec.subs):
+            res = (results[i] if results is not None and i < len(results)
+                   else None)
+            st = Status.OK if res is None else res.status
+            if st == Status.NACK_UNCACHED:
+                n_nack += 1
+                peer.cached.discard(sub.digest)
+                if sub.handle is not None:
+                    lib = sub.handle.lib
+                    frame = F.pack_frame(lib.name, lib.code, sub.payload,
+                                         lib.kind, digest=lib.code_digest,
+                                         corr_id=sub.corr_id, cont=sub.cont)
+                    peer.resend.append(A.IfuncMsg(sub.handle, frame,
+                                                  slim=False,
+                                                  corr_id=sub.corr_id,
+                                                  cont=sub.cont))
+                else:
+                    peer.stats["nack_lost"] = (
+                        peer.stats.get("nack_lost", 0) + 1)
+                continue
+            consumed += 1
+            if st == Status.REJECTED:
+                n_rej += 1
+                if sub.corr_id:
+                    err = (res.error if res is not None
+                           and res.error is not None
+                           else TransportError("sub-record rejected"))
+                    reply_subs.append((sub, err, True))
+                continue
+            n_ok += 1
+            cached_add(sub.digest)
+            if sub.corr_id:
+                if res is not None and res.error is not None:
+                    n_err += 1
+                    reply_subs.append((sub, res.error, True))
+                else:
+                    reply_subs.append(
+                        (sub, res.value if res is not None else None, False))
+        s = peer.stats                       # one batched stats update
+        s["delivered"] += n_ok
+        if n_rej:
+            s["rejected"] += n_rej
+        if n_err:
+            s["errors"] += n_err
+        if n_nack:
+            s["nacks"] += n_nack
+            self.stats["nacks"] += n_nack
+        if reply_subs:
+            self._post_agg_reply(peer, reply_subs)
+        return consumed
+
+    def _post_agg_reply(self, peer: Peer, reply_subs: list[tuple]) -> None:
+        """Coalesce the results of one aggregate's corr-carrying records
+        into ONE ``FLAG_AGG|FLAG_REPLY`` frame on the peer's reply ring —
+        the response direction amortizes exactly like the request one.
+        Falls back to singleton replies when there is only one result (or
+        the encoded batch outgrows a reply slot)."""
+        if peer.reply_channel is None or self.reply_codec is None:
+            self.stats["reply_dropped"] += len(reply_subs)
+            return
+        codec = self.reply_codec
+        wire = []
+        for sub, value, is_err in reply_subs:
+            try:
+                payload = (codec.encode_error(value) if is_err
+                           else codec.encode(value))
+            except Exception as e:           # unencodable result: the error
+                payload, is_err = codec.encode_error(e), True   # IS the reply
+            wire.append(F.AggSub(sub.name, sub.kind, F.NO_DIGEST,
+                                 sub.corr_id, payload, err=is_err))
+        if (len(wire) > 1
+                and F.agg_frame_len(wire) <= peer.reply_mailbox.slot_size):
+            if peer.reply_credits <= 0:
+                self._drain_replies(peer)
+            slab = self.engine.slab_slot(peer.reply_channel, peer.reply_tail)
+            n = F.seal_agg_frame(slab, wire, reply=True)
+            self.engine.post(peer.reply_channel, slab[:n], peer.reply_tail,
+                             peer=peer.name)
+            peer.reply_tail += 1
+            peer.stats["replies"] += len(wire)
+            peer.stats["agg_replies"] = peer.stats.get("agg_replies", 0) + 1
+            self.stats["replies"] += len(wire)
+            return
+        for sub, value, is_err in reply_subs:
+            self._post_reply(peer, sub.name, sub.kind, sub.corr_id, value,
+                             is_err)
 
     def _post_reply(self, peer: Peer, name: str, kind, corr: int, value,
                     is_err: bool) -> None:
@@ -546,6 +1128,28 @@ class Dispatcher:
                 continue
             if hdr is None or not F.trailer_arrived(buf, hdr):
                 break
+            if hdr.is_agg:
+                # coalesced reply: one container, many corr_ids — demux
+                # every sub-record to the router in one pass
+                try:
+                    subs = F.unpack_agg(F.frame_sections(buf, hdr)[1])
+                except F.FrameError:
+                    F.scrub_slot(buf)
+                    mb.head += 1
+                    mb.consumed += 1
+                    peer.stats["reply_rejects"] = (
+                        peer.stats.get("reply_rejects", 0) + 1)
+                    continue
+                routed = [(s.corr_id, s.name, bytes(s.payload), s.err)
+                          for s in subs]
+                F.clear_frame(buf, hdr)
+                mb.head += 1
+                mb.consumed += 1
+                for corr, name, payload, is_err in routed:
+                    self._route_reply(corr, name, payload, is_err,
+                                      decoded=False)
+                n += len(routed)
+                continue
             payload = bytes(F.frame_sections(buf, hdr)[1])
             corr, name, is_err = hdr.corr_id, hdr.name, hdr.is_err
             F.clear_frame(buf, hdr)
@@ -561,26 +1165,33 @@ class Dispatcher:
 
     def poll(self, budget: int | None = None) -> int:
         """Drain up to ``budget`` messages total across all peers' rings,
-        deficit-round-robin.  Each round visits every lane once, consuming
-        at most one message per lane per round (so no ring monopolizes the
-        poller), starting one lane past last round's first server.  A
-        device-mesh lane is the one exception: its sweep is a single
-        compiled pass and may yield several messages at once — they all
-        count against ``budget``, so the cap can overshoot by one sweep.
+        deficit-round-robin.  A *budgeted* poll visits every lane once per
+        round, consuming at most one message per lane per round (so no
+        ring monopolizes the poller), starting one lane past last round's
+        first server.  An *unbudgeted* poll (the drain path) sweeps a
+        whole ring's worth of ready slots per lane visit instead — one
+        batched pass per lane, not one poll-loop round per message.  A
+        device-mesh lane always sweeps whole-ring (its sweep is a single
+        compiled pass); an aggregate container likewise yields all its
+        sub-records at once — both can overshoot ``budget`` by one sweep.
 
         OK deliveries confirm the target's code cache for the frame's
         digest (enabling SLIM framing); NACK_UNCACHED consumes the slot,
-        un-confirms the digest, and queues a FULL retransmit.  Replies
-        (result-return frames, device sweep results with corr-ids) are
-        routed to the reply_router as a side effect; they do not count
-        against ``budget``."""
+        un-confirms the digest, and queues a FULL retransmit — for an
+        aggregate, per sub-record.  Replies (result-return frames, device
+        sweep results with corr-ids) are routed to the reply_router as a
+        side effect; they do not count against ``budget``."""
         from repro.core.api import Status
 
+        if self._coalesce:
+            self._age_flush()            # adaptive bound: no record waits
+            #                              longer than agg_max_age queued
         lanes = self._lanes()
         if not lanes:
             return 0
         done = 0
         self.stats["poll_rounds"] += 1
+        take = 1 if budget is not None else None    # None -> whole ring
         progressed = True
         while progressed and (budget is None or done < budget):
             progressed = False
@@ -592,11 +1203,13 @@ class Dispatcher:
                 track = peer.fabric.kind != "device"
                 slot = lane.mailbox.head
                 if track and peer.reply_channel is not None:
-                    sts = self._sweep_task(peer, lane)
+                    sts = self._sweep_task(
+                        peer, lane,
+                        take if take is not None else lane.mailbox.n_slots)
                     coords = res_new = None
                 elif track:
                     sts = lane.mailbox.sweep(peer.target_ctx,
-                                             peer.target_args, budget=1)
+                                             peer.target_args, budget=take)
                     coords = res_new = None
                 else:
                     res_before = len(getattr(lane.mailbox, "results", ()))
@@ -615,9 +1228,16 @@ class Dispatcher:
                         rec = lane.inflight.pop(slot, None) if track else None
                         slot += 1
                     if st == Status.OK:
+                        progressed = True
+                        if rec is not None and rec.subs is not None:
+                            # aggregate container: per-sub-record
+                            # completion (cache confirms, individual NACK
+                            # rebuilds, one coalesced reply)
+                            done += self._complete_agg(peer, lane, rec,
+                                                       slot - 1)
+                            continue
                         peer.stats["delivered"] += 1
                         done += 1
-                        progressed = True
                         if rec is not None:
                             peer.cached.add(rec.digest)
                         if not track:
@@ -632,6 +1252,17 @@ class Dispatcher:
                         peer.stats["rejected"] += 1
                         done += 1
                         progressed = True
+                        if rec is not None and rec.subs is not None:
+                            # whole container rejected (corrupt aggregate
+                            # signal): every corr-carrying record resolves
+                            # with the transport error — none executed
+                            for sub in rec.subs:
+                                if sub.corr_id:
+                                    self._route_reply(
+                                        sub.corr_id, peer.name,
+                                        TransportError(
+                                            "aggregate container rejected"),
+                                        True, decoded=True)
                         if not track and coord is not None:
                             ent = lane.corr_by_coords.pop(coord, None)
                             corr = ent[0] if ent else 0
@@ -655,6 +1286,17 @@ class Dispatcher:
                                 peer.stats.get("nack_lost", 0) + 1)
                     elif st == Status.IN_PROGRESS:
                         peer.stats["inflight_polls"] += 1
+                err = (self._sweep_raise
+                       or getattr(lane.mailbox, "pending_raise", None))
+                if err is not None:
+                    # a corr-less poisoned slot mid-batch (from either the
+                    # reply-lane _sweep_task or a plain Mailbox.sweep):
+                    # its lane's completed statuses (digest confirms,
+                    # aggregate completions, replies) are processed above
+                    # — NOW the exception gets its historical visibility
+                    self._sweep_raise = None
+                    lane.mailbox.pending_raise = None
+                    raise err
             self._rr += 1
         self.poll_replies()
         self.stats["polled"] += done
@@ -663,7 +1305,8 @@ class Dispatcher:
     def _pending_inflight(self) -> int:
         """Tracked frames still awaiting their target's sweep: host-lane
         inflight records (past-consumed records are pruned as a side
-        effect) plus device-lane corr-ids awaiting a sweep result."""
+        effect) plus device-lane corr-ids awaiting a sweep result, plus
+        coalesced records still queued for an aggregate flush."""
         n = 0
         for peer in self.peers.values():
             for lane in peer.rings:
@@ -672,6 +1315,7 @@ class Dispatcher:
                     del lane.inflight[s]
                 n += len(lane.inflight) + len(lane.corr_by_coords)
             n += len(peer.resend)
+            n += sum(len(q.subs) for q in peer.coalesce.values())
         return n
 
     def fail_inflight(self, reason: str = "liveness deadline exceeded",
@@ -695,7 +1339,20 @@ class Dispatcher:
                     if slot >= low and now - rec.sent_at < min_age:
                         continue         # young: the peer may still be alive
                     del lane.inflight[slot]
-                    if slot < low or not rec.corr_id:
+                    if slot < low:
+                        continue
+                    if rec.subs is not None:
+                        for sub in rec.subs:   # aggregate: fail per record
+                            if sub.corr_id:
+                                self._route_reply(
+                                    sub.corr_id, peer.name,
+                                    TransportError(
+                                        f"{sub.name} (coalesced) to "
+                                        f"{peer.name!r}: {reason}"),
+                                    True, decoded=True)
+                                timed_out += 1
+                        continue
+                    if not rec.corr_id:
                         continue
                     self._route_reply(
                         rec.corr_id, peer.name,
@@ -727,6 +1384,17 @@ class Dispatcher:
                                 f"{reason}"),
                             True, decoded=True)
                         timed_out += 1
+                for key in list(peer.coalesce):  # queued coalesced records
+                    q = peer.coalesce.pop(key)   # to a dead peer: drop too
+                    for sub in q.subs:
+                        if sub.corr_id:
+                            self._route_reply(
+                                sub.corr_id, peer.name,
+                                TransportError(
+                                    f"queued coalesced {sub.name} to "
+                                    f"{peer.name!r}: {reason}"),
+                                True, decoded=True)
+                            timed_out += 1
                 peer.stats["timed_out"] = (
                     peer.stats.get("timed_out", 0) + timed_out)
                 failed += timed_out
@@ -754,11 +1422,14 @@ class Dispatcher:
             rounds += 1
             for p in self.peers.values():
                 self._flush_resends(p)
+                self._flush_coalesce_peer(p)   # drain = explicit flush
             self.engine.progress()
             n = self.poll()
             total += n
             idle = (n == 0 and self.engine.outstanding() == 0
-                    and not any(p.resend for p in self.peers.values()))
+                    and not any(p.resend or any(
+                        q.subs for q in p.coalesce.values())
+                        for p in self.peers.values()))
             if deadline is None:
                 if idle or rounds >= max_rounds:
                     break

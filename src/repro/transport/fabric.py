@@ -60,6 +60,22 @@ class Mailbox:
         #: this with their native coordinates — the reply demux correlates
         #: sweep results to task corr-ids through it.
         self.last_coords: list = []
+        #: per-sub-record outcomes of consumed FLAG_AGG frames, keyed by
+        #: the slot coordinate the container occupied (host coordinates
+        #: are the monotone absolute produce index, so keys never repeat
+        #: on ring wrap): coordinate -> list[api.AggSubResult].  Filled by
+        #: :meth:`sweep` (from ``ctx.last_agg_results``), popped by the
+        #: dispatcher's aggregate completion; bounded so a sweep-only
+        #: caller that ignores aggregates cannot leak entries.
+        self.last_agg: dict = {}
+        #: an ifunc exception raised by a slot *behind* frames this sweep
+        #: already consumed: the batch stops, the consumed frames' statuses
+        #: are returned (their completions must not be lost), and the
+        #: caller (Dispatcher.poll) re-raises this after processing them.
+        #: The poisoned slot itself is NOT consumed — exactly the
+        #: historical budget=1 behavior, where the raise surfaced on the
+        #: poll that reached the slot.
+        self.pending_raise: BaseException | None = None
 
     def slot_coords(self, i: int):
         """Stable coordinate a produce-index maps to (what ``last_coords``
@@ -97,8 +113,24 @@ class Mailbox:
         out = []
         budget = self.n_slots if budget is None else budget
         for _ in range(budget):
-            st = A.poll_ifunc(ctx, self.slot_view(self.head), None, target_args)
+            try:
+                st = A.poll_ifunc(ctx, self.slot_view(self.head), None,
+                                  target_args)
+            except Exception as e:       # raised *inside* an ifunc
+                if not out:
+                    raise                # first slot: historical behavior
+                self.pending_raise = e   # mid-batch: don't discard the
+                break                    # consumed frames' statuses
             out.append(st)
+            agg = getattr(ctx, "last_agg_results", None)
+            if agg is not None:
+                # a FLAG_AGG container was consumed at this slot: stash its
+                # per-sub-record outcomes under the slot's coordinate for
+                # the dispatcher's aggregate completion pass
+                self.last_agg[self.slot_coords(self.head)] = agg
+                ctx.last_agg_results = None
+                while len(self.last_agg) > 2 * self.n_slots:
+                    self.last_agg.pop(next(iter(self.last_agg)))
             if st in (A.Status.OK, A.Status.REJECTED, A.Status.NACK_UNCACHED):
                 self.head += 1
                 self.consumed += 1

@@ -37,9 +37,11 @@ from repro.transport.fabric import Channel
 class TxHandle:
     """One posted put: completes (callback + CQ entry) at flush time.
 
-    ``future`` optionally ties the put to a task-runtime Future: the flush
-    that publishes the frame marks the future SENT (its reply clock starts
-    only once the request is actually visible at the target)."""
+    ``future`` optionally ties the put to a task-runtime Future — or, for
+    an aggregate container carrying several coalesced corr_ids, a
+    list/tuple of them: the flush that publishes the frame marks every
+    tied future SENT (its reply clock starts only once the request is
+    actually visible at the target)."""
 
     seq: int
     channel: Channel
@@ -162,9 +164,12 @@ class ProgressEngine:
                 self.completion_queue.append(
                     Completion(h.seq, h.peer, h.nbytes, h.slot))
                 if h.future is not None:
-                    h.future._mark_sent(h.seq)
+                    futs = (h.future if isinstance(h.future, (list, tuple))
+                            else (h.future,))
+                    for f in futs:
+                        f._mark_sent(h.seq)
                     self.stats["futures_sent"] = (
-                        self.stats.get("futures_sent", 0) + 1)
+                        self.stats.get("futures_sent", 0) + len(futs))
                 if h.on_complete is not None:
                     h.on_complete(h)
                     self.stats["callbacks"] += 1

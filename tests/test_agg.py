@@ -1,0 +1,383 @@
+"""Coalesced dispatch (frame v2.3 FLAG_AGG): aggregate containers, the
+adaptive flush policy, per-sub-record NACK recovery, and the coalesced
+reply path.
+
+The contracts under test:
+
+* per-peer FIFO holds across aggregate boundaries (queued records,
+  interleaved singletons, and the flushed containers execute in program
+  order);
+* an aggregate claims ONE ring slot / credit no matter how many
+  sub-records it carries;
+* a container whose trailer is still in flight is observed IN_PROGRESS —
+  never partially decoded;
+* a single sub-record whose digest was evicted NACKs individually and is
+  retransmitted as a FULL singleton without replaying its executed
+  siblings;
+* coalesced replies (FLAG_AGG | FLAG_REPLY) demux to the right futures,
+  including per-record errors inside an otherwise healthy batch.
+"""
+
+import time
+
+import pytest
+
+from repro.core import Context, Status, ifunc_msg_create, register_ifunc
+from repro.core import frame as F
+from repro.transport import (Dispatcher, LoopbackFabric, ProgressEngine,
+                             RdmaFabric)
+
+
+def _mk(lib_dir, *, n_slots=4, slot_size=16 << 10, engine=None,
+        fabric=None, max_subs=16, max_age=5e-4, target_args=None):
+    src = Context("src", lib_dir=lib_dir)
+    d = Dispatcher(src, engine or ProgressEngine(flush_threshold=64))
+    d.set_coalescing(True, max_subs=max_subs, max_age=max_age)
+    d.add_peer("p", fabric or RdmaFabric(),
+               Context("p", lib_dir=lib_dir, link_mode="remote"),
+               n_slots=n_slots, slot_size=slot_size,
+               target_args=target_args if target_args is not None
+               else {"db": []})
+    return d
+
+
+def _warm(d, name):
+    """First delivery is FULL (links + confirms the digest); everything
+    after is aggregate-eligible."""
+    h = register_ifunc(d.src_ctx, name)
+    assert d.send_ifunc("p", h, b"\x01")
+    d.drain()
+    assert h.digest in d.peers["p"].cached
+    return h
+
+
+def test_fifo_across_aggregate_boundaries(lib_dir):
+    """Records queued before a singleton send execute before it; records
+    queued after execute after — aggregate packing never reorders a
+    peer's traffic."""
+    d = _mk(lib_dir)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    base = list(peer.target_args["db"])
+    recs = [bytes([65 + i]) * (2 + i) for i in range(7)]
+    for r in recs[:3]:
+        assert d.send_ifunc("p", h, r)          # -> coalescing queue
+    # a singleton (IfuncMsg path) lands mid-stream: the queued aggregate
+    # must flush ahead of it
+    assert d.send("p", ifunc_msg_create(h, recs[3]))
+    for r in recs[4:]:
+        assert d.send_ifunc("p", h, r)
+    d.drain()
+    assert peer.target_args["db"] == base + recs
+    assert peer.stats["agg_sent"] >= 1          # batching actually happened
+    assert peer.stats["agg_subs"] >= 3
+
+
+def test_one_credit_per_aggregate(lib_dir):
+    """Six coalesced records occupy one ring slot, not six."""
+    d = _mk(lib_dir, n_slots=4)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    assert peer.credits == 4
+    for i in range(6):
+        assert d.send_ifunc("p", h, bytes([97 + i]) * 4)
+    assert peer.credits == 4                    # queued: no slot claimed yet
+    assert d.flush_coalesced("p")
+    assert peer.credits == 3                    # ONE slot for the container
+    assert peer.stats["agg_sent"] == 1 and peer.stats["agg_subs"] == 6
+    d.drain()
+    assert peer.credits == 4                    # consumed: credit returned
+    assert len(peer.target_args["db"]) == 7     # warmup + 6
+
+
+def test_singleton_queue_flushes_as_plain_slim(lib_dir):
+    """The latency floor: one queued record never pays the container
+    wrapper — it ships as an ordinary SLIM singleton."""
+    d = _mk(lib_dir)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    assert d.send_ifunc("p", h, b"solo")
+    d.drain()
+    assert peer.target_args["db"][-1] == b"solo"
+    assert peer.stats["agg_sent"] == 0          # no aggregate was built
+    assert peer.stats["slim_sent"] >= 1
+
+
+def test_age_bound_flushes_stragglers(lib_dir):
+    """A queue that never fills still drains: the poll-side age bound
+    force-flushes records older than agg_max_age."""
+    d = _mk(lib_dir, max_age=0.01)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    assert d.send_ifunc("p", h, b"straggler")
+    assert d.poll() == 0                        # young: still queued
+    assert any(q.subs for q in peer.coalesce.values())
+    time.sleep(0.02)
+    d.poll()                                    # age bound trips the flush
+    d.drain()
+    assert peer.target_args["db"][-1] == b"straggler"
+
+
+def test_partial_trailer_aggregate_in_progress(lib_dir):
+    """A container put whose trailer is withheld (in-flight window) reads
+    IN_PROGRESS: none of its sub-records execute until the flush publishes
+    the trailer, then all execute in one sweep."""
+    eng = ProgressEngine(flush_threshold=64, inflight_window="trailer")
+    d = _mk(lib_dir, engine=eng)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    peer.target_ctx.max_trailer_spins = 10      # don't spin long in tests
+    base = list(peer.target_args["db"])
+    recs = [bytes([49 + i]) * 3 for i in range(3)]
+    for r in recs:
+        assert d.send_ifunc("p", h, r)
+    assert d.flush_coalesced("p")               # posted, trailer withheld
+    assert d.poll() == 0
+    assert peer.stats["inflight_polls"] >= 1
+    assert peer.target_args["db"] == base       # nothing executed
+    eng.flush()                                 # publishes the trailer
+    assert d.poll() == 3                        # whole batch in one pass
+    assert peer.target_args["db"] == base + recs
+
+
+def test_sub_record_nack_recovers_without_replaying_siblings(lib_dir):
+    """Evicting ONE digest inside a mixed aggregate NACKs only that
+    record: its siblings execute exactly once, and the recovery is a FULL
+    singleton retransmit of the missed record alone."""
+    d = _mk(lib_dir, slot_size=32 << 10)
+    h_rle = _warm(d, "rle_insert")
+    h_cnt = _warm(d, "counter_bump")
+    peer = d.peers["p"]
+    tgt = peer.target_ctx
+    assert tgt.link_cache.evict("counter_bump", h_cnt.digest)
+    base = list(peer.target_args["db"])
+    base_count = peer.target_args["count"]      # the warmup bump
+    assert d.send_ifunc("p", h_rle, b"AAAA")
+    assert d.send_ifunc("p", h_cnt, b"x")       # digest evicted at target
+    assert d.send_ifunc("p", h_rle, b"BBBB")
+    d.drain()
+    # siblings executed exactly once, in order — never replayed
+    assert peer.target_args["db"] == base + [b"AAAA", b"BBBB"]
+    # the missed record NACKed, was rebuilt FULL, retried, and landed
+    assert peer.stats["nacks"] == 1
+    assert peer.stats["resent"] == 1
+    assert peer.target_args["count"] == base_count + 1   # once, not twice
+    assert tgt.stats["nacks"] == 1
+    assert h_cnt.digest in peer.cached          # re-confirmed by the retry
+    assert not peer.resend
+
+
+def test_corrupt_aggregate_rejected_whole(lib_dir):
+    """One flipped payload byte breaks the aggregate's single fletcher
+    signal: the whole container is rejected (slot cleared, credit
+    returned) and nothing executes half-way."""
+    d = _mk(lib_dir, fabric=LoopbackFabric())
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    base = list(peer.target_args["db"])
+    for i in range(3):
+        assert d.send_ifunc("p", h, bytes([70 + i]) * 4)
+    assert d.flush_coalesced("p")
+    d.engine.flush()
+    mb = peer.rings[0].mailbox
+    buf = mb.slot_view(mb.head)
+    hdr = F.peek_header(buf)
+    assert hdr is not None and hdr.is_agg
+    buf[hdr.payload_offset + 5] ^= 0xFF         # corrupt one sub-record byte
+    F._U32.pack_into(buf, hdr.frame_len - F.TRAILER_LEN, F.TRAILER)
+    d.drain()
+    assert peer.stats["rejected"] == 1
+    assert peer.target_args["db"] == base       # no partial execution
+    assert peer.credits == 4                    # slot cleared + returned
+
+
+def test_coalesced_reply_demux_to_right_futures(lib_dir):
+    """A batch of corr-carrying tasks comes back as ONE FLAG_AGG|FLAG_REPLY
+    frame, and every future resolves with ITS value — including an error
+    future for a poisoned record in the middle of the batch."""
+    from repro.tasks import TaskRuntime
+    from repro.tasks.wire import RemoteExecutionError
+
+    rt = TaskRuntime(Context("src", lib_dir=lib_dir),
+                     engine=ProgressEngine(flush_threshold=64),
+                     coalesce=True, agg_max_subs=16)
+    rt.add_peer("p", RdmaFabric(),
+                Context("p", lib_dir=lib_dir, link_mode="remote"),
+                n_slots=8, slot_size=16 << 10, target_args={})
+    h = register_ifunc(rt.ctx, "task_sum")
+    assert rt.submit("p", h, b"warm").result(10) == sum(b"warm")
+    payloads = [bytes([i]) * i for i in range(1, 9)]
+    payloads[3] = bytes([255, 7])               # poison record #4
+    futs = rt.submit_many("p", h, payloads)
+    peer = rt.dispatcher.peers["p"]
+    for i, fut in enumerate(futs):
+        if i == 3:
+            with pytest.raises(RemoteExecutionError, match="poisoned"):
+                fut.result(10)
+        else:
+            assert fut.result(10) == sum(payloads[i])
+    assert peer.stats["agg_sent"] >= 1          # requests coalesced
+    assert peer.stats.get("agg_replies", 0) >= 1   # ... and so did replies
+    assert rt.stats["orphan_replies"] == 0
+
+
+def test_unbudgeted_poll_sweeps_whole_ring(lib_dir):
+    """The batched-sweep half of the tentpole: with no budget, one lane
+    visit consumes every ready slot instead of one per poll round."""
+    d = _mk(lib_dir)
+    d.set_coalescing(False)                     # plain singletons
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    for i in range(4):
+        ok = d.send("p", ifunc_msg_create(h, bytes([80 + i]) * 3))
+        assert ok
+    d.engine.flush()
+    rounds_before = d.stats["poll_rounds"]
+    assert d.poll() == 4                        # one unbudgeted poll call
+    assert d.stats["poll_rounds"] == rounds_before + 1
+    # the budgeted fairness contract is unchanged: one per lane per round
+    for i in range(2):
+        assert d.send("p", ifunc_msg_create(h, bytes([90 + i]) * 3))
+    d.engine.flush()
+    assert d.poll(budget=1) == 1
+    d.drain()
+
+
+def test_overgrown_queue_splits_into_multiple_containers(lib_dir):
+    """A queue that outgrew the slot budget while its flush was
+    backpressured (no credits) still drains without loss: the flush
+    splits it into as many slot-sized containers as needed, in order."""
+    d = _mk(lib_dir, n_slots=1, slot_size=8 << 10, max_subs=64)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    base = list(peer.target_args["db"])
+    # occupy the single ring slot so every flush attempt backpressures
+    assert d.send("p", ifunc_msg_create(h, b"hog"))
+    # incompressible records: ~1.2 KiB RLE-encoded each, ~29 KiB total
+    recs = [bytes((i * 7 + j) % 251 for j in range(600)) for i in range(24)]
+    for r in recs:                       # far past the 8 KiB slot budget
+        assert d.send_ifunc("p", h, r)
+    assert sum(len(q.subs) for q in peer.coalesce.values()) > 0
+    d.drain()                            # drains hog, then splits the queue
+    assert peer.target_args["db"] == base + [b"hog"] + recs    # no loss
+    assert peer.stats["agg_sent"] >= 2   # split into several containers
+    assert not peer.coalesce or not any(
+        q.subs for q in peer.coalesce.values())
+
+
+def test_poisoned_slot_behind_aggregate_in_one_batch(lib_dir):
+    """A corr-less ifunc that raises mid-batch must not discard the
+    statuses of frames the same batched sweep already consumed: the
+    aggregate ahead of it completes (futures resolve), and the exception
+    still surfaces to the poll caller."""
+    from repro.tasks import TaskRuntime
+
+    rt = TaskRuntime(Context("src", lib_dir=lib_dir),
+                     engine=ProgressEngine(flush_threshold=64),
+                     coalesce=True)
+    rt.add_peer("p", RdmaFabric(),
+                Context("p", lib_dir=lib_dir, link_mode="remote"),
+                n_slots=8, slot_size=16 << 10, target_args={})
+    h = register_ifunc(rt.ctx, "task_sum")
+    assert rt.submit("p", h, b"warm").result(10) == sum(b"warm")
+    d = rt.dispatcher
+    # stage: one aggregate with corr-carrying records, then a corr-less
+    # poisoned frame in the NEXT slot, all published before any poll
+    futs = []
+    corrs = []
+    for payload in (b"ab", b"cde"):
+        rt._corr += 1
+        from repro.tasks.future import Future
+        fut = Future(rt, rt._corr, "p", h.name)
+        rt.futures[rt._corr] = fut
+        futs.append(fut)
+        corrs.append(rt._corr)
+    assert d.send_ifunc_many("p", h, [b"ab", b"cde"],
+                             corr_ids=corrs, futures=futs) == 2
+    d.flush_coalesced("p")
+    # corr-less poisoned frame in the NEXT slot (the IfuncMsg path posts a
+    # singleton immediately instead of joining the coalescing queue)
+    assert d.send("p", ifunc_msg_create(h, bytes([255, 9])))
+    d.engine.flush()
+    with pytest.raises(ValueError, match="poisoned"):
+        d.poll()                         # batched sweep hits both slots
+    rt.progress()                        # route the coalesced reply
+    assert futs[0].result(10) == sum(b"ab")
+    assert futs[1].result(10) == sum(b"cde")
+    assert d.peers["p"].stats["errors"] == 1
+
+
+def test_plain_lane_poisoned_slot_behind_aggregate(lib_dir):
+    """The non-reply-lane twin of the deferred-raise contract: a batched
+    Mailbox.sweep that hits a poisoned corr-less slot behind an already
+    consumed aggregate must return the aggregate's status (its NACKed
+    record gets rebuilt, its siblings' digests confirm) before the
+    exception surfaces — and the poisoned slot stays unconsumed, exactly
+    like the historical budget=1 behavior."""
+    d = _mk(lib_dir, slot_size=32 << 10)
+    h_rle = _warm(d, "rle_insert")
+    h_cnt = _warm(d, "counter_bump")
+    peer = d.peers["p"]
+    tgt = peer.target_ctx
+    base = list(peer.target_args["db"])
+    base_count = peer.target_args["count"]
+    assert tgt.link_cache.evict("counter_bump", h_cnt.digest)
+    # slot N: aggregate [rle, counter-with-evicted-digest]
+    assert d.send_ifunc("p", h_rle, b"AAAA")
+    assert d.send_ifunc("p", h_cnt, b"x")
+    assert d.flush_coalesced("p")
+    # slot N+1: corr-less poisoned singleton (task_sum 0xFF raises)
+    h_poison = register_ifunc(d.src_ctx, "task_sum")
+    assert d.send("p", ifunc_msg_create(h_poison, bytes([255, 3])))
+    d.engine.flush()
+    with pytest.raises(ValueError, match="poisoned"):
+        d.poll()                         # one batched sweep hits both
+    # the aggregate's completion was NOT discarded by the raise:
+    assert peer.target_args["db"] == base + [b"AAAA"]
+    assert peer.stats["nacks"] == 1 and len(peer.resend) == 1
+    # the poisoned slot is still there (historical wedge semantics);
+    # scrub it like an operator would, then the NACK recovery drains
+    mb = peer.rings[0].mailbox
+    F.scrub_slot(mb.slot_view(mb.head))
+    mb.head += 1
+    mb.consumed += 1
+    d.drain()
+    assert peer.target_args["count"] == base_count + 1
+    assert not peer.resend
+
+
+def test_coalescing_queue_bounded_backpressure(lib_dir):
+    """A producer outrunning a never-draining consumer is throttled, not
+    buffered without bound: once a full ring's worth of containers is
+    queued and flushes keep backpressuring, send_ifunc reports False."""
+    d = _mk(lib_dir, n_slots=2, slot_size=8 << 10, max_subs=4)
+    h = _warm(d, "rle_insert")
+    peer = d.peers["p"]
+    # occupy every ring slot so no flush can post
+    assert d.send("p", ifunc_msg_create(h, b"h1"))
+    assert d.send("p", ifunc_msg_create(h, b"h2"))
+    accepted = 0
+    for i in range(64):                  # bound = max_subs * n_slots = 8
+        if not d.send_ifunc("p", h, bytes([65 + i % 26]) * 4):
+            break
+        accepted += 1
+    assert accepted == 8                 # bounded, not unbounded
+    assert peer.stats["backpressure"] >= 1
+    d.drain()                            # consumer drains: all 10 land
+    assert len(peer.target_args["db"]) == 1 + 2 + 8   # warm + hogs + burst
+
+
+def test_aggregate_ineligible_until_cache_warm(lib_dir):
+    """An unconfirmed digest never coalesces: the first send of a handle
+    ships FULL (it must carry code), only then do sends aggregate."""
+    d = _mk(lib_dir)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    peer = d.peers["p"]
+    assert d.send_ifunc("p", h, b"first")       # cold: FULL singleton
+    assert peer.stats["coalesced"] == 0
+    assert peer.credits == 3                    # claimed a slot immediately
+    d.drain()
+    assert d.send_ifunc("p", h, b"second")      # warm: queued
+    assert peer.stats["coalesced"] == 1
+    d.drain()
+    assert peer.target_args["db"] == [b"first", b"second"]
