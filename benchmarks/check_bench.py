@@ -17,9 +17,18 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
    continuation chain beats the same stages as host-coordinated
    round-trips — forwarding results along the path must actually win;
 5. (BENCH_PR5 / any file with slim_agg rows) coalesced dispatch pays:
-   at every payload size measured, the ``slim_agg`` cell moves at least
-   2x the messages/second of the ``slim`` singleton cell (the PR's
-   acceptance floor; target is 3x+, within striking distance of AM).
+   at every payload size the policy aggregates (<= the 16 KiB sub-record
+   cap), the ``slim_agg`` cell moves at least 2x the messages/second of
+   the ``slim`` singleton cell; ABOVE the cap the ``slim_agg`` cell is a
+   *bypass-parity* probe — the policy declines to aggregate and the
+   floor is 0.5x the raw singleton loop (the dispatcher's poll/credit
+   machinery is the residual, not a scratch-buffer copy);
+6. (BENCH_PR6+) the headline standing: at every aggregated payload
+   size, ``slim_agg`` meets or beats the UCX-AM baseline rate — the
+   paper's Fig. 5 gap, closed;
+7. (BENCH_PR6+) the ``device_agg`` rows exist and the batched
+   aggregate-container sweep retires sub-records at >= 2x the rate of
+   shipping the same records as per-slot singleton word-frames.
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -28,7 +37,12 @@ from __future__ import annotations
 
 import json
 import pathlib
+import re
 import sys
+
+# payloads above this ride the aggregation *bypass* (mirrors the
+# dispatcher's default max_sub_bytes policy cap)
+AGG_POLICY_CAP = 16 << 10
 
 
 def _cells(rows: list[dict], bench: str,
@@ -40,6 +54,8 @@ def _cells(rows: list[dict], bench: str,
 
 
 def check(path: pathlib.Path) -> int:
+    m = re.search(r"PR(\d+)", path.name)
+    pr = int(m.group(1)) if m else 0
     rows = json.loads(path.read_text())
     assert isinstance(rows, list) and rows, f"{path}: empty or not a list"
     for r in rows:
@@ -76,10 +92,27 @@ def check(path: pathlib.Path) -> int:
         gap = f" (am={am:.0f})" if am else ""
         print(f"fig5_agg   {s:>7}B: slim={slim:8.0f}msg/s "
               f"slim_agg={agg:8.0f}msg/s -> {agg / slim:.2f}x{gap}")
+        if s > AGG_POLICY_CAP:
+            # bypass-parity probe: records the policy declines to
+            # aggregate must pay singleton cost, not singleton +
+            # coalescing-machinery cost.  0.5x tolerates the
+            # dispatcher's poll/credit bookkeeping (measured ~0.64x);
+            # the pre-PR6 scratch-materializing bypass sat under it.
+            assert agg >= 0.5 * slim, (
+                f"slim_agg bypass not within 2x of the raw slim loop at "
+                f"{s}B ({agg:.0f} < 0.5 * {slim:.0f}) — the oversize "
+                f"path must pack in-slab, not round-trip a scratch copy")
+            continue
         assert agg >= 2 * slim, (
             f"slim_agg not >= 2x slim msgs/s at {s}B ({agg:.0f} < "
             f"2 * {slim:.0f}) — coalescing must amortize per-message "
             f"overhead")
+        if pr >= 6 and am:
+            assert agg >= am, (
+                f"slim_agg not at least at AM parity at {s}B "
+                f"({agg:.0f} < {am:.0f}) — the vectorized container "
+                f"path must close the Fig. 5 gap, not trail the "
+                f"baseline it exists to beat")
 
     graph, gsizes = _cells(rows, "fig_graph", "migrate")
     if "PR3" in path.name:
@@ -109,6 +142,21 @@ def check(path: pathlib.Path) -> int:
             f"{n}-stage continuation chain not faster than host-coordinated "
             f"round-trips ({chain} >= {rtrip}) — forwarding along the path "
             f"must beat hailing the host between stages")
+
+    dev = {r["cell"]: r["msgs_per_s"] for r in rows
+           if r["bench"] == "device_agg" and "msgs_per_s" in r}
+    ks = sorted(int(c.split("/K")[1]) for c in dev
+                if c.startswith("agg_sweep/"))
+    if pr >= 6:
+        assert ks, "no device_agg agg_sweep/* rows"
+    for k in ks:
+        agg, slot = dev[f"agg_sweep/K{k}"], dev[f"per_slot/K{k}"]
+        print(f"device_agg   K={k:>3}: agg_sweep={agg:8.1f}sub/s "
+              f"per_slot={slot:8.1f}sub/s -> {agg / slot:.2f}x")
+        assert agg >= 2 * slot, (
+            f"device agg sweep not >= 2x the per-slot rate at K={k} "
+            f"({agg:.1f} < 2 * {slot:.1f}) — one container decode + "
+            f"batched grid must amortize the per-slot sweep dispatch")
 
     print(f"{path.name}: {len(rows)} rows OK")
     return 0

@@ -2,22 +2,31 @@
 
   fig3_latency     ifunc vs UCX-AM one-way latency across payload sizes
   fig4_throughput  ifunc vs UCX-AM message rate across payload sizes
+                   (interleaved chunks, min-of-chunks, GC parked — the
+                   fig5 timeit discipline; the old one-shot wall clock
+                   was noise-dominated)
   fig5_cached      FULL re-injection vs SLIM vs coalesced SLIM (slim_agg:
-                   K cached invocations per FLAG_AGG container) vs AM
+                   K cached invocations per FLAG_AGG container; above the
+                   16 KiB policy cap the cell measures bypass parity) vs AM
   fig_graph        task placement: migrate-code-to-data vs fetch-data-to-
                    host vs run-local across shard sizes
   fig_flow         N-stage continuation chain vs N host-coordinated
                    round-trips
   s34_link_cost    first-arrival link+verify vs hash-table-cached dispatch
   tierB_uvm        device-tier μVM injected-program execution
+  device_agg       ONE batched container sweep (agg_ring_poll + one
+                   ifunc_vm over all K sub-bodies) vs the per-slot
+                   singleton device ring at the same K=64 workload
   micro_slab       fresh-bytearray vs slab in-place frame packing
   micro_checksum   pure-Python vs vectorized fletcher32
   micro_header     naive vs precompiled-struct frame header seal/peek
+  micro_agg        naive per-record container decode vs the vectorized
+                   structured parse (unpack_agg_py vs unpack_agg)
   roofline         summary of the dry-run roofline terms (if artifacts exist)
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
 normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?,
-ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR5.json``
+ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR6.json``
 at the repo root) — prior ``BENCH_PR*.json`` files are committed history
 and are never rewritten (PR 3's harness accidentally churned
 ``BENCH_PR2.json`` on every re-run; the per-PR-file routing that caused
@@ -34,8 +43,9 @@ plain ``latency`` rows (see BENCH_PR2.json, frozen); the persisted field
 fixes that going forward.
 
 ``--quick`` (the CI smoke mode) runs the cached-fast-path suite
-(fig5_cached incl. slim_agg + the three microbenches) plus fig_graph and
-fig_flow with reduced iteration counts.
+(fig5_cached incl. slim_agg + the four microbenches) plus fig_graph and
+fig_flow with reduced iteration counts.  ``device_agg`` runs in full
+mode only: its committed rows survive a --quick merge untouched.
 """
 
 from __future__ import annotations
@@ -52,7 +62,7 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
-CURRENT = ROOT / "BENCH_PR5.json"    # the ONE file this harness writes
+CURRENT = ROOT / "BENCH_PR6.json"    # the ONE file this harness writes
 
 
 def _emit(rows: list[dict]) -> None:
@@ -104,7 +114,7 @@ def fig3_latency() -> list[dict]:
 
 
 def fig4_throughput() -> list[dict]:
-    rows = B.bench_ifunc_throughput() + B.bench_am_throughput()
+    rows = B.bench_throughput()
     by = {(r["size"], r["api"]): r["msgs_per_s"] for r in rows}
     for size in B.SIZES:
         if (size, "ifunc") in by and (size, "am") in by:
@@ -147,6 +157,10 @@ def tierB_uvm() -> list[dict]:
     return B.bench_uvm()
 
 
+def device_agg() -> list[dict]:
+    return B.bench_device_agg()
+
+
 def transport_fanout() -> list[dict]:
     return B.bench_dispatcher_fanout()
 
@@ -161,6 +175,10 @@ def micro_checksum(quick: bool = False) -> list[dict]:
 
 def micro_header(quick: bool = False) -> list[dict]:
     return B.bench_header(n_iters=800 if quick else 4000)
+
+
+def micro_agg(quick: bool = False) -> list[dict]:
+    return B.bench_agg_parse(n_iters=60 if quick else 300)
 
 
 def roofline_summary() -> list[dict]:
@@ -189,12 +207,13 @@ def main() -> None:
                   lambda: fig_flow(quick=True),
                   lambda: micro_slab(quick=True),
                   lambda: micro_checksum(quick=True),
-                  lambda: micro_header(quick=True)]
+                  lambda: micro_header(quick=True),
+                  lambda: micro_agg(quick=True)]
     else:
         suites = [fig3_latency, fig4_throughput, fig5_cached, fig_graph,
-                  fig_flow, s34_link_cost, tierB_uvm, transport_fanout,
-                  micro_slab, micro_checksum, micro_header,
-                  roofline_summary]
+                  fig_flow, s34_link_cost, tierB_uvm, device_agg,
+                  transport_fanout, micro_slab, micro_checksum,
+                  micro_header, micro_agg, roofline_summary]
     all_rows = []
     for fn in suites:
         rows = fn()

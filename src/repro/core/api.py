@@ -286,68 +286,146 @@ class _AggSubHdr:
 _AGG_PLAIN_OK = AggSubResult(Status.OK, "", b"", 0)
 
 
-def _run_agg(ctx: Context, subs, target_args) -> list[AggSubResult]:
-    """Execute every sub-record of a decoded aggregate in one pass.  The
-    container's framing was already validated (header signal + the single
-    aggregate fletcher), so the per-record loop is pure dispatch: policy
-    gate, digest-keyed cache lookup, call.  A digest miss NACKs only that
-    record; a policy violation rejects only that record; an ifunc
-    exception poisons only that record.
+def _agg_groups(batch):
+    """Group record indexes by (name_idx, kind, digest).  The
+    overwhelmingly common container — a steady burst of ONE verb — is
+    detected with three plain-column checks (one name in the table, one
+    distinct digest, one distinct kind) and costs no numpy at all; mixed
+    containers fall through to one ``np.unique`` over the structured
+    table view, with a dict fallback for the numpy-free interpreter."""
+    n = batch.n
+    if n > 1:
+        kinds = batch.kinds
+        k0 = kinds[0]
+        digests = batch.digests
+        if (len(batch.names) == 1
+                and digests == digests[:F.DIGEST_LEN] * n
+                and all(k == k0 for k in kinds)):
+            return [(0, list(range(n)))]
+    if batch.tbl is not None and n > 1:
+        _, first, inverse = np.unique(
+            batch.tbl[["name_idx", "kind", "digest"]],
+            return_index=True, return_inverse=True)
+        return [(int(f), np.nonzero(inverse == g)[0].tolist())
+                for g, f in enumerate(first)]
+    by_key: dict = {}
+    for i in range(batch.n):
+        by_key.setdefault(
+            (batch.name_idx[i], batch.kinds[i], batch.digest(i)),
+            []).append(i)
+    return [(idxs[0], idxs) for idxs in by_key.values()]
 
-    The policy gate is memoized per (name, kind) on the context — the
-    regex/kind check is pure in its inputs, so a steady stream of the
-    same verbs pays it once, not once per record."""
+
+def _run_agg(ctx: Context, batch, target_args) -> list[AggSubResult]:
+    """Execute every sub-record of a parsed aggregate (an
+    :class:`~repro.core.frame.AggBatch`) in one batched pass.  A digest
+    miss NACKs only its records; a policy violation rejects only its
+    records; an ifunc exception poisons only that record.
+
+    Dispatch overhead is batched per unique (name, kind, digest) group:
+    the policy gate (further memoized per (name, kind) on the context)
+    and the digest-keyed cache lookup run once per *group*, not once per
+    record, so a K-record burst of one verb pays them once.  Only the
+    actual ifunc calls remain per-record Python — and the dominant
+    fire-and-forget case runs in a tight inner loop whose outcome is the
+    shared OK marker (zero allocations, no per-record try/except setup:
+    a raise lands in the outer handler with ``i`` still pointing at the
+    offending record)."""
+    n = batch.n
+    out = [_AGG_PLAIN_OK] * n
+    if not n:
+        return out
     is_dict = isinstance(target_args, dict)
     policy_ok = ctx._agg_policy_ok
-    lookup = ctx.link_cache.lookup
     stats = ctx.stats
-    executed = 0
-    out = []
-    append = out.append
-    for sub in subs:
-        try:
-            gate = (sub.name, sub.kind)
-            if gate not in policy_ok:
-                ctx.policy.check_agg_sub(sub.name, sub.kind)
+    names, name_idx = batch.names, batch.name_idx
+    corrs, flags = batch.corrs, batch.flags
+    starts, plens = batch.starts, batch.plens
+    mv = batch.mv
+    # -- per-group gate + lookup --------------------------------------
+    fns: list = [None] * n
+    for i0, idxs in _agg_groups(batch):
+        name = names[name_idx[i0]]
+        kind = batch.kind(i0)
+        digest = batch.digest(i0)
+        gate = (name, kind)
+        if gate not in policy_ok:
+            try:
+                ctx.policy.check_agg_sub(name, kind)
                 policy_ok.add(gate)
-            fn = lookup(sub.name, sub.digest)
-            if fn is None:
-                # the aggregate analogue of a SLIM miss: this record is
-                # consumed, the source retransmits it as a FULL singleton
-                stats["nacks"] += 1
-                stats["last_nack"] = (sub.name, sub.digest)
-                append(AggSubResult(Status.NACK_UNCACHED, sub.name,
-                                    sub.digest, sub.corr_id))
+            except PolicyViolation as e:
+                stats["rejected"] += len(idxs)
+                stats["last_reject"] = f"{type(e).__name__}: {e}"
+                for i in idxs:
+                    out[i] = AggSubResult(Status.REJECTED, name, digest,
+                                          corrs[i], error=e)
                 continue
-            if sub.cont is not None:
+        fn = ctx.link_cache.lookup(name, digest)
+        if fn is None:
+            # the aggregate analogue of a SLIM miss: these records are
+            # consumed, the source retransmits each as a FULL singleton
+            stats["nacks"] += len(idxs)
+            stats["last_nack"] = (name, digest)
+            for i in idxs:
+                out[i] = AggSubResult(Status.NACK_UNCACHED, name, digest,
+                                      corrs[i])
+            continue
+        for i in idxs:
+            fns[i] = fn
+    # -- execution, in original record order --------------------------
+    executed = 0
+    i = 0
+    while i < n:
+        fn = fns[i]
+        if fn is None:                  # NACKed / rejected above
+            i += 1
+            continue
+        try:
+            if not flags[i] and not corrs[i]:
+                # fire-and-forget fast path: run ahead until a record
+                # needs capture / flow / a different handle
+                while True:
+                    s = starts[i]
+                    fn(mv[s:s + plens[i]], plens[i], target_args)
+                    executed += 1
+                    i += 1
+                    if (i >= n or fns[i] is not fn or flags[i]
+                            or corrs[i]):
+                        break
+                continue
+            s = starts[i]
+            pl = plens[i]
+            payload = mv[s:s + pl]
+            if flags[i] & F.AGG_SUBFLAG_CONT:
                 if ctx.flow is None:
                     raise F.FrameError(
                         "continuation sub-record on a flow-less target")
-                ctx.flow.on_flow_frame(ctx, _AggSubHdr(sub.name, sub.kind),
-                                       fn, sub.payload, sub.cont, target_args)
-                append(_AGG_PLAIN_OK)
-            elif sub.corr_id and is_dict:
+                cont = bytes(mv[s + pl:s + pl + batch.clens[i]])
+                ctx.flow.on_flow_frame(
+                    ctx, _AggSubHdr(names[name_idx[i]], batch.kind(i)),
+                    fn, payload, cont, target_args)
+            elif corrs[i] and is_dict:
                 target_args.pop("result", None)
-                fn(sub.payload, len(sub.payload), target_args)
+                fn(payload, pl, target_args)
                 executed += 1
-                append(AggSubResult(Status.OK, sub.name, sub.digest,
-                                    sub.corr_id,
-                                    value=target_args.get("result")))
+                out[i] = AggSubResult(Status.OK, names[name_idx[i]],
+                                      batch.digest(i), corrs[i],
+                                      value=target_args.get("result"))
             else:
-                # fire-and-forget: no result capture, and the outcome is
-                # the shared OK marker — zero allocations per record
-                fn(sub.payload, len(sub.payload), target_args)
+                fn(payload, pl, target_args)
                 executed += 1
-                append(_AGG_PLAIN_OK)
+            i += 1
         except (F.FrameError, PolicyViolation) as e:
             stats["rejected"] += 1
             stats["last_reject"] = f"{type(e).__name__}: {e}"
-            append(AggSubResult(Status.REJECTED, sub.name, sub.digest,
-                                sub.corr_id, error=e))
+            out[i] = AggSubResult(Status.REJECTED, names[name_idx[i]],
+                                  batch.digest(i), corrs[i], error=e)
+            i += 1
         except Exception as e:          # raised *inside* the ifunc: poisoned
-            append(AggSubResult(Status.OK, sub.name, sub.digest,
-                                sub.corr_id, error=e))
+            out[i] = AggSubResult(Status.OK, names[name_idx[i]],
+                                  batch.digest(i), corrs[i], error=e)
             stats["agg_errors"] = stats.get("agg_errors", 0) + 1
+            i += 1
     if executed:
         stats["executed"] += executed
     return out
@@ -424,8 +502,8 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
             # invocations — decode the whole batch (one signal check) and
             # run every record in a single pass; per-record outcomes land
             # in ctx.last_agg_results for the transport completion.
-            subs = F.unpack_agg(payload)         # FrameError -> REJECTED
-            results = _run_agg(ctx, subs, target_args)
+            batch = F.parse_agg(payload)         # FrameError -> REJECTED
+            results = _run_agg(ctx, batch, target_args)
             ctx.last_agg_results = results
             ctx.stats["bytes_in"] += hdr.frame_len
             if clear:

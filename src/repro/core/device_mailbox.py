@@ -45,6 +45,39 @@ def pack_word_frame(payload_f32: np.ndarray, slot_words: int, kind: int = 3,
     return s
 
 
+def pack_agg_word_frame(payloads, hashes, agg_k: int, body_words: int,
+                        slot_words: int, kind: int = 3, *,
+                        corrupt: bool = False, corrupt_sub: int | None = None,
+                        no_trailer: bool = False) -> np.ndarray:
+    """Host-side framing of one aggregate container (K sub-record batch)
+    into a slot's word array — layout in kernels/agg_poll.py.
+
+    ``corrupt`` poisons the container header check (whole-container
+    REJECT); ``corrupt_sub`` poisons one descriptor's check word (that
+    sub-record alone reads SUB_BAD, siblings unharmed)."""
+    from repro.kernels.agg_poll import AGG_MAGIC, SUB_SALT
+
+    n = len(payloads)
+    assert n == len(hashes) and n <= agg_k, "sub count exceeds bound agg_k"
+    assert slot_words >= HDR_WORDS + 2 * agg_k + agg_k * body_words + 1
+    s = np.zeros(slot_words, np.uint32)
+    s[0], s[1], s[2], s[3] = AGG_MAGIC, n, kind, 0
+    s[4] = (int(s[0]) ^ int(s[1]) ^ int(s[2]) ^ int(s[3])) ^ (1 if corrupt else 0)
+    for i, (p, h) in enumerate(zip(payloads, hashes)):
+        body = np.asarray(p, np.float32).reshape(-1).view(np.uint32)
+        assert len(body) == body_words, "sub body != bound body_words"
+        d = HDR_WORDS + 2 * i
+        s[d] = h & 0xFFFFFFFF
+        s[d + 1] = (int(s[d]) ^ SUB_SALT) & 0xFFFFFFFF
+        if corrupt_sub == i:
+            s[d + 1] ^= 1
+        off = HDR_WORDS + 2 * agg_k + i * body_words
+        s[off:off + body_words] = body
+    if not no_trailer:
+        s[slot_words - 1] = TRAILER
+    return s
+
+
 def empty_mailbox(n_shards: int, n_slots: int, slot_words: int) -> jnp.ndarray:
     return jnp.zeros((n_shards, n_slots, slot_words), jnp.uint32)
 
@@ -102,6 +135,52 @@ def make_sweep(mesh, axis: str, prog: UvmProgram, n_tiles: int, tile: int = 128,
             f, mesh,
             in_specs=(P(axis, None, None), P(axis, None, None, None)),
             out_specs=(P(axis, None), P(axis, None, None, None), P(axis, None, None)),
+        )(mailbox, ext)
+
+    return sweep
+
+
+def make_agg_sweep(mesh, axis: str, prog: UvmProgram, agg_k: int,
+                   n_tiles: int, tile: int = 128, *, bound_hash: int = 0,
+                   interpret: bool = True):
+    """Build ``sweep(mailbox, externals)`` for *aggregate-container* slots
+    -> (status, sub_status, results, cleared_mb).
+
+    The batched amortization move: ``agg_ring_poll`` validates every
+    container header + all K descriptors per slot in one kernel pass, and
+    ONE ``ifunc_vm`` launch executes all n_slots x K sub-record bodies —
+    per-visit fixed cost (kernel dispatch, shard_map, ppermute sync) is
+    paid once per ring visit instead of once per sub-record, the device
+    mirror of the host's per-put coalescing.  Non-READY sub outputs are
+    masked to zero; per-sub statuses travel back for host-matching
+    NACK/ERR completion."""
+    from repro.kernels.agg_poll import SUB_READY, agg_ring_poll
+
+    body_words = n_tiles * tile * tile
+    hdr_words = HDR_WORDS + 2 * agg_k
+    bound = jnp.asarray([bound_hash & 0xFFFFFFFF], jnp.uint32)
+
+    def sweep(mailbox, ext):
+        def f(mb, ext_l):
+            mb2 = mb[0]                      # [n_slots, slot_words]
+            n_slots = mb2.shape[0]
+            status, sub_st = agg_ring_poll(
+                mb2[:, :hdr_words], mb2[:, -1:], bound, interpret=interpret)
+            body = mb2[:, hdr_words:hdr_words + agg_k * body_words]
+            tiles = jax.lax.bitcast_convert_type(body, jnp.float32)
+            tiles = tiles.reshape(n_slots * agg_k * n_tiles, tile, tile)
+            out = ifunc_vm(prog, tiles, ext_l[0], interpret=interpret)
+            out = out.reshape(n_slots, agg_k, n_tiles, tile, tile)
+            ready = (sub_st == SUB_READY)
+            out = out * ready[:, :, None, None, None].astype(out.dtype)
+            done = (status == READY) | (status == BAD)
+            cleared = jnp.where(done[:, None], jnp.zeros_like(mb2), mb2)
+            return status[None], sub_st[None], out[None], cleared[None]
+        return shard_map(
+            f, mesh,
+            in_specs=(P(axis, None, None), P(axis, None, None, None)),
+            out_specs=(P(axis, None), P(axis, None, None),
+                       P(axis, None, None, None, None), P(axis, None, None)),
         )(mailbox, ext)
 
     return sweep

@@ -1,0 +1,105 @@
+"""Aggregate-container ring-poll kernel (Pallas/TPU): device-side
+validation of K-sub-record word-frame batches in one pass.
+
+A device aggregate container packs K sub-record bodies behind a single
+container header (the word-frame mirror of the host byte-layout in
+core/frame.py):
+
+    w0 magic        0x1F5C0DE6  (container magic, distinct from singleton)
+    w1 n_subs       occupied sub-records (<= agg_k)
+    w2 code_kind
+    w3 reserved     0
+    w4 hdr_check    = magic ^ n_subs ^ code_kind ^ reserved
+    w5..5+2K-1      K descriptor pairs [name_hash_i, sub_check_i]
+                    with sub_check_i = name_hash_i ^ SUB_SALT
+    then K x body_words sub bodies (f32 tiles bit-cast), unoccupied zero
+    w[slot_words-1] trailer 0xD0E1F2A3 (fixed tail position: the layout
+                    is static per agg_k, unlike the singleton frame)
+
+The kernel emits one *container* status per slot (EMPTY / READY /
+INFLIGHT / BAD — same lattice as ring_poll) plus K per-sub statuses:
+
+    SUB_EMPTY  0   i >= n_subs (or container not READY)
+    SUB_READY  1   descriptor self-consistent and name_hash matches the
+                   mailbox-bound program hash (bound 0 = wildcard)
+    SUB_BAD    3   descriptor check mismatch — a poisoned sub-record;
+                   siblings are unharmed (paper Fig. 2 per-message reject,
+                   here per *sub-record*)
+    SUB_NACK   4   descriptor consistent but hash does not match the bound
+                   program — the device-tier cache-miss NACK: the source
+                   rebuilds ONLY this record as a FULL singleton
+
+A corrupt container header (or missing trailer) rejects the whole
+container: per-sub fields cannot be trusted, exactly the host-side
+``parse_agg`` signal-mismatch behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ring_poll import BAD, EMPTY, HDR_WORDS, INFLIGHT, READY, TRAILER
+
+AGG_MAGIC = 0x1F5C0DE6
+SUB_SALT = 0x5A17A9E5
+
+SUB_EMPTY, SUB_READY, SUB_BAD, SUB_NACK = 0, 1, 3, 4
+
+
+def _agg_poll_kernel(bound_ref, hdr_ref, tr_ref, status_ref, sub_ref):
+    hdr = hdr_ref[0].astype(jnp.uint32)       # [HDR_WORDS + 2K]
+    k = sub_ref.shape[1]
+    magic, n_subs, kind, rsvd, chk = hdr[0], hdr[1], hdr[2], hdr[3], hdr[4]
+    hdr_ok = ((magic == jnp.uint32(AGG_MAGIC))
+              & (chk == (magic ^ n_subs ^ kind ^ rsvd)))
+    bounds_ok = n_subs <= jnp.uint32(k)
+    trailer_ok = tr_ref[0, 0].astype(jnp.uint32) == jnp.uint32(TRAILER)
+    st = jnp.where(
+        magic == jnp.uint32(0), EMPTY,
+        jnp.where(~(hdr_ok & bounds_ok), BAD,
+                  jnp.where(trailer_ok, READY, INFLIGHT)))
+    status_ref[0] = st.astype(jnp.int32)
+
+    desc = hdr[HDR_WORDS:HDR_WORDS + 2 * k].reshape(k, 2)
+    hashes, checks = desc[:, 0], desc[:, 1]
+    bound = bound_ref[0].astype(jnp.uint32)
+    occupied = (jax.lax.broadcasted_iota(jnp.int32, (k,), 0)
+                < n_subs.astype(jnp.int32))
+    ok = checks == (hashes ^ jnp.uint32(SUB_SALT))
+    match = (bound == jnp.uint32(0)) | (hashes == bound)
+    sub = jnp.where(ok & match, SUB_READY,
+                    jnp.where(ok, SUB_NACK, SUB_BAD))
+    sub = jnp.where(occupied & (st == READY), sub, SUB_EMPTY)
+    sub_ref[0] = sub.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def agg_ring_poll(hdr_tbl, trailers, bound, *, interpret=True):
+    """Validate every aggregate slot's header block in one batched pass.
+
+    hdr_tbl:  [n_slots, HDR_WORDS + 2K] uint32 (container hdr + descriptors)
+    trailers: [n_slots, 1] uint32 (the fixed tail word of each slot)
+    bound:    [1] uint32 mailbox-bound program hash (0 = wildcard)
+    -> (status [n_slots] int32, sub_status [n_slots, K] int32)
+    """
+    n, hw = hdr_tbl.shape
+    k = (hw - HDR_WORDS) // 2
+    return pl.pallas_call(
+        _agg_poll_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, hw), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n, k), jnp.int32)),
+        interpret=interpret,
+    )(bound, hdr_tbl, trailers)

@@ -32,9 +32,11 @@ class DeviceMeshMailbox(Mailbox):
 
     def __init__(self, fabric: "DeviceMeshFabric", mesh, axis: str, prog,
                  externals, n_slots: int, n_tiles: int, tile: int = 128,
-                 *, interpret: bool = True, shift: int = 0):
+                 *, interpret: bool = True, shift: int = 0,
+                 agg_k: int = 0, prog_name: str | None = None):
         super().__init__()
-        from repro.core.device_mailbox import empty_mailbox, make_deposit, make_sweep
+        from repro.core.device_mailbox import (empty_mailbox, make_agg_sweep,
+                                               make_deposit, make_sweep)
         from repro.kernels.ring_poll import HDR_WORDS
 
         self.fabric = fabric
@@ -44,22 +46,50 @@ class DeviceMeshMailbox(Mailbox):
         self.n_slots = n_slots * self.n_shards       # dispatcher-visible ring
         self.n_tiles, self.tile = n_tiles, tile
         self.body_words = n_tiles * tile * tile
-        self.slot_words = HDR_WORDS + self.body_words + 1
-        self.slot_size = self.slot_words * 4         # byte-equivalent capacity
+        self.agg_k = agg_k
+        self.prog_name = prog_name
+        self.bound_hash = (F.fletcher32(prog_name.encode()) & 0xFFFFFFFF
+                           if prog_name else 0)
+        if agg_k:
+            # aggregate container slot: hdr + K descriptor pairs + K bodies
+            # + fixed-tail trailer (kernels/agg_poll.py layout)
+            self.slot_words = (HDR_WORDS + 2 * agg_k
+                               + agg_k * self.body_words + 1)
+            # byte-frame capacity the dispatcher budgets containers against:
+            # container header/trailer + counts + per-sub (name-table entry
+            # + sub-record + body bytes) + signal
+            self.slot_size = (F.HEADER_LEN + F.TRAILER_LEN + 8
+                              + agg_k * (33 + F.AGG_SUB_OVERHEAD
+                                         + self.body_words * 4) + 4)
+        else:
+            self.slot_words = HDR_WORDS + self.body_words + 1
+            self.slot_size = self.slot_words * 4     # byte-equivalent capacity
         self.prog = prog
         self.externals = externals                   # [n_shards, n_ext, T, T]
         self._mb = empty_mailbox(self.n_shards, n_slots, self.slot_words)
         self._deposit = make_deposit(mesh, axis)
-        self._sweep = make_sweep(mesh, axis, prog, n_tiles, tile,
-                                 interpret=interpret)
+        if agg_k:
+            self._sweep = make_agg_sweep(mesh, axis, prog, agg_k, n_tiles,
+                                         tile, bound_hash=self.bound_hash,
+                                         interpret=interpret)
+        else:
+            self._sweep = make_sweep(mesh, axis, prog, n_tiles, tile,
+                                     interpret=interpret)
         self._staged: np.ndarray | None = None
         self._staged_count = 0
         self._deposited = 0                          # frames awaiting sweep
-        self.results: list[np.ndarray] = []          # READY payload outputs
+        self.results: list = []                      # READY outputs, one entry
+        #                                 per consumed container/singleton
         self.last_coords: list[tuple[int, int]] = []  # (shard, slot) per
         #                                 status of the most recent sweep —
         #                                 the reply demux correlates device
         #                                 results to task corr-ids with this
+
+    @property
+    def supports_agg(self) -> bool:
+        """Aggregate containers transcode onto this lane (the dispatcher's
+        eligibility probe)."""
+        return self.agg_k > 0
 
     # source-side staging (called by DeviceMeshChannel)
 
@@ -107,6 +137,8 @@ class DeviceMeshMailbox(Mailbox):
         if self._deposited == 0:
             self.last_coords = []
             return []
+        if self.agg_k:
+            return self._sweep_agg(target_args)
         status, out, cleared = self._sweep(self._mb, self.externals)
         status = np.asarray(status)
         out = np.asarray(out)
@@ -121,6 +153,74 @@ class DeviceMeshMailbox(Mailbox):
                     if isinstance(target_args, dict):
                         target_args.setdefault("results", []).append(
                             out[shard, slot])
+                    statuses.append(Status.OK)
+                    self.last_coords.append((shard, slot))
+                elif st == BAD:
+                    statuses.append(Status.REJECTED)
+                    self.last_coords.append((shard, slot))
+                elif st == INFLIGHT:
+                    statuses.append(Status.IN_PROGRESS)
+                    self.last_coords.append((shard, slot))
+        consumed = sum(1 for s in statuses
+                       if s in (Status.OK, Status.REJECTED))
+        self.head += consumed
+        self.consumed += consumed
+        self._deposited = max(self._deposited - consumed, 0)
+        return statuses
+
+    def _sweep_agg(self, target_args) -> list:
+        """Aggregate-container sweep: one batched kernel pass validates all
+        containers + descriptors and ONE μVM launch executes every
+        sub-record body; per-sub outcomes land in ``last_agg`` keyed by
+        coordinates so the dispatcher completes them with host-lane
+        semantics (per-sub NACK rebuild, poisoned sub = ERR with siblings
+        unharmed, corrupt container = whole REJECT)."""
+        from repro.core.api import AggSubResult, Status
+        from repro.kernels.agg_poll import SUB_BAD, SUB_EMPTY, SUB_READY
+        from repro.kernels.ring_poll import BAD, INFLIGHT, READY
+
+        status, sub_st, out, cleared = self._sweep(self._mb, self.externals)
+        status = np.asarray(status)
+        sub_st = np.asarray(sub_st)
+        out = np.asarray(out)
+        self._mb = cleared
+        statuses: list = []
+        self.last_coords = []
+        for shard in range(status.shape[0]):
+            for slot in range(status.shape[1]):
+                st = int(status[shard, slot])
+                if st == READY:
+                    subs: list[AggSubResult] = []
+                    vals: list = []
+                    for i in range(self.agg_k):
+                        s_i = int(sub_st[shard, slot, i])
+                        if s_i == SUB_EMPTY:
+                            break
+                        if s_i == SUB_READY:
+                            subs.append(AggSubResult(
+                                Status.OK, "", b"", 0,
+                                value=out[shard, slot, i]))
+                            vals.append(out[shard, slot, i])
+                        elif s_i == SUB_BAD:
+                            subs.append(AggSubResult(
+                                Status.REJECTED, "", b"", 0,
+                                error=TransportError(
+                                    "poisoned sub-record (descriptor "
+                                    "check mismatch)")))
+                        else:                        # SUB_NACK
+                            subs.append(AggSubResult(
+                                Status.NACK_UNCACHED, "", b"", 0))
+                    self.last_agg[(shard, slot)] = subs
+                    while len(self.last_agg) > 2 * self.n_slots:
+                        self.last_agg.pop(next(iter(self.last_agg)))
+                    # ONE results entry per consumed container keeps the
+                    # dispatcher's per-status result cursor aligned: a
+                    # 1-sub container (transcoded singleton) yields its
+                    # bare output, a K-sub one the per-sub list
+                    entry = vals[0] if len(subs) == 1 and vals else vals
+                    self.results.append(entry)
+                    if isinstance(target_args, dict):
+                        target_args.setdefault("results", []).extend(vals)
                     statuses.append(Status.OK)
                     self.last_coords.append((shard, slot))
                 elif st == BAD:
@@ -153,43 +253,78 @@ class DeviceMeshChannel(Channel):
         the ICI — a SLIM frame (code elided at the source) transcodes
         identically to a FULL one, and the payload is read through a
         zero-copy section view straight out of the sender's slab."""
-        from repro.core.device_mailbox import pack_word_frame
+        from repro.core.device_mailbox import pack_agg_word_frame, pack_word_frame
 
         mb = self.mailbox
         hdr = F.peek_header(data)
         if hdr is None:
             raise TransportError("device put of an empty frame")
-        if hdr.is_agg:
-            # the device tier already amortizes per-message cost its own
-            # way: staged word-frames deposit as ONE slot-masked ppermute
-            # generation and the sweep validates/executes the whole ring in
-            # one compiled pass — an aggregate container has no word-frame
-            # encoding (and nothing to gain) here, so coalescing stays
-            # host-tier (the dispatcher never marks device lanes eligible)
-            raise TransportError(
-                "aggregate frames are host-tier only: the device mesh "
-                "batches via generation deposits + whole-ring sweeps")
-        if hdr.code_kind != F.CodeKind.UVM:
-            raise TransportError(
-                f"device mesh accepts UVM frames only, got {hdr.code_kind.name}")
-        _, payload = F.frame_sections(data, hdr)
-        tiles = np.frombuffer(payload, np.float32)
-        want = mb.body_words
-        if tiles.size != want:
-            raise TransportError(
-                f"device frame payload {tiles.size} words != bound {want} "
-                f"({mb.n_tiles} x {mb.tile}x{mb.tile} tiles)")
         partial = deliver_bytes is not None and deliver_bytes < len(data)
-        name_hash = F.fletcher32(hdr.name.encode()) & 0xFFFFFFFF
-        wf = pack_word_frame(tiles, mb.slot_words, kind=int(hdr.code_kind),
-                             name_hash=name_hash, no_trailer=partial)
+        if hdr.is_agg:
+            if not getattr(mb, "supports_agg", False):
+                # without an agg_k bind the slot has no descriptor table or
+                # per-sub body lanes: containers need an agg-bound mailbox
+                raise TransportError(
+                    "aggregate frame on a device mailbox opened without "
+                    "agg_k= — bind an aggregate slot layout first")
+            _, payload = F.frame_sections(data, hdr)
+            try:
+                batch = F.parse_agg(payload)
+            except F.FrameError as e:
+                raise TransportError(f"device agg transcode: {e}") from e
+            pays: list[np.ndarray] = []
+            hashes: list[int] = []
+            for i in range(batch.n):
+                if batch.kind(i) != F.CodeKind.UVM:
+                    raise TransportError(
+                        "device mesh accepts UVM sub-records only, got "
+                        f"{batch.kind(i).name}")
+                tiles = np.frombuffer(batch.payload(i), np.float32)
+                if tiles.size != mb.body_words:
+                    raise TransportError(
+                        f"device agg sub payload {tiles.size} words != "
+                        f"bound {mb.body_words}")
+                pays.append(tiles)
+                hashes.append(F.fletcher32(batch.name(i).encode())
+                              & 0xFFFFFFFF)
+            wf = pack_agg_word_frame(pays, hashes, mb.agg_k, mb.body_words,
+                                     mb.slot_words, kind=int(hdr.code_kind),
+                                     no_trailer=partial)
+        else:
+            if hdr.code_kind != F.CodeKind.UVM:
+                raise TransportError(
+                    f"device mesh accepts UVM frames only, got "
+                    f"{hdr.code_kind.name}")
+            _, payload = F.frame_sections(data, hdr)
+            tiles = np.frombuffer(payload, np.float32)
+            want = mb.body_words
+            if tiles.size != want:
+                raise TransportError(
+                    f"device frame payload {tiles.size} words != bound "
+                    f"{want} ({mb.n_tiles} x {mb.tile}x{mb.tile} tiles)")
+            if getattr(mb, "supports_agg", False):
+                # singleton on an agg-bound lane: a degenerate 1-sub
+                # container.  The descriptor carries the *bound* hash — the
+                # non-agg device path never name-checks (the program is
+                # linked at open), and the per-sub NACK is an aggregate
+                # concept (there is a handle to rebuild from); parity kept.
+                wf = pack_agg_word_frame(
+                    [tiles], [mb.bound_hash], mb.agg_k, mb.body_words,
+                    mb.slot_words, kind=int(hdr.code_kind),
+                    no_trailer=partial)
+            else:
+                name_hash = F.fletcher32(hdr.name.encode()) & 0xFFFFFFFF
+                wf = pack_word_frame(tiles, mb.slot_words,
+                                     kind=int(hdr.code_kind),
+                                     name_hash=name_hash, no_trailer=partial)
         mb._stage(wf, slot)
         if partial:
             from repro.kernels.ring_poll import HDR_WORDS, TRAILER
 
+            word_idx = (mb.slot_words - 1 if getattr(mb, "agg_k", 0)
+                        else HDR_WORDS + mb.body_words)
             self._pending_trailers = getattr(self, "_pending_trailers", [])
-            self._pending_trailers.append(
-                (slot, HDR_WORDS + tiles.size, TRAILER))
+            self._pending_trailers.append((slot, word_idx, TRAILER))
             self.stats["partial"] += 1
         self.stats["puts"] += 1
         self.stats["bytes"] += len(data)
@@ -218,10 +353,15 @@ class DeviceMeshFabric(Fabric):
 
     def open_mailbox(self, target_ctx, n_slots: int, slot_size: int,
                      *, prog=None, externals=None, n_tiles: int = 1,
-                     tile: int = 128) -> DeviceMeshMailbox:
+                     tile: int = 128, agg_k: int = 0,
+                     prog_name: str | None = None) -> DeviceMeshMailbox:
         """``target_ctx`` is unused (the mesh is the target); ``slot_size``
         must cover the bound word-frame.  ``prog``/``externals`` bind the
-        μVM program — required (the device links at mailbox-open time)."""
+        μVM program — required (the device links at mailbox-open time).
+        ``agg_k > 0`` binds the *aggregate container* slot layout (K
+        sub-record bodies per slot, batched agg_poll sweep) and marks the
+        lane coalesce-eligible; ``prog_name`` bounds sub-record name hashes
+        (mismatches NACK per sub, None = wildcard)."""
         if prog is None:
             raise TransportError("DeviceMeshFabric.open_mailbox needs prog=")
         import jax.numpy as jnp
@@ -232,7 +372,8 @@ class DeviceMeshFabric(Fabric):
                                   jnp.float32)
         mb = DeviceMeshMailbox(self, self.mesh, self.axis, prog, externals,
                                n_slots, n_tiles, tile,
-                               interpret=self.interpret, shift=self.shift)
+                               interpret=self.interpret, shift=self.shift,
+                               agg_k=agg_k, prog_name=prog_name)
         if slot_size < mb.slot_size:
             raise TransportError(
                 f"slot_size {slot_size} < device word-frame {mb.slot_size}B")

@@ -175,6 +175,11 @@ class RingState:
     corr_by_coords: dict = field(default_factory=dict)  # device lanes:
     #                                    (shard, slot) -> (corr_id, sent_at)
     #                                    awaiting a sweep result
+    agg_by_coords: dict = field(default_factory=dict)  # device lanes:
+    #                                    (shard, slot) -> _TxRec of a staged
+    #                                    aggregate container (device frames
+    #                                    have no slot->inflight tracking; the
+    #                                    sweep reports by coordinates)
 
     @property
     def credits(self) -> int:
@@ -192,6 +197,13 @@ class Peer:
     resend: deque = field(default_factory=deque)   # FULL msgs queued post-NACK
     coalesce: dict = field(default_factory=dict)   # ring key -> _CoalesceQ of
     #                                  sub-records awaiting an aggregate flush
+    stripe: bool = False           # multi-ring striping: posts rotate across
+    #                                  rings instead of greedy credit-max
+    stripe_tx: int = 0             # next ring to post into (mod len(rings))
+    stripe_rx: int = 0             # next ring to consume from — strict TX==RX
+    #                                  rotation keeps per-peer FIFO across M
+    #                                  rings with ONE demux (the reply ring
+    #                                  and resend queue stay per-peer)
     reply_mailbox: object = None   # source-owned ring the target replies into
     reply_channel: object = None   # target->source path into it
     reply_tail: int = 0            # target-side produce index for replies
@@ -230,6 +242,9 @@ class Peer:
             for _, sent_at in r.corr_by_coords.values():
                 if oldest is None or sent_at < oldest:
                     oldest = sent_at
+            for rec in r.agg_by_coords.values():
+                if oldest is None or rec.sent_at < oldest:
+                    oldest = rec.sent_at
         return 0.0 if oldest is None else max(0.0, now - oldest)
 
     def summary(self) -> str:
@@ -297,11 +312,18 @@ class Dispatcher:
     def add_peer(self, name: str, fabric: Fabric, target_ctx, *,
                  n_slots: int = DEFAULT_N_SLOTS,
                  slot_size: int = DEFAULT_SLOT_SIZE,
-                 rings: int = 1, target_args: dict | None = None,
+                 rings: int = 1, stripe: bool = False,
+                 target_args: dict | None = None,
                  **mailbox_kw) -> Peer:
         """``mailbox_kw`` passes backend-specific binds through to
         ``fabric.open_mailbox`` (e.g. ``prog=``/``externals=`` on the
-        device-mesh fabric)."""
+        device-mesh fabric).  ``stripe=True`` (with ``rings > 1``) stripes
+        the peer's traffic round-robin across its rings under one demux:
+        sends rotate strictly (blocking on the rotation ring's credits
+        rather than skipping ahead) and the poll consumes in the same
+        rotation, so per-peer FIFO holds while a hot peer's slot budget
+        scales with M rings.  Striped peers accept ``ring=None`` sends
+        only — an explicit ring index would punch holes in the rotation."""
         if name in self.peers:
             raise TransportError(f"peer {name!r} already attached")
         peer = Peer(name, fabric, target_ctx,
@@ -311,6 +333,7 @@ class Dispatcher:
                                      **mailbox_kw)
             ch = fabric.connect(self.src_ctx, mb)
             peer.rings.append(RingState(mb, ch))
+        peer.stripe = stripe and rings > 1
         self.peers[name] = peer
         return peer
 
@@ -358,10 +381,32 @@ class Dispatcher:
                 f"SLIM frame's FULL fallback ({need}B) exceeds slot "
                 f"{lane.mailbox.slot_size}B — NACK retransmit impossible")
 
+    def _agg_eligible(self, peer: Peer) -> bool:
+        """Aggregate-container eligible: host lanes always; device lanes
+        only when their mailboxes were opened agg-bound (``agg_k=`` — the
+        put transcodes a container into a K-sub word-frame and the sweep
+        executes all K per ring visit)."""
+        if peer.fabric.kind != "device":
+            return True
+        return all(getattr(r.mailbox, "supports_agg", False)
+                   for r in peer.rings)
+
     def _pick_lane(self, peer: Peer, ring: int | None) -> RingState | None:
+        if peer.stripe and ring is None:
+            # strict rotation: block on the rotation ring's credits rather
+            # than skip ahead — a skip would reorder the peer's frames
+            lane = peer.rings[peer.stripe_tx % len(peer.rings)]
+            return lane if lane.credits > 0 else None
         lanes = peer.rings if ring is None else [peer.rings[ring]]
         lane = max(lanes, key=lambda r: r.credits)
         return lane if lane.credits > 0 else None
+
+    @staticmethod
+    def _check_ring_kw(peer: Peer, ring: int | None) -> None:
+        if ring is not None and peer.stripe:
+            raise TransportError(
+                f"striped peer {peer.name!r} accepts ring=None sends only "
+                "(an explicit ring would punch a hole in the rotation)")
 
     def _post_view(self, peer: Peer, lane: RingState, view, rec, on_complete,
                    future=None):
@@ -381,7 +426,17 @@ class Dispatcher:
             # this send stages into (the Mailbox.slot_coords contract)
             lane.corr_by_coords[lane.mailbox.slot_coords(lane.tail)] = (
                 rec.corr_id, rec.sent_at)
+        if (rec is not None and rec.subs is not None
+                and peer.fabric.kind == "device"):
+            # device aggregates complete by coordinates: the sweep leaves
+            # per-sub outcomes in Mailbox.last_agg keyed the same way
+            lane.agg_by_coords[lane.mailbox.slot_coords(lane.tail)] = rec
         lane.tail += 1
+        if peer.stripe and lane is peer.rings[
+                peer.stripe_tx % len(peer.rings)]:
+            peer.stripe_tx += 1          # rotation advances at the ONE post
+            #                              point, so every path (singleton,
+            #                              aggregate, resend) rotates
         peer.stats["sent"] += 1
         peer.stats["bytes"] += len(view)
         if rec is not None and rec.slim:
@@ -472,10 +527,13 @@ class Dispatcher:
                 return False
         payload = self._materialize_payload(lib, source_args,
                                             source_args_size)
-        # the NACK fallback rebuilds this record as a FULL singleton into
-        # the same ring — reject now rather than crash a later drain
-        self._check_full_fits(lane0, lib, len(payload),
-                              0 if cont is None else len(cont))
+        if peer.fabric.kind != "device":
+            # the NACK fallback rebuilds this record as a FULL singleton
+            # into the same ring — reject now rather than crash a later
+            # drain (device lanes size their slots for the bound word-frame
+            # plus code that never travels: the check does not apply)
+            self._check_full_fits(lane0, lib, len(payload),
+                                  0 if cont is None else len(cont))
         sub = _PendingSub(handle, lib.name, lib.kind, lib.code_digest,
                           payload, corr_id, cont, future, time.monotonic())
         if len(payload) > self._agg_max_sub_bytes:
@@ -523,8 +581,9 @@ class Dispatcher:
         Falls back to per-record :meth:`send_ifunc` when coalescing is
         off or the peer is not aggregate-eligible."""
         peer = self.peers[peer_name]
+        self._check_ring_kw(peer, ring)
         lib = handle.lib
-        if not (self._coalesce and peer.fabric.kind != "device"
+        if not (self._coalesce and self._agg_eligible(peer)
                 and self._slim_ok(peer, lib)):
             n = 0
             for i, args in enumerate(payloads):
@@ -535,12 +594,15 @@ class Dispatcher:
                     break
                 n += 1
             return n
+        is_device = peer.fabric.kind == "device"
         lane0 = peer.rings[ring if ring is not None else 0]
         cap = lane0.mailbox.slot_size
+        agg_k = getattr(lane0.mailbox, "agg_k", 0)
         full_base = F.HEADER_LEN + len(lib.code) + F.TRAILER_LEN
         gms, init = lib.payload_get_max_size, lib.payload_init
         name, kind, digest = lib.name, lib.kind, lib.code_digest
-        max_subs = self._agg_max_subs
+        max_subs = min(self._agg_max_subs, agg_k) if agg_k \
+            else self._agg_max_subs
         max_sub_bytes = self._agg_max_sub_bytes
         now = time.monotonic()
         payloads = payloads if isinstance(payloads, (list, tuple)) \
@@ -551,50 +613,99 @@ class Dispatcher:
 
         # -- direct slab pack: with nothing queued ahead (FIFO safe) and a
         # -- ring slot free, each record's payload codec writes STRAIGHT
-        # -- into the slab cell at its final aggregate offset — no scratch
-        # -- buffer, no second copy, no per-record queue bookkeeping
+        # -- into the slab cell at its final aggregate offset (the v2.4
+        # -- columnar layout streams payloads first; the fixed headers
+        # -- settle as one table write at finish) — no scratch buffer, no
+        # -- second copy, no per-record queue bookkeeping
         if (q is None or not q.subs) and self._flush_resends(peer):
             sub_fixed = F.AGG_SUB_OVERHEAD
+            kind_int = int(kind)
             while i < N:
+                # peek the head record BEFORE touching the slab: a
+                # bypass-sized head ships as a SLIM singleton and must not
+                # pay for a container prologue it will never use
+                args = payloads[i]
+                try:
+                    sz = len(args)
+                except TypeError:
+                    sz = 0
+                mx = int(gms(args, sz))
+                if not is_device and full_base + mx > cap:
+                    break                # FULL fallback cannot fit a ring
+                #                          slot: the generic loop errors
                 lane = self._pick_lane(peer, ring)
                 if lane is None:
                     break                # no credits: queue the remainder
                 slab = self.engine.slab_slot(lane.channel, lane.tail)
                 view = F.frame_payload_view(
                     slab, 0, len(slab) - F.HEADER_LEN - F.TRAILER_LEN)
+                if mx > max_sub_bytes:
+                    # bandwidth-bound record: aggregation buys nothing, so
+                    # it ships as a SLIM singleton packed straight into
+                    # the slab — the codec writes in place and seal_frame
+                    # wraps around it, no scratch materialization, no
+                    # queue round-trip (the bypass-parity contract:
+                    # records the policy declines to aggregate pay
+                    # singleton cost, not singleton + coalescing-
+                    # machinery cost)
+                    used = init(view[:mx], mx, args, sz)
+                    used = mx if used in (None, 0) else int(used)
+                    cid = corr_ids[i] if corr_ids else 0
+                    fl = F.seal_frame(slab, name, b"", kind, used,
+                                      digest=digest, slim=True,
+                                      corr_id=cid)
+                    self._post_view(peer, lane, slab[:fl],
+                                    _TxRec(name, digest, handle,
+                                           slim=True, corr_id=cid),
+                                    None,
+                                    futures[i] if futures else None)
+                    n += 1
+                    i += 1
+                    continue             # slot consumed: repick a lane
                 off = F.begin_agg(view, [name])
-                spans = [(0, off)]
+                prologue_end = off
+                hdrs: list[tuple] = []
                 subs: list[_PendingSub] = []
+                hdr_add, sub_add = hdrs.append, subs.append
+                budget = len(view) - 4
+                n_subs = 0
                 stop = False
-                while i < N and len(subs) < max_subs:
+                # the inner loop IS the per-message cost of a coalesced
+                # burst: the sub-header row is built inline (plain
+                # records: name_idx 0, no flags, no cont) and the payload
+                # view is sliced once when the codec fills its estimate
+                while i < N and n_subs < max_subs:
                     args = payloads[i]
                     try:
                         sz = len(args)
                     except TypeError:
                         sz = 0
                     mx = int(gms(args, sz))
-                    if mx > max_sub_bytes or full_base + mx > cap:
-                        stop = True      # bypass/oversized record: the
-                        break            # generic loop handles it
-                    if off + sub_fixed + mx + 4 > len(view):
+                    if not is_device and full_base + mx > cap:
+                        stop = True      # FULL fallback cannot fit a ring
+                        break            # slot: the generic loop errors
+                    if mx > max_sub_bytes:
+                        break            # seal the container first; the
+                        #                  outer peek re-sees this record
+                    n_subs += 1
+                    if off + mx + n_subs * sub_fixed > budget:
+                        n_subs -= 1
                         break            # container full: seal + continue
-                    pv = view[off + sub_fixed:off + sub_fixed + mx]
+                    pv = view[off:off + mx]
                     used = init(pv, mx, args, sz)
                     used = mx if used in (None, 0) else int(used)
-                    F.put_agg_sub(view, off, 0, kind, digest,
-                                  corr_ids[i] if corr_ids else 0, used)
-                    spans.append((off, off + sub_fixed))
-                    subs.append(_PendingSub(
+                    cid = corr_ids[i] if corr_ids else 0
+                    hdr_add((0, kind_int, 0, digest, cid, used, 0))
+                    sub_add(_PendingSub(
                         handle, name, kind, digest,
-                        view[off + sub_fixed:off + sub_fixed + used],
-                        corr_ids[i] if corr_ids else 0,
-                        None, futures[i] if futures else None, now))
-                    off += sub_fixed + used
+                        pv if used == mx else view[off:off + used],
+                        cid, None, futures[i] if futures else None, now))
+                    off += used
                     i += 1
                 if not subs:
                     break
-                plen = F.finish_agg(view, off, len(subs), spans)
-                fl = F.seal_frame(slab, F.AGG_NAME, b"", F.CodeKind.PYBC,
+                plen = F.finish_agg(view, prologue_end, off, hdrs)
+                fl = F.seal_frame(slab, F.AGG_NAME, b"", kind,
                                   plen, digest=F.NO_DIGEST, flags=F.FLAG_AGG)
                 futs = [s.future for s in subs if s.future is not None]
                 self._post_view(peer, lane, slab[:fl],
@@ -647,9 +758,11 @@ class Dispatcher:
                             None, sub.future)
             return
         # _PendingSub speaks the AggSub attribute protocol: pack directly,
-        # no intermediate wire object per record
+        # no intermediate wire object per record.  The container header
+        # carries the records' code kind: the device put rejects non-UVM
+        # frames at the header, before parsing the payload.
         slab = self.engine.slab_slot(lane.channel, lane.tail)
-        n = F.seal_agg_frame(slab, subs)
+        n = F.seal_agg_frame(slab, subs, kind=subs[0].kind)
         futs = [s.future for s in subs if s.future is not None]
         self._post_view(peer, lane, slab[:n],
                         _TxRec(F.AGG_NAME, F.NO_DIGEST, None, slim=True,
@@ -702,7 +815,11 @@ class Dispatcher:
                 peer.coalesce.pop(key, None)
                 continue
             subs = q.subs
-            cap = peer.rings[key if key is not None else 0].mailbox.slot_size
+            mb0 = peer.rings[key if key is not None else 0].mailbox
+            cap = mb0.slot_size
+            agg_k = getattr(mb0, "agg_k", 0)
+            max_subs = min(self._agg_max_subs, agg_k) if agg_k \
+                else self._agg_max_subs
             posted = 0
             while posted < len(subs):
                 lane = self._pick_lane(peer, key)
@@ -710,8 +827,7 @@ class Dispatcher:
                     peer.stats["backpressure"] += 1
                     ok = False
                     break
-                take = self._split_budget(subs[posted:], cap,
-                                          self._agg_max_subs)
+                take = self._split_budget(subs[posted:], cap, max_subs)
                 self._post_agg(peer, lane, subs[posted:posted + take])
                 posted += take
             if posted >= len(subs):
@@ -757,6 +873,7 @@ class Dispatcher:
         already sealed into the message's header rides along — including
         across the on-the-fly SLIM repack."""
         peer = self.peers[peer_name]
+        self._check_ring_kw(peer, ring)
         if not self._flush_resends(peer):
             peer.stats["backpressure"] += 1
             return False
@@ -815,15 +932,17 @@ class Dispatcher:
         ``cont`` appends a packed continuation descriptor (the flow
         layer's peer-to-peer forwarding path — host fabrics only)."""
         peer = self.peers[peer_name]
+        self._check_ring_kw(peer, ring)
         if cont is not None and peer.fabric.kind == "device":
             raise TransportError(
                 "continuation frames are host-tier only (the device sweep "
                 "has no forwarding hook)")
         if (self._coalesce and on_complete is None
-                and peer.fabric.kind != "device"
+                and self._agg_eligible(peer)
                 and self._slim_ok(peer, handle.lib)):
-            # cache-warm host send with coalescing on: queue for aggregate
-            # packing instead of claiming a ring slot per message
+            # cache-warm send with coalescing on: queue for aggregate
+            # packing instead of claiming a ring slot per message (device
+            # lanes participate when their mailboxes are agg-bound)
             return self._enqueue_sub(peer, handle, source_args,
                                      source_args_size, ring, corr_id,
                                      future, cont)
@@ -958,20 +1077,21 @@ class Dispatcher:
         return out
 
     def _complete_agg(self, peer: Peer, lane: RingState, rec: _TxRec,
-                      abs_slot: int) -> int:
+                      coords) -> int:
         """Source-side completion of one delivered aggregate: walk the
         per-sub-record outcomes the target's sweep left in
-        ``Mailbox.last_agg`` — confirm cached digests, queue FULL-singleton
-        retransmits for digest misses (ONLY the missed records; executed
-        siblings are never replayed), and coalesce corr-carrying results
-        into one reply frame.  Returns the number of consumed (OK or
+        ``Mailbox.last_agg`` under ``coords`` — confirm cached digests,
+        queue FULL-singleton retransmits for digest misses (ONLY the
+        missed records; executed siblings are never replayed), and
+        coalesce corr-carrying results into one reply frame (device
+        lanes, which have no reply ring, route each result straight to
+        the reply router instead).  Returns the number of consumed (OK or
         rejected) sub-records, i.e. this container's contribution to the
         poll budget."""
         from repro.core import api as A
 
         Status = A.Status
-        results = lane.mailbox.last_agg.pop(
-            lane.mailbox.slot_coords(abs_slot), None)
+        results = lane.mailbox.last_agg.pop(coords, None)
         if results is not None and len(results) != len(rec.subs):
             # a harvest that does not match the container we sent (an
             # external sweeper raced us, or the bounded stash evicted):
@@ -980,9 +1100,25 @@ class Dispatcher:
             peer.stats["agg_harvest_lost"] = (
                 peer.stats.get("agg_harvest_lost", 0) + 1)
             results = None
-        consumed = n_ok = n_rej = n_nack = n_err = 0
         cached_add = peer.cached.add
-        reply_subs: list[tuple] = []
+        subs = rec.subs
+        ok_marker = A._AGG_PLAIN_OK
+        if (results is not None and len(results) == len(subs)
+                and all(r is ok_marker for r in results)):
+            # the dominant outcome: every record executed clean,
+            # fire-and-forget — the target handed back the shared OK
+            # marker for all of them, so skip the per-record status
+            # ladder (corr-carrying and device records always carry real
+            # result objects and take the full walk below)
+            for sub in subs:
+                cached_add(sub.digest)
+            peer.stats["delivered"] += len(subs)
+            reply_subs = [(sub, None, False) for sub in subs if sub.corr_id]
+            if reply_subs:
+                self._post_agg_reply(peer, reply_subs)
+            return len(subs)
+        consumed = n_ok = n_rej = n_nack = n_err = 0
+        reply_subs = []
         for i, sub in enumerate(rec.subs):
             res = (results[i] if results is not None and i < len(results)
                    else None)
@@ -1031,7 +1167,16 @@ class Dispatcher:
             s["nacks"] += n_nack
             self.stats["nacks"] += n_nack
         if reply_subs:
-            self._post_agg_reply(peer, reply_subs)
+            if peer.fabric.kind == "device":
+                # no reply ring on a mesh lane: the sweep's harvested
+                # values ARE the results — route them directly, decoded
+                for sub, value, is_err in reply_subs:
+                    self._route_reply(sub.corr_id, peer.name, value,
+                                      is_err, decoded=True)
+                s["replies"] += len(reply_subs)
+                self.stats["replies"] += len(reply_subs)
+            else:
+                self._post_agg_reply(peer, reply_subs)
         return consumed
 
     def _post_agg_reply(self, peer: Peer, reply_subs: list[tuple]) -> None:
@@ -1129,10 +1274,11 @@ class Dispatcher:
             if hdr is None or not F.trailer_arrived(buf, hdr):
                 break
             if hdr.is_agg:
-                # coalesced reply: one container, many corr_ids — demux
-                # every sub-record to the router in one pass
+                # coalesced reply: one container, many corr_ids — one
+                # vectorized table parse, one demux comprehension
                 try:
-                    subs = F.unpack_agg(F.frame_sections(buf, hdr)[1])
+                    routed = F.parse_agg(
+                        F.frame_sections(buf, hdr)[1]).reply_tuples()
                 except F.FrameError:
                     F.scrub_slot(buf)
                     mb.head += 1
@@ -1140,8 +1286,6 @@ class Dispatcher:
                     peer.stats["reply_rejects"] = (
                         peer.stats.get("reply_rejects", 0) + 1)
                     continue
-                routed = [(s.corr_id, s.name, bytes(s.payload), s.err)
-                          for s in subs]
                 F.clear_frame(buf, hdr)
                 mb.head += 1
                 mb.consumed += 1
@@ -1200,16 +1344,24 @@ class Dispatcher:
                 peer, lane = lanes[(start + k) % len(lanes)]
                 if budget is not None and done >= budget:
                     break
+                if peer.stripe and lane is not peer.rings[
+                        peer.stripe_rx % len(peer.rings)]:
+                    continue         # striped peer: consume in the same
+                    #                  strict rotation the posts followed,
+                    #                  one frame per visit — per-peer FIFO
+                take_eff = 1 if peer.stripe else take
                 track = peer.fabric.kind != "device"
                 slot = lane.mailbox.head
                 if track and peer.reply_channel is not None:
                     sts = self._sweep_task(
                         peer, lane,
-                        take if take is not None else lane.mailbox.n_slots)
+                        take_eff if take_eff is not None
+                        else lane.mailbox.n_slots)
                     coords = res_new = None
                 elif track:
                     sts = lane.mailbox.sweep(peer.target_ctx,
-                                             peer.target_args, budget=take)
+                                             peer.target_args,
+                                             budget=take_eff)
                     coords = res_new = None
                 else:
                     res_before = len(getattr(lane.mailbox, "results", ()))
@@ -1225,24 +1377,34 @@ class Dispatcher:
                              and i < len(coords) else None)
                     if st in (Status.OK, Status.REJECTED,
                               Status.NACK_UNCACHED):
-                        rec = lane.inflight.pop(slot, None) if track else None
+                        if track:
+                            rec = lane.inflight.pop(slot, None)
+                        elif coord is not None:
+                            rec = lane.agg_by_coords.pop(coord, None)
                         slot += 1
                     if st == Status.OK:
                         progressed = True
+                        if not track:
+                            # one results entry lands per device container
+                            # (aggregate or singleton): consume the cursor
+                            # BEFORE branching so later statuses in this
+                            # sweep stay aligned
+                            val = res_new[ri] if ri < len(res_new) else None
+                            ri += 1
                         if rec is not None and rec.subs is not None:
                             # aggregate container: per-sub-record
                             # completion (cache confirms, individual NACK
                             # rebuilds, one coalesced reply)
-                            done += self._complete_agg(peer, lane, rec,
-                                                       slot - 1)
+                            done += self._complete_agg(
+                                peer, lane, rec,
+                                coord if not track
+                                else lane.mailbox.slot_coords(slot - 1))
                             continue
                         peer.stats["delivered"] += 1
                         done += 1
                         if rec is not None:
                             peer.cached.add(rec.digest)
                         if not track:
-                            val = res_new[ri] if ri < len(res_new) else None
-                            ri += 1
                             ent = (lane.corr_by_coords.pop(coord, None)
                                    if coord is not None else None)
                             if ent:          # device reply: the result IS it
@@ -1286,6 +1448,13 @@ class Dispatcher:
                                 peer.stats.get("nack_lost", 0) + 1)
                     elif st == Status.IN_PROGRESS:
                         peer.stats["inflight_polls"] += 1
+                if peer.stripe:
+                    # rotation advances one step per consumed slot, so the
+                    # next visit reads the ring the next post landed in
+                    peer.stripe_rx += sum(
+                        1 for st in sts
+                        if st in (Status.OK, Status.REJECTED,
+                                  Status.NACK_UNCACHED))
                 err = (self._sweep_raise
                        or getattr(lane.mailbox, "pending_raise", None))
                 if err is not None:
@@ -1313,7 +1482,8 @@ class Dispatcher:
                 low = lane.mailbox.consumed
                 for s in [s for s in lane.inflight if s < low]:
                     del lane.inflight[s]
-                n += len(lane.inflight) + len(lane.corr_by_coords)
+                n += (len(lane.inflight) + len(lane.corr_by_coords)
+                      + len(lane.agg_by_coords))
             n += len(peer.resend)
             n += sum(len(q.subs) for q in peer.coalesce.values())
         return n
@@ -1372,6 +1542,19 @@ class Dispatcher:
                             f"device lane {peer.name!r}: {reason}"),
                         True, decoded=True)
                     timed_out += 1
+                for coords, rec in list(lane.agg_by_coords.items()):
+                    if now - rec.sent_at < min_age:
+                        continue         # device aggregate: fail per record
+                    del lane.agg_by_coords[coords]
+                    for sub in rec.subs or ():
+                        if sub.corr_id:
+                            self._route_reply(
+                                sub.corr_id, peer.name,
+                                TransportError(
+                                    f"{sub.name} (device agg) to "
+                                    f"{peer.name!r}: {reason}"),
+                                True, decoded=True)
+                            timed_out += 1
             if timed_out:
                 while peer.resend:       # retransmits to a dead peer: drop
                     msg = peer.resend.popleft()

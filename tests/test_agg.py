@@ -381,3 +381,45 @@ def test_aggregate_ineligible_until_cache_warm(lib_dir):
     assert peer.stats["coalesced"] == 1
     d.drain()
     assert peer.target_args["db"] == [b"first", b"second"]
+
+
+def test_vectorized_parse_matches_naive_oracle(lib_dir):
+    """The v2.4 structured parse (numpy sub-record table) and the naive
+    per-record walk decode identical containers — records, continuations,
+    err flags, digests, corr-ids — and reject identical corruptions."""
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    subs = []
+    for i in range(23):
+        name = ["alpha", "beta", "gamma_long_name"][i % 3]
+        payload = bytes(rng.integers(0, 256, rng.integers(0, 97),
+                                     dtype=np.uint8))
+        cont = (bytes(rng.integers(0, 256, 17, dtype=np.uint8))
+                if i % 4 == 0 else None)
+        subs.append(F.AggSub(name, F.CodeKind.PYBC,
+                             bytes(rng.integers(0, 256, 16, dtype=np.uint8)),
+                             int(rng.integers(0, 1 << 48)), payload,
+                             cont=cont, err=i % 5 == 0))
+    view = bytearray(F.agg_frame_len(subs))
+    n = F.pack_agg_into(view, subs)
+    payload = bytes(view[:n])
+    fast = F.unpack_agg(payload)
+    slow = F.unpack_agg_py(payload)
+    assert len(fast) == len(slow) == len(subs)
+    for a, b, want in zip(fast, slow, subs):
+        for s in (a, b):
+            assert (s.name, s.kind, bytes(s.digest), s.corr_id,
+                    bytes(s.payload), s.err) == (
+                want.name, want.kind, want.digest, want.corr_id,
+                bytes(want.payload), want.err)
+            assert (want.cont is None and (s.cont is None or len(s.cont) == 0)
+                    or bytes(s.cont) == want.cont)
+    # any structural corruption rejects in BOTH parsers
+    for pos in (0, 3, len(payload) - 5, len(payload) - 40):
+        bad = bytearray(payload)
+        bad[pos] ^= 0xFF
+        with pytest.raises(F.FrameError):
+            F.unpack_agg(bytes(bad))
+        with pytest.raises(F.FrameError):
+            F.unpack_agg_py(bytes(bad))
