@@ -825,3 +825,188 @@ def bench_flow_chain(n_iters: int = 40, stage_counts: tuple = (3, 5),
                      "cell": f"roundtrip/{n_stages}stage", "us": dt * 1e6,
                      "msgs_per_s": 1 / dt})
     return rows
+
+
+def bench_stream(n_iters: int = 64,
+                 sizes: list | None = None) -> list[dict]:
+    """'fig_stream': streamed large payloads vs store-and-forward vs AM,
+    64 KiB -> 16 MiB — the 64 KiB-cliff killer's acceptance sweep.
+
+    Four cells per payload size, interleaved chunks, min-of-chunks, GC
+    parked (the fig5 timeit discipline).  Every cell is measured at the
+    BARE API level — endpoint puts + direct ``poll_ifunc`` — exactly like
+    fig5's slim/full cells, so the ratios price the wire protocol, not
+    any dispatcher bookkeeping:
+
+    * ``stream``  — frame v2.5 FLAG_STREAM, warm SLIM: ONE scatter-gather
+      put gathers a pre-sealed header|descriptor|chunk-glue template and
+      the payload chunks as zero-copy views (the frame trailer withheld
+      until flush — the delivery barrier), and the streaming-aware
+      ``stream_sink`` executes each chunk on arrival;
+    * ``sf``      — store-and-forward SLIM singleton: the whole payload
+      copied into one frame, one put, target waits for the full trailer
+      (what the coalescing bypass shipped before this PR);
+    * ``sf_full`` — store-and-forward with the code section re-injected
+      every message;
+    * ``am``      — the UCX-AM baseline (handler pre-registered).
+
+    The store-and-forward arms pay a frame *build* (payload copied into
+    the frame bytes) plus the put; the stream arm's put gathers straight
+    from the caller's payload — one payload traversal instead of two,
+    which is exactly the bandwidth lever the sweep exists to show.
+    check_bench holds ``stream`` to <= sf_full and <= am at every size,
+    <= sf at every size past 256 KiB, and >= 1.5x the frozen PR6 slim
+    rate at 64 KiB.
+    """
+    import gc
+
+    from repro.core import frame as F
+    from repro.transport import RdmaFabric
+
+    sizes = sizes if sizes is not None else [
+        64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20]
+    libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
+    rows = []
+    for size in sizes:
+        payload = b"x" * size
+        CHUNK = max(2, min(16, (2 << 20) // size))
+
+        # the 16 MiB cells build frames past the default policy bound
+        # (1<<24); the bench prices transport, not the bound, so both
+        # receiving contexts get a policy sized to the sweep
+        from repro.core.security import SecurityPolicy
+        pol = SecurityPolicy(max_frame_len=1 << 26)
+
+        # -- stream arm: bare api, one gathered put from a template ------
+        src = Context("src_stream", lib_dir=libdir)
+        dst2 = Context("dst_stream", lib_dir=libdir, link_mode="remote",
+                       policy=pol)
+        h = register_ifunc(src, "stream_sink")
+        lib = h.lib
+        chunk = min(size, 256 << 10)
+        n_chunks = -(-size // chunk)
+        cell = chunk + F.CHUNK_OVERHEAD
+        plen = F.stream_payload_len(n_chunks, cell)
+        slot_size = 1 << (F.HEADER_LEN + len(lib.code) + plen
+                          + F.TRAILER_LEN).bit_length()
+        fab = RdmaFabric()
+        mb = fab.open_mailbox(dst2, 2, slot_size)
+        sep = fab.connect(src, mb).ep
+        raddr, rkey = mb.slot_addr(0), mb.region.rkey
+        key0, view0 = mb.slot_coords(0), mb.slot_view(0)
+        targs_stream: dict = {}
+        pv = memoryview(payload)
+
+        def _build(slim):
+            # pre-sealed frame template: header + descriptor + chunk glue
+            # (headers/seals) staged once in a local slab; per message the
+            # payload rides as zero-copy views between the glue runs.  The
+            # last seal abuts the frame trailer seal_frame already wrote,
+            # so the tail is one merged (withheld) segment.
+            sflags = F.SFLAG_EXEC_ON_ARRIVAL if lib.streaming else 0
+            desc = F.StreamDesc(size, n_chunks, chunk, n_chunks, 0,
+                                sflags, cell, 1)
+            code = b"" if slim else lib.code
+            slab = bytearray(slot_size)
+            flen = F.seal_frame(slab, lib.name, code, lib.kind, plen,
+                                digest=lib.code_digest, slim=slim,
+                                flags=F.FLAG_STREAM)
+            F.pack_stream_desc(slab, F.HEADER_LEN + len(code), desc)
+            prefix = F.HEADER_LEN + len(code) + F.STREAM_DESC_LEN
+            segs, run_s = [], 0
+            for seq in range(n_chunks):
+                coff = prefix + desc.cell_off(seq)
+                data = pv[seq * chunk:(seq + 1) * chunk]
+                run_e = coff + F.CHUNK_HDR_LEN
+                F.pack_chunk_into(slab, coff, run_e + len(data), seq,
+                                  len(data), len(data), 0, nonce=desc.nonce)
+                segs.append((run_s, memoryview(slab)[run_s:run_e]))
+                segs.append((run_e, data))
+                run_s = run_e + len(data)
+            segs.append((run_s, memoryview(slab)[run_s:flen]))
+            return slab, segs
+
+        full_slab, full_segs = _build(False)      # FULL: link + confirm
+        sep.putv_nbi(full_segs, raddr, rkey, withhold_tail=F.TRAILER_LEN)
+        sep.flush()
+        assert poll_ifunc(dst2, view0, None, targs_stream,
+                          streams=mb.streams, stream_key=key0) == Status.OK
+        assert targs_stream["result"] == size
+        slab, segs = _build(True)                 # warm SLIM template
+        # prepared WR: validation + offset resolution amortized once; the
+        # per-post cost is what hardware charges — rkey re-check + gather
+        wr = sep.prepare_putv(segs, raddr, rkey,
+                              withhold_tail=F.TRAILER_LEN)
+
+        def _stream_chunk():
+            t0 = time.perf_counter()
+            for _ in range(CHUNK):
+                wr.post()
+                sep.flush()
+                while poll_ifunc(dst2, view0, None, targs_stream,
+                                 streams=mb.streams,
+                                 stream_key=key0) != Status.OK:
+                    pass
+            return time.perf_counter() - t0
+
+        # -- store-and-forward arms: raw api singletons ------------------
+        s2, dst, ep = _pair()
+        dst.policy = pol
+        h2 = register_ifunc(s2, "stream_sink")
+        region = dst.nic.mem_map(1 << (size + 8192).bit_length())
+        targs_sf: dict = {}
+        m = ifunc_msg_create(h2, payload)         # warm the link cache
+        ifunc_msg_send_nbix(ep, m, region.base, region.rkey)
+        assert poll_ifunc(dst, region.view(), None, targs_sf) == Status.OK
+        assert targs_sf["result"] == size
+
+        def _sf_chunk(slim):
+            t0 = time.perf_counter()
+            for _ in range(CHUNK):
+                msg = ifunc_msg_create(h2, payload, slim=slim)
+                ifunc_msg_send_nbix(ep, msg, region.base, region.rkey)
+                while poll_ifunc(dst, region.view(), None,
+                                 targs_sf) != Status.OK:
+                    pass
+            return time.perf_counter() - t0
+
+        # -- AM baseline -------------------------------------------------
+        a, b = AmContext("a"), AmContext("b")
+        got = []
+        b.register(1, lambda p, n, t: got.append(n))
+        ab = AmEndpoint(a, b)
+
+        def _am_chunk():
+            t0 = time.perf_counter()
+            for _ in range(CHUNK):
+                ab.send(1, payload)
+                while b.progress() == 0:
+                    pass
+            return time.perf_counter() - t0
+
+        _stream_chunk(), _sf_chunk(True), _sf_chunk(False), _am_chunk()
+        chunks = {"stream": [], "sf": [], "sf_full": [], "am": []}
+        gc.collect()
+        gc.disable()
+        try:
+            for _ in range(max(n_iters // CHUNK, 8)):
+                chunks["stream"].append(_stream_chunk())
+                chunks["sf"].append(_sf_chunk(True))
+                chunks["sf_full"].append(_sf_chunk(False))
+                chunks["am"].append(_am_chunk())
+        finally:
+            gc.enable()
+        assert dst2.stats["rejected"] == 0 and dst2.stats["nacks"] == 0, \
+            dst2.stats
+        # FULL warm + (warmup round + timed rounds) x CHUNK messages,
+        # every one a completed stream
+        assert dst2.stats.get("streams", 0) == \
+            1 + CHUNK * (1 + len(chunks["stream"])), dst2.stats
+        assert targs_stream["result"] == size and targs_sf["result"] == size
+        assert got and got[-1] == size
+        for cell in ("stream", "sf", "sf_full", "am"):
+            us = _best_us(chunks[cell], CHUNK)
+            rows.append({"bench": "fig_stream", "api": cell, "size": size,
+                         "cell": f"{cell}/{size}B", "us": us,
+                         "msgs_per_s": 1e6 / us})
+    return rows

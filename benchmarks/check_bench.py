@@ -28,7 +28,14 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
    paper's Fig. 5 gap, closed;
 7. (BENCH_PR6+) the ``device_agg`` rows exist and the batched
    aggregate-container sweep retires sub-records at >= 2x the rate of
-   shipping the same records as per-slot singleton word-frames.
+   shipping the same records as per-slot singleton word-frames;
+8. (BENCH_PR7+) the ``fig_stream`` rows exist and the 64 KiB cliff is
+   dead: at every size the streamed cell beats the FULL store-and-
+   forward cell AND the AM baseline; from 256 KiB up it also beats the
+   SLIM store-and-forward cell (payload copied twice vs gathered once);
+   and at 64 KiB the streamed rate is >= 1.5x the frozen PR6 SLIM
+   singleton rate (read from ``BENCH_PR6.json`` beside the checked
+   file) — streaming must beat the path it replaces, not just exist.
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -157,6 +164,49 @@ def check(path: pathlib.Path) -> int:
             f"device agg sweep not >= 2x the per-slot rate at K={k} "
             f"({agg:.1f} < 2 * {slot:.1f}) — one container decode + "
             f"batched grid must amortize the per-slot sweep dispatch")
+
+    stream, ssizes = _cells(rows, "fig_stream", "stream")
+    if pr >= 7:
+        assert ssizes, "no fig_stream stream/* rows"
+    for s in ssizes:
+        st = stream[f"stream/{s}B"]
+        sf, sff = stream[f"sf/{s}B"], stream[f"sf_full/{s}B"]
+        am = stream[f"am/{s}B"]
+        print(f"fig_stream {s:>9}B: stream={st:9.2f}us sf={sf:9.2f}us "
+              f"sf_full={sff:9.2f}us am={am:9.2f}us -> {am / st:.2f}x vs am")
+        assert st <= sff, (
+            f"stream not faster than FULL store-and-forward at {s}B "
+            f"({st} > {sff}) — pipelined chunks must beat staging the "
+            f"whole payload plus the code body")
+        assert st <= am, (
+            f"stream not at AM parity at {s}B ({st} > {am}) — the "
+            f"chunked eager path must beat the rendezvous baseline it "
+            f"exists to replace")
+        if s >= 256 << 10:
+            assert st <= sf, (
+                f"stream not faster than SLIM store-and-forward at {s}B "
+                f"({st} > {sf}) — above the reassembly knee, gathering "
+                f"payload once must beat copying it twice")
+    srate = {r["cell"]: r["msgs_per_s"] for r in rows
+             if r["bench"] == "fig_stream" and "msgs_per_s" in r}
+    if ssizes and 65536 in ssizes:
+        # the cliff gate: the streamed 64 KiB cell must move >= 1.5x the
+        # frozen PR6 SLIM singleton rate — the size where the old
+        # store-and-forward path fell off its cliff
+        base = 27680.3
+        pr6 = path.parent / "BENCH_PR6.json"
+        if pr6.exists():
+            for r in json.loads(pr6.read_text()):
+                if (r.get("bench") == "fig5_cached"
+                        and r.get("cell") == "slim/65536B"
+                        and "msgs_per_s" in r):
+                    base = r["msgs_per_s"]
+        got = srate["stream/65536B"]
+        print(f"fig_stream     64KiB: stream={got:8.0f}msg/s "
+              f"pr6_slim={base:8.0f}msg/s -> {got / base:.2f}x")
+        assert got >= 1.5 * base, (
+            f"64 KiB cliff still standing: stream rate {got:.0f} < 1.5x "
+            f"the frozen PR6 slim rate {base:.0f}")
 
     print(f"{path.name}: {len(rows)} rows OK")
     return 0

@@ -14,6 +14,10 @@
                    round-trips
   s34_link_cost    first-arrival link+verify vs hash-table-cached dispatch
   tierB_uvm        device-tier μVM injected-program execution
+  fig_stream       streamed large payloads (FLAG_STREAM, one gathered
+                   put from a pre-sealed template, exec-on-arrival) vs
+                   store-and-forward SLIM/FULL singletons vs AM,
+                   64 KiB -> 16 MiB — the 64 KiB-cliff acceptance sweep
   device_agg       ONE batched container sweep (agg_ring_poll + one
                    ifunc_vm over all K sub-bodies) vs the per-slot
                    singleton device ring at the same K=64 workload
@@ -26,7 +30,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
 normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?,
-ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR6.json``
+ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR7.json``
 at the repo root) — prior ``BENCH_PR*.json`` files are committed history
 and are never rewritten (PR 3's harness accidentally churned
 ``BENCH_PR2.json`` on every re-run; the per-PR-file routing that caused
@@ -44,8 +48,8 @@ fixes that going forward.
 
 ``--quick`` (the CI smoke mode) runs the cached-fast-path suite
 (fig5_cached incl. slim_agg + the four microbenches) plus fig_graph and
-fig_flow with reduced iteration counts.  ``device_agg`` runs in full
-mode only: its committed rows survive a --quick merge untouched.
+fig_flow with reduced iteration counts.  ``device_agg`` and ``fig_stream`` run in
+full mode only: their committed rows survive a --quick merge untouched.
 """
 
 from __future__ import annotations
@@ -62,7 +66,7 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
-CURRENT = ROOT / "BENCH_PR6.json"    # the ONE file this harness writes
+CURRENT = ROOT / "BENCH_PR7.json"    # the ONE file this harness writes
 
 
 def _emit(rows: list[dict]) -> None:
@@ -161,6 +165,10 @@ def device_agg() -> list[dict]:
     return B.bench_device_agg()
 
 
+def fig_stream() -> list[dict]:
+    return B.bench_stream()
+
+
 def transport_fanout() -> list[dict]:
     return B.bench_dispatcher_fanout()
 
@@ -210,8 +218,8 @@ def main() -> None:
                   lambda: micro_header(quick=True),
                   lambda: micro_agg(quick=True)]
     else:
-        suites = [fig3_latency, fig4_throughput, fig5_cached, fig_graph,
-                  fig_flow, s34_link_cost, tierB_uvm, device_agg,
+        suites = [fig3_latency, fig4_throughput, fig5_cached, fig_stream,
+                  fig_graph, fig_flow, s34_link_cost, tierB_uvm, device_agg,
                   transport_fanout, micro_slab, micro_checksum,
                   micro_header, micro_agg, roofline_summary]
     all_rows = []

@@ -31,6 +31,12 @@ Act 3 — error short-circuit: a chain probing a nonexistent shard dies at
 its second hop; the ERR reply carries the failing hop and the downstream
 aggregate stage never runs.
 
+Act 4 — streamed bulk ingest (frame v2.5): a 2 MiB record load streams
+host -> agg as pipelined 64 KiB chunks under an RLE wire codec; the
+aggregator's streaming-aware ifunc reduces every chunk as it lands, so
+the payload is never materialized at the target and the run-length-coded
+wire moves a fraction of the logical bytes.
+
     PYTHONPATH=src python examples/storage_pipeline.py
 """
 
@@ -161,6 +167,43 @@ except RemoteExecutionError as e:
         "downstream stage ran after the short-circuit")
     print(f"  short-circuit: chain died at {e.hop} "
           f"({e.remote_type}); aggregate stage never ran")
+
+# --- Act 4: streamed bulk ingest (frame v2.5) -------------------------------
+# the nightly bulk load: far too big for a slot-bounded singleton frame,
+# run-heavy enough that the RLE wire codec earns its keep
+host = eng.origin
+agg_node = eng.nodes["agg"]
+bulk = host.dispatcher.add_peer(
+    "agg", agg_node.fabric, agg_node.ctx, n_slots=agg_node.n_slots,
+    slot_size=agg_node.slot_size, target_args=agg_node.target_args,
+    codec="rle")
+host.dispatcher.set_streaming(True, chunk_bytes=64 << 10, window=4,
+                              threshold=64 << 10)
+h_bulk = register_ifunc(host.ctx, "host_aggregate")
+assert h_bulk.lib.streaming          # IFUNC_STREAM: reduces chunk-by-chunk
+records = np.repeat(
+    rng.integers(0, 1 << 32, size=4096, dtype=np.uint32), 512)
+payload = records.tobytes()
+wire0 = sum(r.channel.ep.stats["bytes"] for r in bulk.rings)
+assert host.dispatcher.send_ifunc("agg", h_bulk, payload)
+host.dispatcher.drain()
+eng.drain()
+got = bulk.target_args["result"]
+want = {"count": int(records.size), "sum": int(records.sum()),
+        "min": int(records.min()), "max": int(records.max())}
+assert got == want, (got, want)
+n_chunks = -(-len(payload) // (64 << 10))
+assert bulk.stats["streams"] == 1, bulk.stats
+assert bulk.stats["stream_chunks"] == n_chunks, bulk.stats
+wire = sum(r.channel.ep.stats["bytes"] for r in bulk.rings) - wire0
+assert wire < len(payload) // 2, (
+    f"RLE wire codec never engaged: {wire}B on the wire for "
+    f"{len(payload)}B of runs")
+assert not any(r.mailbox.streams for r in bulk.rings)   # rx state reclaimed
+print(f"  bulk ingest: {len(payload)}B streamed in {n_chunks} chunks, "
+      f"{wire}B on the wire ({len(payload) / wire:.1f}x rle), "
+      f"reduced on arrival at agg")
+print("STREAM_OK")
 
 # --- the invariant the whole PR is about ------------------------------------
 eng.drain()

@@ -101,6 +101,36 @@ target decodes all K records with a single numpy structured read instead
 of K ``struct.unpack_from`` calls — see the layout comment above
 ``parse_agg``.  Byte cost per record is unchanged (36 fixed bytes); only
 the placement moved.
+
+v2.5 additions (streamed large payloads, the 64KiB-cliff killer):
+
+* ``FLAG_STREAM`` marks a frame whose payload section does NOT hold the
+  payload.  It holds a 28-byte *stream descriptor* (total length, chunk
+  geometry, in-flight window, negotiated codec, exec-on-arrival flag,
+  per-stream nonce)
+  followed by ``window`` fixed-size *chunk cells*.  The frame — header,
+  optional code section, descriptor, empty cells, trailer — is put first
+  and is small; the bulk payload then arrives as N pipelined chunk puts
+  into the cells (chunk ``i`` lands in cell ``i % window``), each sealed
+  by its own per-chunk barrier, so the target starts consuming while
+  later chunks are still in flight.
+* Each chunk cell carries a 20-byte chunk header — a sequence-unique tag,
+  encoded/raw lengths, the codec actually used (a chunk that doesn't
+  shrink ships raw regardless of the negotiated codec), and a fletcher32
+  over the header itself — then the chunk data, then a 4-byte *seal*
+  echoing the header fletcher.  The seal is the chunk's trailer analogue:
+  withheld until the chunk's puts flush, its arrival (matching a
+  header whose fletcher verifies and whose tag matches the expected
+  sequence number) means the whole chunk is delivered.  Data integrity
+  rides the ordered one-sided put + seal barrier, exactly like the frame
+  trailer — the fletcher authenticates chunk *structure*, not data.
+* A streaming-aware ifunc (``IFUNC_STREAM`` in its library) executes
+  per chunk as chunks land (``target_args["stream"]`` carries the chunk's
+  position); other ifuncs get the payload assembled to completion first.
+  The stream occupies ONE ring slot for its whole life: ``Mailbox.sweep``
+  returns IN_PROGRESS on the slot until the final chunk is consumed.
+* ``FLAG_STREAM`` composes with FLAG_SLIM (cached dispatch — the usual
+  case) but excludes REPLY/AGG/CONT: streams are request singletons.
 """
 
 from __future__ import annotations
@@ -109,6 +139,7 @@ import hashlib
 import struct
 from dataclasses import dataclass
 from enum import IntEnum
+from operator import mul as _mul
 
 try:  # vectorized checksum; core still works on a numpy-free interpreter
     import numpy as _np
@@ -127,6 +158,7 @@ FLAG_REPLY = 0x2
 FLAG_ERR = 0x4
 FLAG_CONT = 0x8
 FLAG_AGG = 0x10
+FLAG_STREAM = 0x20
 SIGNAL_OFF = 96             # header signal location; fletcher32 over [0, 96)
 NO_DIGEST = b"\0" * DIGEST_LEN
 AGG_NAME = "__agg__"        # header name of every aggregate container frame
@@ -144,17 +176,24 @@ assert struct.calcsize(_HEADER_FMT) == SIGNAL_OFF
 _HEADER_STRUCT = struct.Struct(_HEADER_FMT)
 _U32 = struct.Struct("<I")
 _HDR_WORDS = struct.Struct(f"<{SIGNAL_OFF // 2}H")
+_HDR_M = SIGNAL_OFF // 2                     # 48 header words
+_HDR_WEIGHTS = tuple(range(_HDR_M, 0, -1))   # cumsum weight of word i
 
 
 def _header_fletcher(buf) -> int:
-    """fletcher32 over the 96 signed header bytes, word-at-a-time via one
-    precompiled unpack — identical to ``fletcher32_py(buf[:SIGNAL_OFF])``
-    (the header is even-length, so no odd-tail term), without slicing a
-    memoryview or touching the buffer byte by byte."""
-    a = b = 0xFFFF
-    for w in _HDR_WORDS.unpack_from(buf, 0):
-        a = (a + w) % 0xFFFF
-        b = (b + a) % 0xFFFF
+    """fletcher32 over the 96 signed header bytes via the closed form
+    (see :func:`fletcher32`): for words w_1..w_m starting from
+    a = b = 0xFFFF, ``a = 0xFFFF + sum(w)`` and ``b = 0xFFFF*(m+1) +
+    sum_i (m-i+1)*w_i`` — one precompiled unpack, one sum, one weighted
+    sum, two mods.  Both accumulators stay well under 2**30 for m = 48,
+    so no intermediate reduction is needed.  Identical to
+    ``fletcher32_py(buf[:SIGNAL_OFF])`` (the header is even-length, so
+    no odd-tail term); this runs per frame on BOTH the seal and the peek
+    paths, which is why it gets its own unrolled form."""
+    ws = _HDR_WORDS.unpack_from(buf, 0)
+    t = sum(map(_mul, ws, _HDR_WEIGHTS))
+    a = (0xFFFF + sum(ws)) % 0xFFFF
+    b = (0xFFFF * (_HDR_M + 1) + t) % 0xFFFF
     return (b << 16) | a
 
 
@@ -185,7 +224,9 @@ def fletcher32_py(data) -> int:
 
 
 _VEC_MIN = 128          # below this the numpy call overhead beats the loop
-_VEC_MAX = 1 << 24      # above this the cumsum term could overflow uint64
+_VEC_BLOCK = 1 << 19    # words per block: bounds the cumsum intermediate at
+#                         ~4MiB regardless of input size (a 16MiB payload
+#                         used to materialize an 8M-element int64 cumsum)
 
 
 def fletcher32(data) -> int:
@@ -201,26 +242,35 @@ def fletcher32(data) -> int:
     byte contributes one extra word with a zero high byte, matching the
     reference loop exactly.
 
-    The frame protocol's own header signal covers 80 bytes and stays on
+    The input is processed in fixed ``_VEC_BLOCK``-word blocks with carried
+    (s, t) state, so peak memory is O(block) not O(input): for a block of
+    m_k words with sum S_k and cumsum-total T_k, the whole-input cumsum
+    total grows by ``m_k * s_prev + T_k`` (every word in the block sits on
+    top of the running prefix sum ``s_prev``).  Both carries reduce mod
+    0xFFFF at block boundaries, so the int64 block accumulators never
+    overflow (t <= m^2 * 0xFFFF < 2^63 for m <= 8.4e6 >> _VEC_BLOCK).
+
+    The frame protocol's own header signal covers 96 bytes and stays on
     the small-input loop; the vectorized path is for section-scale
-    checksums (tooling, benchmarks, payload signals) where the pure loop
-    costs milliseconds.
+    checksums (tooling, benchmarks, chunk/payload signals) where the pure
+    loop costs milliseconds.
     """
     n = len(data)
-    if _np is None or n < _VEC_MIN or n > _VEC_MAX:
+    if _np is None or n < _VEC_MIN:
         return fletcher32_py(data)
     w = _np.frombuffer(data, "<u2", count=n // 2)
     m = n // 2
-    # accumulate straight off the u16 view (int64 cannot overflow below
-    # _VEC_MAX: t <= m^2 * 0xFFFF < 2^63 for m <= 8.4e6) — no widening
-    # copy, no concatenate for the odd tail: appending word w_m to the
-    # cumsum just adds (running sum + w_m) to the cumsum total
-    s = int(w.sum(dtype=_np.int64))
-    t = int(_np.cumsum(w, dtype=_np.int64).sum(dtype=_np.int64))
+    s = t = 0
+    for off in range(0, m, _VEC_BLOCK):
+        blk = w[off:off + _VEC_BLOCK]
+        s_blk = int(blk.sum(dtype=_np.int64))
+        t_blk = int(_np.cumsum(blk, dtype=_np.int64).sum(dtype=_np.int64))
+        t = (t + len(blk) * s + t_blk) % 0xFFFF
+        s = (s + s_blk) % 0xFFFF
     if n % 2:
         last = data[-1]
-        t += s + last
-        s += last
+        t = (t + s + last) % 0xFFFF
+        s = (s + last) % 0xFFFF
         m += 1
     a = (0xFFFF + s) % 0xFFFF
     b = (0xFFFF * (m + 1) + t) % 0xFFFF
@@ -264,6 +314,10 @@ class FrameHeader:
     @property
     def is_agg(self) -> bool:
         return bool(self.flags & FLAG_AGG)
+
+    @property
+    def is_stream(self) -> bool:
+        return bool(self.flags & FLAG_STREAM)
 
 
 def _name_bytes(name: str) -> bytes:
@@ -365,6 +419,17 @@ def pack_reply_into(buf, name: str, payload, kind: CodeKind, corr_id: int, *,
                            flags=FLAG_REPLY | (FLAG_ERR if err else 0))
 
 
+#: receive-side header prediction (the Van Jacobson trick): steady-state
+#: traffic repeats the same 100 header bytes message after message — one
+#: memcmp against the last accepted header skips the checksum, the
+#: struct decode, and every validation, because an IDENTICAL byte string
+#: deterministically parses to the identical (immutable) FrameHeader.
+#: Keyed on the full signed header INCLUDING the fletcher signal, so a
+#: forged or corrupt header can only hit the memo by being byte-equal to
+#: an already-validated one.
+_PEEK_MEMO: list = [None, None, None]    # [header_bytes, max_frame, hdr]
+
+
 def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     """Validate + parse the header at buf[0:].  Returns None if no message
     has arrived (zeroed magic); raises FrameError on corruption/bounds."""
@@ -375,6 +440,10 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
         return None  # nothing written here yet
     if magic != MAGIC:
         raise FrameError(f"bad magic {magic:#x}")
+    hb = bytes(buf[:HEADER_LEN])
+    memo = _PEEK_MEMO
+    if hb == memo[0] and max_frame == memo[1]:
+        return memo[2]
     (sig,) = _U32.unpack_from(buf, SIGNAL_OFF)
     if sig != _header_fletcher(buf):
         raise FrameError("header signal mismatch (corrupt header)")
@@ -390,6 +459,13 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     if flags & FLAG_AGG and flags & (FLAG_SLIM | FLAG_CONT):
         raise FrameError("aggregate frame with frame-level SLIM/CONT flags "
                          "(both ride per sub-record)")
+    if flags & FLAG_STREAM:
+        if flags & (FLAG_REPLY | FLAG_AGG | FLAG_CONT):
+            raise FrameError("stream frame with reply/aggregate/continuation "
+                             "flags (streams are request singletons)")
+        if cont_off - payload_off < STREAM_DESC_LEN:
+            raise FrameError("stream frame payload smaller than its "
+                             "descriptor")
     if flags & FLAG_CONT:
         if flags & FLAG_REPLY:
             raise FrameError("reply frame carries a continuation section")
@@ -400,9 +476,11 @@ def peek_header(buf, max_frame: int | None = None) -> FrameHeader | None:
     ck = _CODE_KIND.get(kind)
     if ck is None:
         raise FrameError(f"unknown code kind {kind}")
-    return FrameHeader(frame_len, code_off, payload_off, ck,
-                       name.rstrip(b"\0").decode(errors="strict"),
-                       flags, bytes(digest), corr_id, cont_off)
+    hdr = FrameHeader(frame_len, code_off, payload_off, ck,
+                      name.rstrip(b"\0").decode(errors="strict"),
+                      flags, bytes(digest), corr_id, cont_off)
+    memo[0], memo[1], memo[2] = hb, max_frame, hdr
+    return hdr
 
 
 def trailer_arrived(buf, hdr: FrameHeader) -> bool:
@@ -462,6 +540,192 @@ def scrub_slot(buf) -> None:
     except FrameError:
         pass
     buf[:HEADER_LEN] = memoryview(_ZEROS)[:HEADER_LEN]
+
+
+# ---------------------------------------------------------------------------
+# v2.5 streamed large payloads (FLAG_STREAM)
+#
+# Layout of a stream frame's payload section:
+#
+#     28B stream descriptor  (total_len u64 | n_chunks u32 | chunk_bytes u32 |
+#                             window u16 | codec u8 | sflags u8 | cell u32 |
+#                             nonce u32)
+#     window x cell chunk cells, each:
+#         20B chunk header   (tag u32 | comp_len u32 | raw_len u32 |
+#                             codec_used u32 | chk u32)
+#         comp_len data bytes
+#         4B seal            (chk echoed — the chunk's delivery barrier)
+#
+# Chunk seq i lands in cell (i % window).  The tag is unique per (stream,
+# seq) — STREAM_CHUNK_MAGIC ^ seq ^ hash(nonce) — and ``chk``, a fletcher32
+# over the first 16 header bytes, covers it.  So a stale seal left by the
+# previous window cycle can never match the new chunk's header (cells need
+# no clearing between cycles), and chunks a dead stream left in a cleared
+# slot (a mid-stream NACK/reject races the source's pipelined chunk puts)
+# can never be mistaken for a *later* stream's chunks: the nonce differs.
+# The frame's own trailer arrives with the descriptor put (the descriptor
+# barrier); per-chunk delivery rides the seals.
+
+_STREAM_DESC = struct.Struct("<QIIHBBII")  # total_len, n_chunks, chunk_bytes,
+#                                            window, codec, sflags, cell,
+#                                            nonce
+STREAM_DESC_LEN = _STREAM_DESC.size
+assert STREAM_DESC_LEN == 28
+_CHUNK_HDR = struct.Struct("<IIIII")       # tag, comp_len, raw_len,
+#                                            codec_used, chk
+_CHUNK_HDR16 = struct.Struct("<IIII")      # the chk-covered prefix
+CHUNK_HDR_LEN = _CHUNK_HDR.size
+CHUNK_SEAL_LEN = 4
+CHUNK_OVERHEAD = CHUNK_HDR_LEN + CHUNK_SEAL_LEN
+STREAM_CHUNK_MAGIC = 0x5EA1C0DE
+SFLAG_EXEC_ON_ARRIVAL = 0x1    # streaming-aware ifunc: run per chunk
+
+
+@dataclass(frozen=True)
+class StreamDesc:
+    """Parsed stream descriptor — the chunk geometry the source committed
+    to at open time.  ``cell`` is the stride of one chunk cell (chunk_bytes
+    + CHUNK_OVERHEAD, as the source sized it)."""
+
+    total_len: int
+    n_chunks: int
+    chunk_bytes: int
+    window: int
+    codec: int
+    sflags: int
+    cell: int
+    nonce: int = 0
+
+    @property
+    def exec_on_arrival(self) -> bool:
+        return bool(self.sflags & SFLAG_EXEC_ON_ARRIVAL)
+
+    def cell_off(self, seq: int) -> int:
+        """Offset of chunk ``seq``'s cell relative to the descriptor end."""
+        return (seq % self.window) * self.cell
+
+
+def stream_payload_len(window: int, cell: int) -> int:
+    """Byte length of a stream frame's payload section (descriptor+cells)."""
+    return STREAM_DESC_LEN + window * cell
+
+
+def pack_stream_desc(buf, off: int, desc: StreamDesc) -> None:
+    _STREAM_DESC.pack_into(buf, off, desc.total_len, desc.n_chunks,
+                           desc.chunk_bytes, desc.window, desc.codec,
+                           desc.sflags, desc.cell, desc.nonce)
+
+
+#: descriptor prediction, same trick as the peek_header memo: a steady
+#: stream workload repeats one geometry, so byte-equal descriptor bytes
+#: (+ the same promised payload length) short-circuit the re-validation.
+_DESC_MEMO: list = [None, None, None]    # [desc_bytes, avail, desc]
+
+
+def parse_stream_desc(buf, off: int, avail: int) -> StreamDesc:
+    """Parse + validate the descriptor at ``buf[off:]``; ``avail`` is the
+    payload-section length the header promised (descriptor + cells)."""
+    db = bytes(buf[off:off + STREAM_DESC_LEN])
+    memo = _DESC_MEMO
+    if db == memo[0] and avail == memo[1]:
+        return memo[2]
+    (total_len, n_chunks, chunk_bytes, window,
+     codec, sflags, cell, nonce) = _STREAM_DESC.unpack_from(db, 0)
+    if not (1 <= window and chunk_bytes >= 1
+            and cell >= chunk_bytes + CHUNK_OVERHEAD):
+        raise FrameError(f"inconsistent stream geometry (window={window}, "
+                         f"chunk={chunk_bytes}, cell={cell})")
+    if STREAM_DESC_LEN + window * cell > avail:
+        raise FrameError("stream cells exceed the frame's payload section")
+    if n_chunks != (total_len + chunk_bytes - 1) // chunk_bytes or not n_chunks:
+        raise FrameError(f"stream chunk count {n_chunks} inconsistent with "
+                         f"total_len {total_len} / chunk {chunk_bytes}")
+    desc = StreamDesc(total_len, n_chunks, chunk_bytes, window, codec,
+                      sflags, cell, nonce)
+    memo[0], memo[1], memo[2] = db, avail, desc
+    return desc
+
+
+def chunk_tag(seq: int, nonce: int = 0) -> int:
+    # Knuth-hash the nonce so consecutive stream nonces flip high tag bits
+    return (STREAM_CHUNK_MAGIC ^ seq ^ (nonce * 0x9E3779B1)) & 0xFFFFFFFF
+
+
+def pack_chunk_hdr(seq: int, comp_len: int, raw_len: int, codec_used: int,
+                   nonce: int = 0) -> tuple[bytes, bytes]:
+    """Build one chunk's (20B header, 4B seal).  The seal echoes ``chk`` —
+    the fletcher32 over the 16 covered header bytes — so its value is
+    unique per (stream, seq): chk covers the nonce-mixed tag."""
+    h16 = _CHUNK_HDR16.pack(chunk_tag(seq, nonce), comp_len, raw_len,
+                            codec_used)
+    chk = fletcher32_py(h16)
+    return h16 + _U32.pack(chk), _U32.pack(chk)
+
+
+def pack_chunk_into(buf, off: int, seal_off: int, seq: int, comp_len: int,
+                    raw_len: int, codec_used: int, nonce: int = 0) -> None:
+    """Stage one chunk's 20B header at ``buf[off:]`` and its 4B seal at
+    ``buf[seal_off:]`` — the allocation-free form of
+    :func:`pack_chunk_hdr` for the eager single-put stream open, where
+    header and seal land in a send slab instead of per-chunk bytes."""
+    h16 = _CHUNK_HDR16.pack(chunk_tag(seq, nonce), comp_len, raw_len,
+                            codec_used)
+    chk = fletcher32_py(h16)
+    buf[off:off + 16] = h16
+    _U32.pack_into(buf, off + 16, chk)
+    _U32.pack_into(buf, seal_off, chk)
+
+
+#: chunk-header prediction, one entry like the peek_header memo: a
+#: pipelined stream re-validates near-identical 20-byte chunk headers
+#: back to back, and the fletcher over them is the single hottest check
+#: on the per-chunk receive path.
+_CHUNK_MEMO: list = [None, None, None]   # [hdr20, (seq,max,nonce,len), res]
+
+
+def peek_chunk(cell, seq: int, max_raw: int | None = None, *,
+               nonce: int = 0) -> tuple[int, int, int] | None:
+    """Inspect a chunk cell for sequence number ``seq``.
+
+    Returns ``None`` while the chunk is pending (stale/absent tag) or its
+    seal is still withheld (data puts in flight); returns
+    ``(comp_len, raw_len, codec_used)`` once fully delivered; raises
+    :class:`FrameError` on a corrupt header.  Check order matters: bounds
+    before the seal read (a corrupt length must not index out of the
+    cell), the seal before the fletcher (an in-flight chunk is pending,
+    not corrupt)."""
+    if len(cell) < CHUNK_OVERHEAD:
+        raise FrameError("chunk cell smaller than the chunk overhead")
+    h20 = bytes(cell[:CHUNK_HDR_LEN])
+    memo = _CHUNK_MEMO
+    if h20 == memo[0] and (seq, max_raw, nonce, len(cell)) == memo[1]:
+        # chunk-header prediction: byte-equal to the last FULLY validated
+        # header under the same (seq, geometry, nonce) — skip the tag,
+        # bounds, and fletcher re-checks.  The seal is re-read every time:
+        # it is the arrival barrier, never a cacheable fact.
+        comp_len, raw_len, codec_used, chk = memo[2]
+        (seal,) = _U32.unpack_from(cell, CHUNK_HDR_LEN + comp_len)
+        if seal != chk:
+            return None      # delivered header, seal still in flight
+        return comp_len, raw_len, codec_used
+    tag, comp_len, raw_len, codec_used, chk = _CHUNK_HDR.unpack_from(h20, 0)
+    if tag != chunk_tag(seq, nonce):
+        return None
+    if CHUNK_OVERHEAD + comp_len > len(cell):
+        raise FrameError(f"chunk data {comp_len}B exceeds its "
+                         f"{len(cell)}B cell")
+    if max_raw is not None and raw_len > max_raw:
+        raise FrameError(f"chunk raw length {raw_len} exceeds the "
+                         f"descriptor's {max_raw}B chunk size")
+    (seal,) = _U32.unpack_from(cell, CHUNK_HDR_LEN + comp_len)
+    if seal != chk:
+        return None          # delivered header, seal still in flight
+    if chk != fletcher32_py(h20[:16]):
+        raise FrameError("chunk header fletcher mismatch (corrupt chunk)")
+    memo[0], memo[1], memo[2] = \
+        h20, (seq, max_raw, nonce, len(cell)), (comp_len, raw_len,
+                                                codec_used, chk)
+    return comp_len, raw_len, codec_used
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,46 @@ class _PendingPut:
     tail: bytes
 
 
+class PreparedPutv:
+    """A pre-validated scatter-gather work request (see
+    :meth:`Endpoint.prepare_putv`).  ``head`` holds fully-delivered
+    segments as ``(dst, end, data)`` with absolute region offsets;
+    ``tail`` (or ``None``) is the withheld-suffix segment as
+    ``(dst, end, head_view_or_None, pending)``."""
+
+    __slots__ = ("ep", "region", "rkey", "head", "tail", "total")
+
+    def __init__(self, ep, region, rkey, head, tail, total):
+        self.ep, self.region, self.rkey = ep, region, rkey
+        self.head, self.tail, self.total = head, tail, total
+
+    def post(self) -> None:
+        """Re-post the work request: the per-WQE hardware re-check (the
+        mapping is still live under the prepared rkey), then the gathers.
+        The withheld tail re-enters the endpoint's pending list each
+        post, so flush semantics match :meth:`Endpoint.putv_nbi`."""
+        ep = self.ep
+        region = self.region
+        if ep.remote.regions.get(region.base) is not region \
+                or region.rkey != self.rkey:
+            ep.stats["rejected"] += 1
+            raise AccessDenied(
+                f"{ep.remote.name}: prepared WR posted against a stale "
+                f"mapping (rkey {self.rkey:#x})")
+        buf = region.buf
+        for dst, end, d in self.head:
+            buf[dst:end] = d
+        t = self.tail
+        if t is not None:
+            dst, end, hv, pend = t
+            if hv is not None:
+                buf[dst:end] = hv
+            ep._pending.append(pend)
+        st = ep.stats
+        st["puts"] += 1
+        st["bytes"] += self.total
+
+
 class Endpoint:
     """One-sided channel from a local NIC to a remote NIC."""
 
@@ -93,6 +133,98 @@ class Endpoint:
             self._pending.append(_PendingPut(region, off + n, bytes(mv[n:])))
         self.stats["puts"] += 1
         self.stats["bytes"] += nd
+
+    def putv_nbi(self, segs, remote_addr: int, rkey: int, *,
+                 withhold_tail: int = 0) -> None:
+        """Scatter-gather non-blocking write — the multi-SGE work request.
+
+        ``segs`` is a sequence of ``(rel_off, data)`` pairs, each landing
+        at ``remote_addr + rel_off``.  The rkey/permission/bounds check
+        covers the segments' full extent ONCE; the segments then copy in
+        post order.  This is what makes a framed message one work request
+        instead of one per section: header, payload pieces, and barrier
+        bytes ride a single posting.
+
+        ``withhold_tail`` keeps the last N bytes of the *final* segment
+        invisible until flush — the delivery-barrier knob, exactly
+        ``deliver_bytes`` for :meth:`put_nbi` restricted to the tail.
+        Callers put the bytes whose arrival signals completion (a frame
+        trailer, a chunk seal) last in ``segs`` for this reason."""
+        if not segs:
+            return
+        lo = hi = None
+        total = 0
+        for off, d in segs:
+            nd = len(d)
+            total += nd
+            lo = off if lo is None or off < lo else lo
+            end = off + nd
+            hi = end if hi is None or end > hi else hi
+        region, base = self.remote.check_access(
+            remote_addr + lo, hi - lo, rkey, Access.WRITE, ep=self)
+        base -= lo
+        buf = region.buf
+        if withhold_tail:
+            tail_off, tail_d = segs[-1]
+            for off, d in segs[:-1]:
+                dst = base + off
+                buf[dst:dst + len(d)] = d      # whole segment, no subview
+            mv = tail_d if isinstance(tail_d, memoryview) \
+                else memoryview(tail_d)
+            n = max(len(mv) - withhold_tail, 0)
+            dst = base + tail_off
+            if n > 0:
+                buf[dst:dst + n] = mv[:n]
+            self._pending.append(
+                _PendingPut(region, dst + n, bytes(mv[n:])))
+        else:
+            for off, d in segs:
+                dst = base + off
+                buf[dst:dst + len(d)] = d
+        self.stats["puts"] += 1
+        self.stats["bytes"] += total
+
+    def prepare_putv(self, segs, remote_addr: int, rkey: int, *,
+                     withhold_tail: int = 0) -> "PreparedPutv":
+        """Build a reusable scatter-gather work request — the verbs idiom
+        of constructing a WQE once and re-posting it.  Validation,
+        extent/rkey resolution, and absolute-offset computation happen
+        HERE, once; each :meth:`PreparedPutv.post` re-checks only what
+        hardware re-checks per WQE (the mapping is still live under the
+        same rkey) and then moves bytes.  Segments holding memoryviews
+        are gathered zero-copy at every post, so a caller may mutate the
+        underlying buffers between posts and the next post ships the new
+        bytes — exactly a persistent WR over registered memory."""
+        if not segs:
+            raise AccessDenied("prepare_putv of an empty segment list")
+        lo = hi = None
+        total = 0
+        for off, d in segs:
+            nd = len(d)
+            total += nd
+            lo = off if lo is None or off < lo else lo
+            end = off + nd
+            hi = end if hi is None or end > hi else hi
+        region, base = self.remote.check_access(
+            remote_addr + lo, hi - lo, rkey, Access.WRITE, ep=self)
+        base -= lo
+        head = []
+        tail = None
+        if withhold_tail:
+            for off, d in segs[:-1]:
+                dst = base + off
+                head.append((dst, dst + len(d), d))
+            off, d = segs[-1]
+            mv = d if isinstance(d, memoryview) else memoryview(d)
+            n = max(len(mv) - withhold_tail, 0)
+            dst = base + off
+            tail = (dst, dst + n, mv[:n] if n else None,
+                    _PendingPut(region, dst + n, bytes(mv[n:])))
+        else:
+            for off, d in segs:
+                dst = base + off
+                head.append((dst, dst + len(d), d))
+        return PreparedPutv(self, region, rkey, head, tail, total)
 
     def get(self, remote_addr: int, ln: int, rkey: int) -> bytes:
         region, off = self.remote.check_access(remote_addr, ln, rkey, Access.READ, ep=self)
@@ -137,12 +269,13 @@ class Nic:
 
     def check_access(self, addr: int, ln: int, rkey: int, need: Access,
                      ep: Endpoint | None = None):
+        nv = need.value
         for base, region in self.regions.items():
             if base <= addr and addr + ln <= base + region.size:
                 if region.rkey != rkey:
                     break
-                if need not in region.access:
-                    break
+                if region.access.value & nv != nv:   # Flag subset, sans the
+                    break                            # slow enum __contains__
                 return region, addr - base
         if ep is not None:
             ep.stats["rejected"] += 1

@@ -10,7 +10,10 @@ the three routines of paper Listing 1.2:
                         source_args, source_args_size) -> int   # used bytes
 
 Optionally: ``IFUNC_KIND = "pybc" | "hlo" | "uvm"`` (default pybc),
-``HLO_ARG_SPECS`` (for hlo), ``UVM_PROGRAM`` (an assembled UvmProgram).
+``HLO_ARG_SPECS`` (for hlo), ``UVM_PROGRAM`` (an assembled UvmProgram),
+``IFUNC_STREAM = True`` (the main is streaming-aware: on a FLAG_STREAM
+frame it is invoked once per arrived chunk with chunk coordinates in
+``target_args["stream"]`` instead of once after full assembly).
 """
 
 from __future__ import annotations
@@ -62,6 +65,8 @@ class IfuncLibrary:
     code: bytes            # serialized code section
     code_digest: bytes     # truncated sha256 — hashed ONCE here, travels in
                            # every frame header (never rehashed per message)
+    streaming: bool = False   # IFUNC_STREAM: main executes per chunk on a
+                              # streamed frame (exec-on-arrival opt-in)
 
     @property
     def code_hash(self) -> str:
@@ -87,7 +92,8 @@ class IfuncLibrary:
         else:
             prog = getattr(mod, "UVM_PROGRAM")
             code = CG.serialize_uvm(prog)
-        return cls(name, main, gms, init, kind, code, compute_digest(code))
+        return cls(name, main, gms, init, kind, code, compute_digest(code),
+                   streaming=bool(getattr(mod, "IFUNC_STREAM", False)))
 
 
 class LinkCache:

@@ -25,6 +25,14 @@ class PolicyViolation(FrameError):
     pass
 
 
+#: header-check prediction: ``peek_header``'s memo hands back the SAME
+#: (frozen) FrameHeader object in steady state, and policies are frozen
+#: too — so one (policy, header) identity pair proves the whole
+#: bounds/kind/namespace re-check redundant.  Identity, not equality:
+#: a lookalike header from an unvalidated parse can never hit this.
+_CHECK_MEMO: list = [None, None]
+
+
 @dataclass(frozen=True)
 class SecurityPolicy:
     max_frame_len: int = 1 << 24
@@ -35,12 +43,16 @@ class SecurityPolicy:
     allow_remote_link: bool = True     # paper future-work mode (no target fs)
 
     def check_header(self, hdr: FrameHeader) -> None:
+        memo = _CHECK_MEMO
+        if hdr is memo[1] and self is memo[0]:
+            return
         if hdr.frame_len > self.max_frame_len:
             raise PolicyViolation(f"frame too long ({hdr.frame_len})")
         if hdr.code_kind not in self.allowed_kinds:
             raise PolicyViolation(f"code kind {hdr.code_kind.name} not allowed here")
         if not re.match(self.name_pattern, hdr.name):
             raise PolicyViolation(f"bad ifunc name {hdr.name!r}")
+        memo[0], memo[1] = self, hdr
 
     def check_agg_sub(self, name: str, kind: CodeKind) -> None:
         """Per-sub-record policy for aggregate containers: each packed

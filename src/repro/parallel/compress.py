@@ -14,6 +14,12 @@ Wire bytes drop 4x vs f32 (2x vs bf16); the error carry makes the scheme
 unbiased over time (Karimireddy et al., 2019).  The reduce itself is a
 reduce-scatter of int8 chunks + local sum + all-gather int8, so the
 compressed representation is what crosses the wire in both phases.
+
+The same quantization scheme is fused into the transport's streamed
+large-payload path as the per-peer ``quant8`` wire codec
+(``repro.transport.codec``, numpy-only so the transport never imports
+jax) — ``quantize8_np``/``dequantize8_np`` re-exported here are its
+stateless per-chunk twins of :func:`quantize_ef`/:func:`dequantize`.
 """
 
 from __future__ import annotations
@@ -23,6 +29,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.transport.codec import dequantize8_np, quantize8_np  # noqa: F401
+#                      (re-export: the wire-codec twins of the jnp pair)
 
 
 def quantize_ef(g, err):

@@ -129,12 +129,17 @@ class PlacementEngine:
 
     # -- congestion signals (live, from the dispatcher) ---------------------
 
-    def queue_depth(self, peer_name: str) -> int:
+    def queue_depth(self, peer_name: str) -> float:
         """Outstanding work at a peer: consumed ring credits + queued
-        NACK retransmits."""
+        NACK retransmits.  A striped peer drains its backlog ``width``
+        rings at a time, so its *effective* depth — the wait a new task
+        actually sees — is the consumed-credit count divided by the
+        stripe width; retransmits stay unscaled (the resend queue is
+        per-peer FIFO regardless of striping)."""
         p = self.dispatcher.peers[peer_name]
         total = sum(r.mailbox.n_slots for r in p.rings)
-        return (total - p.credits) + len(p.resend)
+        width = len(p.rings) if getattr(p, "stripe", False) else 1
+        return (total - p.credits) / width + len(p.resend)
 
     def _wire(self, peer_name: str, nbytes: int) -> float:
         kind = self.dispatcher.peers[peer_name].fabric.kind

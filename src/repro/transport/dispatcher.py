@@ -83,20 +83,58 @@ rate lever:
   polls keep the historical one-per-lane-per-round fairness contract;
 * device-mesh lanes never coalesce: the deposit/sweep pipeline already
   batches generation-wide (aggregates are host-tier by construction).
+
+And *streamed large payloads* (frame v2.5 ``FLAG_STREAM``), the
+64KiB-cliff killer on the other end of the size spectrum:
+
+* with :meth:`set_streaming` enabled, a payload larger than the stream
+  threshold no longer store-and-forwards through one slot-bounded frame —
+  :meth:`send_stream` opens a FLAG_STREAM frame (header + descriptor +
+  ``window x cell`` chunk cells) in ONE ring slot and the dispatcher's
+  chunk pump (:meth:`poll` / :meth:`drain` / :meth:`flush`) posts the
+  payload as pipelined per-chunk puts, each sealed by its own delivery
+  barrier, at most ``window`` chunks ahead of the target's consume
+  cursor (``Mailbox.stream_consumed``);
+* ``send_ifunc`` / coalesced enqueues route oversized payloads into the
+  stream path automatically (host, non-striped peers — a stream would
+  wedge a striped rotation);
+* per-peer wire codecs (``add_peer(codec=...)``) transform chunk bytes
+  in flight — a chunk that doesn't shrink ships raw, so negotiation
+  never inflates the wire;
+* SLIM streams NACK at the descriptor exactly like singletons: the
+  rebuild re-opens the stream FULL from chunk 0 under a fresh nonce (no
+  chunks executed — the miss surfaces before any chunk is consumed), on
+  the same quiescence-gated resend queue; ``fail_inflight`` / ``drain
+  (deadline=)`` resolve a half-arrived stream's future like any tracked
+  frame and kill its pump.
 """
 
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from repro.core import frame as F
+from repro.transport import codec as WC
 from repro.transport.fabric import Fabric, TransportError
 from repro.transport.progress import ProgressEngine
 
 DEFAULT_SLOT_SIZE = 64 << 10
 DEFAULT_N_SLOTS = 8
+
+_API = None      # repro.core.api, imported lazily (it imports codegen —
+#                  the transport layer must stay importable without it)
+#                  and memoized: poll/sweep must not pay the import
+#                  machinery per call
+
+
+def _api():
+    global _API
+    if _API is None:
+        from repro.core import api
+        _API = api
+    return _API
 
 
 @dataclass
@@ -113,6 +151,45 @@ class _TxRec:
     corr_id: int = 0
     sent_at: float = field(default_factory=time.monotonic)
     subs: list | None = None
+    stream: object = None   # _StreamTx when this slot holds a FLAG_STREAM
+    #                         frame (the pump's source-side state)
+
+
+@dataclass(slots=True)
+class _StreamTx:
+    """Source-side state of one streamed payload: the stable payload view
+    (zero-copy contract — the caller must not mutate it until the stream
+    resolves), the committed chunk geometry, and the pump cursor.  Lives
+    in ``Dispatcher._active_streams`` while chunks remain to post; the
+    slot's :class:`_TxRec` points back here so poll outcomes (OK /
+    REJECTED / NACK) can stop or restart the pump."""
+
+    handle: object
+    payload: memoryview
+    desc: F.StreamDesc
+    codec: object            # negotiated wire codec (None -> raw)
+    peer: "Peer"
+    lane: "RingState"
+    abs_slot: int
+    cells_base: int          # slot offset of cell 0 (header + code + desc)
+    corr_id: int = 0
+    future: object = None
+    next_send: int = 0       # chunks posted so far (the pump cursor)
+    dead: bool = False       # NACKed/rejected/failed: pump must not touch
+    #                          the slot again (a restart revives the tx)
+
+
+class _StreamResend:
+    """Queued FULL re-open of a NACKed SLIM stream.  Rides ``peer.resend``
+    next to IfuncMsg retransmits (the type check in ``_flush_resends``
+    dispatches); ``corr_id`` mirrors the tx so the fail-path's queued-
+    retransmit drop resolves its future like any other entry."""
+
+    __slots__ = ("tx", "corr_id")
+
+    def __init__(self, tx: _StreamTx):
+        self.tx = tx
+        self.corr_id = tx.corr_id
 
 
 @dataclass(slots=True)
@@ -204,6 +281,8 @@ class Peer:
     #                                  rotation keeps per-peer FIFO across M
     #                                  rings with ONE demux (the reply ring
     #                                  and resend queue stay per-peer)
+    codec: object = None           # negotiated wire codec for streamed sends
+    #                                  (frame v2.5; None -> raw chunks)
     reply_mailbox: object = None   # source-owned ring the target replies into
     reply_channel: object = None   # target->source path into it
     reply_tail: int = 0            # target-side produce index for replies
@@ -280,6 +359,12 @@ class Dispatcher:
         self._agg_max_subs = 16
         self._agg_max_age = 5e-4
         self._agg_max_sub_bytes = 16 << 10
+        self._streaming = False
+        self._stream_chunk = 256 << 10
+        self._stream_window = 4
+        self._stream_threshold = None    # None -> _agg_max_sub_bytes
+        self._stream_nonce = 0           # monotone: unique per stream open
+        self._active_streams: list[_StreamTx] = []
         self._sweep_raise = None   # deferred mid-batch ifunc exception (a
         #       corr-less poisoned slot behind already-swept frames): poll
         #       re-raises it only after processing those frames' statuses
@@ -307,6 +392,32 @@ class Dispatcher:
         self._agg_max_age = max_age
         self._agg_max_sub_bytes = max_sub_bytes
 
+    def set_streaming(self, enabled: bool = True, *,
+                      chunk_bytes: int = 256 << 10, window: int = 4,
+                      threshold: int | None = None) -> None:
+        """Turn streamed large-payload dispatch on/off.  ``chunk_bytes`` is
+        the per-chunk put size (clamped per lane so ``window`` cells plus
+        the FULL-fallback prefix fit one ring slot), ``window`` the
+        pipelining depth (chunks in flight past the target's consume
+        cursor), ``threshold`` the payload size above which
+        ``send_ifunc``/coalesced sends auto-route into the stream path
+        (None: the coalescing bypass bound ``max_sub_bytes``, so the
+        store-and-forward singleton cliff disappears exactly where the
+        bypass used to ship it)."""
+        if chunk_bytes < 1:
+            raise TransportError(f"chunk_bytes must be >= 1, got {chunk_bytes}")
+        if window < 1:
+            raise TransportError(f"window must be >= 1, got {window}")
+        self._streaming = enabled
+        self._stream_chunk = chunk_bytes
+        self._stream_window = window
+        self._stream_threshold = threshold
+
+    @property
+    def _stream_thr(self) -> int:
+        t = self._stream_threshold
+        return self._agg_max_sub_bytes if t is None else t
+
     # -- topology -----------------------------------------------------------
 
     def add_peer(self, name: str, fabric: Fabric, target_ctx, *,
@@ -314,7 +425,7 @@ class Dispatcher:
                  slot_size: int = DEFAULT_SLOT_SIZE,
                  rings: int = 1, stripe: bool = False,
                  target_args: dict | None = None,
-                 **mailbox_kw) -> Peer:
+                 codec=None, **mailbox_kw) -> Peer:
         """``mailbox_kw`` passes backend-specific binds through to
         ``fabric.open_mailbox`` (e.g. ``prog=``/``externals=`` on the
         device-mesh fabric).  ``stripe=True`` (with ``rings > 1``) stripes
@@ -323,11 +434,16 @@ class Dispatcher:
         rather than skipping ahead) and the poll consumes in the same
         rotation, so per-peer FIFO holds while a hot peer's slot budget
         scales with M rings.  Striped peers accept ``ring=None`` sends
-        only — an explicit ring index would punch holes in the rotation."""
+        only — an explicit ring index would punch holes in the rotation.
+        ``codec`` (id, name, or Codec) negotiates the wire codec streamed
+        sends to this peer encode their chunks with (frame v2.5)."""
         if name in self.peers:
             raise TransportError(f"peer {name!r} already attached")
         peer = Peer(name, fabric, target_ctx,
                     target_args if target_args is not None else {})
+        if codec is not None:
+            c = WC.get_codec(codec)
+            peer.codec = None if c.id == WC.RAW else c
         for _ in range(rings):
             mb = fabric.open_mailbox(target_ctx, n_slots, slot_size,
                                      **mailbox_kw)
@@ -474,6 +590,16 @@ class Dispatcher:
             if lane is None:
                 return False
             msg = peer.resend.popleft()
+            if isinstance(msg, _StreamResend):
+                # NACKed SLIM stream: re-open FULL from chunk 0 under a
+                # fresh nonce (the miss surfaced at the descriptor, before
+                # any chunk was consumed — nothing replays; the nonce keeps
+                # the dead open's still-racing chunk puts unmistakable)
+                tx = msg.tx
+                tx.desc = replace(tx.desc, nonce=self._next_nonce())
+                self._open_stream(peer, lane, tx, slim=False)
+                peer.stats["resent"] += 1
+                continue
             self._slab_post(peer, lane, msg.frame,
                             _TxRec(msg.handle.lib.name,
                                    msg.handle.lib.code_digest,
@@ -481,6 +607,232 @@ class Dispatcher:
                                    corr_id=getattr(msg, "corr_id", 0)))
             peer.stats["resent"] += 1
         return True
+
+    # -- streamed large payloads (frame v2.5) --------------------------------
+
+    def _next_nonce(self) -> int:
+        self._stream_nonce += 1
+        return self._stream_nonce & 0xFFFFFFFF
+
+    def _stream_geometry(self, peer: Peer, lane: RingState, lib,
+                         total: int, chunk: int, window: int) -> F.StreamDesc:
+        """Commit a stream's chunk geometry, clamped so the frame — sized
+        for its FULL fallback (header + code + descriptor + cells +
+        trailer) — fits one ring slot even after a NACK rebuild restores
+        the code section."""
+        avail = (lane.mailbox.slot_size - F.HEADER_LEN - len(lib.code)
+                 - F.STREAM_DESC_LEN - F.TRAILER_LEN)
+        max_chunk = avail - F.CHUNK_OVERHEAD
+        if max_chunk < 1:
+            raise TransportError(
+                f"slot {lane.mailbox.slot_size}B too small for even one "
+                f"stream chunk cell past the {len(lib.code)}B code section")
+        chunk = max(1, min(chunk, total, max_chunk))
+        n_chunks = -(-total // chunk)
+        window = max(1, min(window, n_chunks))
+        while window > 1 and window * (chunk + F.CHUNK_OVERHEAD) > avail:
+            window -= 1
+        sflags = F.SFLAG_EXEC_ON_ARRIVAL if lib.streaming else 0
+        codec_id = WC.RAW if peer.codec is None else peer.codec.id
+        return F.StreamDesc(total, n_chunks, chunk, window, codec_id,
+                            sflags, chunk + F.CHUNK_OVERHEAD,
+                            self._next_nonce())
+
+    @staticmethod
+    def _encode_chunk(tx: _StreamTx, seq: int):
+        """Codec-negotiated wire form of chunk ``seq``: (hdr, data, seal)
+        where ``data`` is the codec output, or a zero-copy view into the
+        payload when the codec is absent / doesn't shrink this chunk."""
+        desc = tx.desc
+        off = seq * desc.chunk_bytes
+        raw = tx.payload[off:off + desc.chunk_bytes]
+        coded = None if tx.codec is None else tx.codec.encode(raw)
+        if coded is None:
+            data, used = raw, WC.RAW
+        else:
+            data, used = coded, tx.codec.id
+        hdr, seal = F.pack_chunk_hdr(seq, len(data), len(raw), used,
+                                     nonce=desc.nonce)
+        return hdr, data, seal
+
+    def _open_stream(self, peer: Peer, lane: RingState, tx: _StreamTx, *,
+                     slim: bool) -> None:
+        """Post a stream's open.  When every chunk fits the frame's cell
+        window (``n_chunks <= window``), the whole frame — prefix, cells,
+        trailer — goes out as ONE scatter-gather put (eager open; chunk
+        data segments stay zero-copy views into the payload) and the
+        stream never enters the chunk pump.  Otherwise: header + code +
+        descriptor as one prefix put, the frame trailer withheld (the
+        descriptor barrier), the ``window x cell`` gap never written, and
+        the pump pipelines the chunks.  Either way the slot's
+        :class:`_TxRec` carries the completion."""
+        lib = tx.handle.lib
+        code = b"" if slim else lib.code
+        desc = tx.desc
+        plen = F.stream_payload_len(desc.window, desc.cell)
+        slab = self.engine.slab_slot(lane.channel, lane.tail)
+        flen = F.seal_frame(slab, lib.name, code, lib.kind, plen,
+                            digest=lib.code_digest, slim=slim,
+                            corr_id=tx.corr_id, flags=F.FLAG_STREAM)
+        F.pack_stream_desc(slab, F.HEADER_LEN + len(code), desc)
+        prefix = F.HEADER_LEN + len(code) + F.STREAM_DESC_LEN
+        tx.peer = peer
+        tx.lane = lane
+        tx.abs_slot = lane.tail
+        tx.cells_base = prefix
+        tx.next_send = 0
+        tx.dead = False
+        eager = desc.n_chunks <= desc.window
+        if eager:
+            # Eager open: chunk headers and seals stage INTO the slab at
+            # their frame offsets, so every glue run (prefix|hdr,
+            # seal|next-hdr, ...) that is byte-contiguous in the frame
+            # collapses to one slab-view segment — for an uncompressed
+            # stream the whole frame is [glue][data][glue][data]...[glue]
+            # and the putv carries 2n+1 segments, the data ones zero-copy
+            # views into the caller's payload.
+            segs = []
+            run_s, run_e = 0, prefix
+            wire = prefix
+            codec, nonce, chunk = tx.codec, desc.nonce, desc.chunk_bytes
+            for seq in range(desc.n_chunks):
+                cell = prefix + desc.cell_off(seq)
+                raw = tx.payload[seq * chunk:(seq + 1) * chunk]
+                coded = None if codec is None else codec.encode(raw)
+                if coded is None:
+                    data, used = raw, WC.RAW
+                else:
+                    data, used = coded, codec.id
+                nd = len(data)
+                if cell != run_e:            # codec gap: run breaks here
+                    segs.append((run_s, slab[run_s:run_e]))
+                    run_s = cell
+                run_e = cell + F.CHUNK_HDR_LEN
+                F.pack_chunk_into(slab, cell, run_e + nd, seq, nd,
+                                  len(raw), used, nonce=nonce)
+                segs.append((run_s, slab[run_s:run_e]))
+                segs.append((run_e, data))
+                run_s = run_e + nd
+                run_e = run_s + F.CHUNK_SEAL_LEN
+                wire += F.CHUNK_OVERHEAD + nd
+            segs.append((run_s, slab[run_s:run_e]))
+            self.engine.post_stream_frame(lane.channel, lane.tail, segs,
+                                          flen, peer=peer.name,
+                                          future=tx.future)
+            tx.next_send = desc.n_chunks
+            peer.stats["bytes"] += wire + F.TRAILER_LEN
+            peer.stats["stream_chunks"] = (
+                peer.stats.get("stream_chunks", 0) + desc.n_chunks)
+        else:
+            self.engine.post_stream_open(lane.channel, slab[:prefix], flen,
+                                         lane.tail, peer=peer.name,
+                                         future=tx.future)
+            peer.stats["bytes"] += prefix + F.TRAILER_LEN
+        lane.inflight[lane.tail] = _TxRec(lib.name, lib.code_digest,
+                                          tx.handle, slim,
+                                          corr_id=tx.corr_id, stream=tx)
+        lane.tail += 1
+        peer.stats["sent"] += 1
+        if slim:
+            peer.stats["slim_sent"] += 1
+        self.stats["sent"] += 1
+        if eager:
+            self.engine.flush(lane.channel)
+        elif tx not in self._active_streams:
+            self._active_streams.append(tx)
+
+    def send_stream(self, peer_name: str, handle, payload, *,
+                    ring: int | None = None, corr_id: int = 0, future=None,
+                    chunk_bytes: int | None = None,
+                    window: int | None = None) -> bool:
+        """Stream one large payload to a host peer: ONE ring slot, ONE
+        credit, the payload delivered as pipelined per-chunk puts instead
+        of a store-and-forward frame bounded by the slot size.  The
+        payload view must stay stable (unmutated) until the stream
+        resolves — chunks are posted zero-copy straight from it.  SLIM
+        framing, NACK FULL-rebuild, corr_id replies, and liveness
+        (``fail_inflight``) work exactly as for singleton frames.
+        Returns False on backpressure like any send."""
+        peer = self.peers[peer_name]
+        if peer.fabric.kind == "device":
+            raise TransportError(
+                "streams are host-tier only (the device mesh has no "
+                "sub-slot addressing)")
+        if peer.stripe:
+            raise TransportError(
+                f"striped peer {peer.name!r} cannot stream: a slot held "
+                "across sweeps would wedge the strict consume rotation")
+        pv = payload if isinstance(payload, memoryview) \
+            else memoryview(payload)
+        if pv.ndim != 1 or pv.itemsize != 1:
+            pv = pv.cast("B")
+        total = len(pv)
+        if total == 0:
+            raise TransportError("cannot stream an empty payload")
+        if not self._flush_resends(peer):
+            peer.stats["backpressure"] += 1
+            return False
+        if not self._flush_coalesce_peer(peer):
+            peer.stats["backpressure"] += 1   # FIFO: queued records go first
+            return False
+        lane = self._pick_lane(peer, ring)
+        if lane is None:
+            peer.stats["backpressure"] += 1
+            return False
+        lib = handle.lib
+        desc = self._stream_geometry(
+            peer, lane, lib, total,
+            self._stream_chunk if chunk_bytes is None else chunk_bytes,
+            self._stream_window if window is None else window)
+        tx = _StreamTx(handle, pv, desc, peer.codec, peer, lane, lane.tail,
+                       0, corr_id=corr_id, future=future)
+        self._open_stream(peer, lane, tx, slim=self._slim_ok(peer, lib))
+        peer.stats["streams"] = peer.stats.get("streams", 0) + 1
+        self.stats["streams"] = self.stats.get("streams", 0) + 1
+        self._pump_streams()
+        return True
+
+    def _pump_streams(self) -> int:
+        """Advance every active stream: post chunks (codec-encoded when
+        the negotiated codec shrinks them, raw otherwise) while the
+        window is open — at most ``window`` chunks past the target's
+        consume cursor — then flush the touched channels so the seals
+        publish.  Fully-posted streams leave the pump; their slot's
+        _TxRec carries the completion."""
+        if not self._active_streams:
+            return 0
+        posted = 0
+        flushes: dict[int, object] = {}
+        still: list[_StreamTx] = []
+        for tx in self._active_streams:
+            if tx.dead:
+                continue
+            desc = tx.desc
+            mb = tx.lane.mailbox
+            coords = mb.slot_coords(tx.abs_slot)
+            peer, channel = tx.peer, tx.lane.channel
+            before = tx.next_send
+            while tx.next_send < desc.n_chunks:
+                if tx.next_send - mb.stream_consumed(coords) >= desc.window:
+                    break                # window closed: cell still in use
+                seq = tx.next_send
+                hdr, data, seal = self._encode_chunk(tx, seq)
+                self.engine.post_chunk(
+                    channel, tx.abs_slot, tx.cells_base + desc.cell_off(seq),
+                    hdr, data, seal, peer=peer.name)
+                tx.next_send += 1
+                posted += 1
+                peer.stats["bytes"] += len(hdr) + len(data) + len(seal)
+                peer.stats["stream_chunks"] = (
+                    peer.stats.get("stream_chunks", 0) + 1)
+            if tx.next_send > before:
+                flushes[id(channel)] = channel
+            if tx.next_send < desc.n_chunks:
+                still.append(tx)
+        self._active_streams = still
+        for ch in flushes.values():
+            self.engine.flush(ch)
+        return posted
 
     # -- coalesced dispatch (frame v2.3 aggregates) --------------------------
 
@@ -536,6 +888,14 @@ class Dispatcher:
                                   0 if cont is None else len(cont))
         sub = _PendingSub(handle, lib.name, lib.kind, lib.code_digest,
                           payload, corr_id, cont, future, time.monotonic())
+        if (self._streaming and len(payload) > self._stream_thr
+                and cont is None and peer.fabric.kind != "device"
+                and not peer.stripe):
+            # oversized record with streaming on: the slot-bounded bypass
+            # singleton is the 64KiB cliff — stream it instead (send_stream
+            # flushes queued records first, so FIFO holds)
+            return self.send_stream(peer.name, handle, payload, ring=ring,
+                                    corr_id=corr_id, future=future)
         if len(payload) > self._agg_max_sub_bytes:
             # bandwidth-bound record: aggregation buys nothing — ship it
             # as a plain SLIM singleton, after anything queued before it
@@ -630,6 +990,10 @@ class Dispatcher:
                 except TypeError:
                     sz = 0
                 mx = int(gms(args, sz))
+                if (self._streaming and not is_device and not peer.stripe
+                        and mx > self._stream_thr):
+                    break                # oversized head: the generic loop
+                #                          routes it into the stream path
                 if not is_device and full_base + mx > cap:
                     break                # FULL fallback cannot fit a ring
                 #                          slot: the generic loop errors
@@ -937,6 +1301,22 @@ class Dispatcher:
             raise TransportError(
                 "continuation frames are host-tier only (the device sweep "
                 "has no forwarding hook)")
+        if (self._streaming and cont is None and on_complete is None
+                and peer.fabric.kind != "device" and not peer.stripe):
+            if source_args_size is None:
+                try:
+                    source_args_size = len(source_args)
+                except TypeError:
+                    source_args_size = 0
+            if int(handle.lib.payload_get_max_size(
+                    source_args, source_args_size)) > self._stream_thr:
+                # oversized payload: the slot-bounded singleton is the
+                # 64KiB cliff — materialize once and stream it instead
+                payload = self._materialize_payload(handle.lib, source_args,
+                                                    source_args_size)
+                return self.send_stream(peer_name, handle, payload,
+                                        ring=ring, corr_id=corr_id,
+                                        future=future)
         if (self._coalesce and on_complete is None
                 and self._agg_eligible(peer)
                 and self._slim_ok(peer, handle.lib)):
@@ -996,6 +1376,8 @@ class Dispatcher:
         explicit flush means 'everything handed to send is on the wire'."""
         for p in self.peers.values():
             self._flush_coalesce_peer(p)
+        if self._active_streams:
+            self._pump_streams()
         return self.engine.flush()
 
     # -- target side: fairness-aware poll loop ------------------------------
@@ -1007,7 +1389,7 @@ class Dispatcher:
         """NACK fallback: the SLIM frame still sits in the source slab cell
         for its slot (the credit only just returned, nothing has overwritten
         it); hand it to ``ifunc_msg_to_full`` to restore the code section."""
-        from repro.core import api as A
+        A = _api()
 
         view = self.engine.slab_slot(lane.channel, abs_slot)
         return A.ifunc_msg_to_full(A.IfuncMsg(rec.handle, view, slim=True))
@@ -1030,7 +1412,7 @@ class Dispatcher:
         slot still confirms digests and resolves its futures.  Aggregate
         containers pass through untouched here (header corr is 0); their
         per-sub-record replies coalesce in :meth:`_complete_agg`."""
-        from repro.core.api import Status
+        Status = _api().Status
 
         mb = lane.mailbox
         out: list = []
@@ -1049,6 +1431,8 @@ class Dispatcher:
             except Exception as e:           # raised *inside* the ifunc
                 err = e
                 F.scrub_slot(buf)
+                mb.streams.pop(mb.slot_coords(mb.head), None)   # a raising
+                #              exec-on-arrival stream dies with its slot
                 mb.head += 1                 # consume the poisoned slot
                 mb.consumed += 1
                 peer.stats["errors"] += 1
@@ -1088,8 +1472,7 @@ class Dispatcher:
         the reply router instead).  Returns the number of consumed (OK or
         rejected) sub-records, i.e. this container's contribution to the
         poll budget."""
-        from repro.core import api as A
-
+        A = _api()
         Status = A.Status
         results = lane.mailbox.last_agg.pop(coords, None)
         if results is not None and len(results) != len(rec.subs):
@@ -1325,7 +1708,7 @@ class Dispatcher:
         aggregate, per sub-record.  Replies (result-return frames, device
         sweep results with corr-ids) are routed to the reply_router as a
         side effect; they do not count against ``budget``."""
-        from repro.core.api import Status
+        Status = _api().Status
 
         if self._coalesce:
             self._age_flush()            # adaptive bound: no record waits
@@ -1339,6 +1722,9 @@ class Dispatcher:
         progressed = True
         while progressed and (budget is None or done < budget):
             progressed = False
+            if self._active_streams and self._pump_streams():
+                progressed = True        # chunks posted: windows the sweeps
+                #                          below just opened refill in-poll
             start = self._rr % len(lanes)
             for k in range(len(lanes)):
                 peer, lane = lanes[(start + k) % len(lanes)]
@@ -1404,6 +1790,8 @@ class Dispatcher:
                         done += 1
                         if rec is not None:
                             peer.cached.add(rec.digest)
+                            if rec.stream is not None:
+                                rec.stream.dead = True   # complete: pump off
                         if not track:
                             ent = (lane.corr_by_coords.pop(coord, None)
                                    if coord is not None else None)
@@ -1414,6 +1802,10 @@ class Dispatcher:
                         peer.stats["rejected"] += 1
                         done += 1
                         progressed = True
+                        if rec is not None and rec.stream is not None:
+                            # corrupt stream: ONLY this stream dies — stop
+                            # its pump; the scrubbed slot flows on
+                            rec.stream.dead = True
                         if rec is not None and rec.subs is not None:
                             # whole container rejected (corrupt aggregate
                             # signal): every corr-carrying record resolves
@@ -1437,7 +1829,14 @@ class Dispatcher:
                         peer.stats["nacks"] += 1
                         self.stats["nacks"] += 1
                         progressed = True
-                        if rec is not None and rec.handle is not None:
+                        if rec is not None and rec.stream is not None:
+                            # SLIM stream missed the cache at its
+                            # descriptor: park the pump and queue a FULL
+                            # re-open from chunk 0 (nothing executed)
+                            rec.stream.dead = True
+                            peer.cached.discard(rec.digest)
+                            peer.resend.append(_StreamResend(rec.stream))
+                        elif rec is not None and rec.handle is not None:
                             peer.cached.discard(rec.digest)
                             peer.resend.append(
                                 self._rebuild_full(lane, slot - 1, rec))
@@ -1509,6 +1908,11 @@ class Dispatcher:
                     if slot >= low and now - rec.sent_at < min_age:
                         continue         # young: the peer may still be alive
                     del lane.inflight[slot]
+                    if rec.stream is not None:
+                        rec.stream.dead = True   # half-arrived stream: the
+                        #          pump must never touch the slot again
+                        if rec.stream in self._active_streams:
+                            self._active_streams.remove(rec.stream)
                     if slot < low:
                         continue
                     if rec.subs is not None:
@@ -1610,6 +2014,7 @@ class Dispatcher:
             n = self.poll()
             total += n
             idle = (n == 0 and self.engine.outstanding() == 0
+                    and not self._active_streams
                     and not any(p.resend or any(
                         q.subs for q in p.coalesce.values())
                         for p in self.peers.values()))

@@ -33,6 +33,20 @@ class TransportError(Exception):
     pass
 
 
+_API = None      # repro.core.api, imported lazily (api imports codegen,
+#                  which the transport core must not drag in at import
+#                  time) and memoized — the sweep hot loop must not pay
+#                  the import machinery per call
+
+
+def _api():
+    global _API
+    if _API is None:
+        from repro.core import api
+        _API = api
+    return _API
+
+
 # ---------------------------------------------------------------------------
 # contracts
 
@@ -76,11 +90,28 @@ class Mailbox:
         #: historical budget=1 behavior, where the raise surfaced on the
         #: poll that reached the slot.
         self.pending_raise: BaseException | None = None
+        #: in-progress FLAG_STREAM receive state, keyed by the slot
+        #: coordinate the stream frame occupies: coordinate ->
+        #: ``api._StreamRx``.  Owned by ``poll_ifunc`` (created on the
+        #: descriptor's arrival, popped at completion/rejection); the
+        #: mailbox carries it because stream lifetime spans many sweeps
+        #: of one slot.  ``stream_consumed`` exposes the consume counter
+        #: the source's chunk pump reads for window flow control.
+        self.streams: dict = {}
 
     def slot_coords(self, i: int):
         """Stable coordinate a produce-index maps to (what ``last_coords``
         entries are keyed by).  Identity for in-order host rings."""
         return i
+
+    def stream_consumed(self, coords) -> int:
+        """Number of chunks the stream at ``coords`` has consumed — the
+        credit-return counter the source's chunk pump polls before
+        overwriting a window cell (a cell is reusable once the chunk
+        ``window`` positions behind it has been consumed).  0 until the
+        stream descriptor has been polled."""
+        rx = self.streams.get(coords)
+        return 0 if rx is None else rx.next_seq
 
     def slot_view(self, i: int) -> memoryview:
         raise NotImplementedError
@@ -108,14 +139,15 @@ class Mailbox:
         sweeping a mailbox directly must either send FULL frames only (the
         default until a dispatcher confirms the peer) or handle
         NACK_UNCACHED in the returned statuses itself."""
-        from repro.core import api as A
+        A = _api()
 
         out = []
         budget = self.n_slots if budget is None else budget
         for _ in range(budget):
             try:
                 st = A.poll_ifunc(ctx, self.slot_view(self.head), None,
-                                  target_args)
+                                  target_args, streams=self.streams,
+                                  stream_key=self.slot_coords(self.head))
             except Exception as e:       # raised *inside* an ifunc
                 if not out:
                     raise                # first slot: historical behavior
@@ -152,6 +184,32 @@ class Channel:
         ``deliver_bytes`` only a prefix is visible until :meth:`flush` —
         the ProgressEngine uses this to model in-flight puts."""
         raise NotImplementedError
+
+    def put_at(self, data, slot: int, offset: int, *,
+               deliver_bytes: int | None = None) -> None:
+        """Non-blocking write of ``data`` at byte ``offset`` *within* ring
+        slot ``slot`` — the streamed-payload path's chunk put (and the
+        stream open's withheld frame trailer).  Same delivery semantics as
+        :meth:`put`; ``deliver_bytes=0`` withholds the entire write until
+        :meth:`flush` (a chunk seal / trailer barrier).  Backends without
+        sub-slot addressing (the device mesh) don't implement it — streams
+        are a host-tier feature, like continuations."""
+        raise NotImplementedError
+
+    def putv_at(self, segs, slot: int, *, withhold_tail: int = 0) -> None:
+        """Scatter-gather write into ring slot ``slot``: ``segs`` is a
+        sequence of ``(offset, data)`` pairs posted as ONE work request.
+        ``withhold_tail`` keeps the last N bytes of the final segment
+        invisible until :meth:`flush` — callers order the barrier bytes
+        (frame trailer, chunk seal) last.  The generic fallback degrades
+        to one :meth:`put_at` per segment; RDMA-class backends override
+        with a true multi-SGE posting."""
+        last = len(segs) - 1
+        for i, (off, d) in enumerate(segs):
+            db = None
+            if withhold_tail and i == last:
+                db = max(len(d) - withhold_tail, 0)
+            self.put_at(d, slot, off, deliver_bytes=db)
 
     def flush(self) -> None:
         raise NotImplementedError
@@ -206,6 +264,38 @@ class RdmaChannel(Channel):
         self.stats["puts"] += 1
         self.stats["bytes"] += len(data)
         if deliver_bytes is not None and deliver_bytes < len(data):
+            self.stats["partial"] += 1
+
+    def put_at(self, data, slot: int, offset: int, *,
+               deliver_bytes: int | None = None) -> None:
+        if offset + len(data) > self.mailbox.slot_size:
+            raise TransportError(
+                f"put_at [{offset}, {offset + len(data)}) exceeds slot "
+                f"{self.mailbox.slot_size}B")
+        self.ep.put_nbi(data, self.mailbox.slot_addr(slot) + offset,
+                        self.mailbox.region.rkey, deliver_bytes=deliver_bytes)
+        self.stats["puts"] += 1
+        self.stats["bytes"] += len(data)
+        if deliver_bytes is not None and deliver_bytes < len(data):
+            self.stats["partial"] += 1
+
+    def putv_at(self, segs, slot: int, *, withhold_tail: int = 0) -> None:
+        extent = 0
+        nbytes = 0
+        for off, d in segs:
+            nbytes += len(d)
+            end = off + len(d)
+            extent = end if end > extent else extent
+        if extent > self.mailbox.slot_size:
+            raise TransportError(
+                f"putv extent {extent}B exceeds slot "
+                f"{self.mailbox.slot_size}B")
+        self.ep.putv_nbi(segs, self.mailbox.slot_addr(slot),
+                         self.mailbox.region.rkey,
+                         withhold_tail=withhold_tail)
+        self.stats["puts"] += 1
+        self.stats["bytes"] += nbytes
+        if withhold_tail:
             self.stats["partial"] += 1
 
     def put_raw(self, data, remote_addr: int, rkey: int, *,
@@ -291,6 +381,49 @@ class LoopbackChannel(Channel):
             self.stats["partial"] += 1
         self.stats["puts"] += 1
         self.stats["bytes"] += nd
+
+    def put_at(self, data, slot: int, offset: int, *,
+               deliver_bytes: int | None = None) -> None:
+        mb = self.mailbox
+        nd = len(data)
+        if offset + nd > mb.slot_size:
+            raise TransportError(
+                f"put_at [{offset}, {offset + nd}) exceeds slot "
+                f"{mb.slot_size}B")
+        off = (slot % mb.n_slots) * mb.slot_size + offset
+        mv = data if isinstance(data, memoryview) else memoryview(data)
+        n = nd if deliver_bytes is None else min(deliver_bytes, nd)
+        if n:
+            mb.buf[off:off + n] = mv[:n]
+        if n < nd:
+            self._pending.append(_PendingLoopPut(mb.buf, off + n, bytes(mv[n:])))
+            self.stats["partial"] += 1
+        self.stats["puts"] += 1
+        self.stats["bytes"] += nd
+
+    def putv_at(self, segs, slot: int, *, withhold_tail: int = 0) -> None:
+        mb = self.mailbox
+        base = (slot % mb.n_slots) * mb.slot_size
+        last = len(segs) - 1
+        nbytes = 0
+        for i, (off, d) in enumerate(segs):
+            mv = d if isinstance(d, memoryview) else memoryview(d)
+            nd = len(mv)
+            nbytes += nd
+            if off + nd > mb.slot_size:
+                raise TransportError(
+                    f"putv [{off}, {off + nd}) exceeds slot "
+                    f"{mb.slot_size}B")
+            n = max(nd - withhold_tail, 0) if withhold_tail and i == last \
+                else nd
+            if n:
+                mb.buf[base + off:base + off + n] = mv[:n]
+            if n < nd:
+                self._pending.append(
+                    _PendingLoopPut(mb.buf, base + off + n, bytes(mv[n:])))
+                self.stats["partial"] += 1
+        self.stats["puts"] += 1
+        self.stats["bytes"] += nbytes
 
     def flush(self) -> None:
         for p in self._pending:

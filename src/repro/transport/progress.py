@@ -32,6 +32,8 @@ from dataclasses import dataclass, field
 from repro.core import frame as F
 from repro.transport.fabric import Channel
 
+_TRAILER_BYTES = F.TRAILER.to_bytes(F.TRAILER_LEN, "little")
+
 
 @dataclass
 class TxHandle:
@@ -136,6 +138,10 @@ class ProgressEngine:
         h = TxHandle(self._seq, channel, len(frame), slot, peer=peer,
                      on_complete=on_complete, future=future)
         channel.put(frame, slot, deliver_bytes=self._window(len(frame)))
+        self._register(channel, h)
+        return h
+
+    def _register(self, channel: Channel, h: TxHandle) -> None:
         key = id(channel)
         self._channels[key] = channel
         self._outstanding.setdefault(key, []).append(h)
@@ -143,6 +149,73 @@ class ProgressEngine:
         if len(self._outstanding[key]) >= self.flush_threshold:
             self.stats["auto_flushes"] += 1
             self.flush(channel)
+
+    # -- streamed large payloads (frame v2.5) -------------------------------
+
+    def post_stream_open(self, channel: Channel, prefix, frame_len: int,
+                         slot: int, *, peer: str | None = None,
+                         on_complete=None, future=None) -> TxHandle:
+        """Open a FLAG_STREAM frame: put the small prefix (header + code +
+        descriptor) and the frame trailer, withholding the trailer until
+        flush — the descriptor barrier.  The ``window x cell`` gap between
+        prefix and trailer is never written: ring slots arrive zeroed (the
+        previous frame's clear) and chunk tags disambiguate the cells."""
+        self._seq += 1
+        h = TxHandle(self._seq, channel, len(prefix) + F.TRAILER_LEN, slot,
+                     peer=peer, on_complete=on_complete, future=future)
+        channel.putv_at(
+            [(0, prefix), (frame_len - F.TRAILER_LEN, _TRAILER_BYTES)],
+            slot,
+            withhold_tail=0 if self.inflight_window is None
+            else F.TRAILER_LEN)
+        self._register(channel, h)
+        return h
+
+    def post_stream_frame(self, channel: Channel, slot: int, segs,
+                          frame_len: int, *, peer: str | None = None,
+                          on_complete=None, future=None) -> TxHandle:
+        """Eager stream open: when every chunk of a FLAG_STREAM frame is
+        available at open time and fits the frame's cell window, the whole
+        frame — prefix, each cell's header|data|seal, and the frame
+        trailer — posts as ONE scatter-gather work request instead of
+        ``2 + 3 x n_chunks`` separate puts.  The chunk data segments are
+        views straight into the caller's payload (zero-copy), and the
+        trailer rides last with its tail withheld until flush, so the
+        descriptor barrier is unchanged: a target polling mid-put still
+        sees IN_PROGRESS until the flush publishes the frame."""
+        self._seq += 1
+        segs = list(segs)
+        segs.append((frame_len - F.TRAILER_LEN, _TRAILER_BYTES))
+        nbytes = 0
+        for _, d in segs:
+            nbytes += len(d)
+        h = TxHandle(self._seq, channel, nbytes, slot, peer=peer,
+                     on_complete=on_complete, future=future)
+        channel.putv_at(segs, slot,
+                        withhold_tail=0 if self.inflight_window is None
+                        else F.TRAILER_LEN)
+        self._register(channel, h)
+        return h
+
+    def post_chunk(self, channel: Channel, slot: int, cell_off: int,
+                   hdr, data, seal, *, peer: str | None = None,
+                   on_complete=None, future=None) -> TxHandle:
+        """Post one stream chunk: header, zero-copy data, and the 4-byte
+        seal as ONE scatter-gather put, the seal's bytes withheld until
+        flush — so the flush that publishes the seal is the chunk's
+        delivery barrier (the frame's trailer-withholding, generalized to
+        chunk boundaries).  ``data`` may be a view straight into the
+        caller's payload (the streamed path's zero-copy contract: the
+        engine never stages chunk bytes)."""
+        self._seq += 1
+        h = TxHandle(self._seq, channel, len(hdr) + len(data) + len(seal),
+                     slot, peer=peer, on_complete=on_complete, future=future)
+        channel.putv_at(
+            [(cell_off, hdr), (cell_off + len(hdr), data),
+             (cell_off + len(hdr) + len(data), seal)],
+            slot,
+            withhold_tail=0 if self.inflight_window is None else len(seal))
+        self._register(channel, h)
         return h
 
     def flush(self, channel: Channel | None = None) -> int:
