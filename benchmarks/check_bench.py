@@ -35,7 +35,11 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
    SLIM store-and-forward cell (payload copied twice vs gathered once);
    and at 64 KiB the streamed rate is >= 1.5x the frozen PR6 SLIM
    singleton rate (read from ``BENCH_PR6.json`` beside the checked
-   file) — streaming must beat the path it replaces, not just exist.
+   file) — streaming must beat the path it replaces, not just exist;
+9. (BENCH_PR8+) the ``obs_overhead`` rows exist and every ``*_on``
+   cell's persisted ratio (off_us / on_us, same-run interleaved arms)
+   is >= 0.95 — the counters-only telemetry default taxes the slim_agg
+   and stream hot paths at most 5%.
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -207,6 +211,20 @@ def check(path: pathlib.Path) -> int:
         assert got >= 1.5 * base, (
             f"64 KiB cliff still standing: stream rate {got:.0f} < 1.5x "
             f"the frozen PR6 slim rate {base:.0f}")
+
+    obs_on = [r for r in rows if r["bench"] == "obs_overhead"
+              and "_on/" in r["cell"]]
+    if pr >= 8:
+        assert obs_on, "no obs_overhead *_on rows"
+    for r in obs_on:
+        ratio = r.get("ratio")
+        assert ratio is not None, f"obs_overhead on-cell without ratio: {r}"
+        print(f"obs_overhead {r['cell']:>22}: {r['us']:9.2f}us "
+              f"off/on={ratio:.3f}x")
+        assert ratio >= 0.95, (
+            f"telemetry tax over budget at {r['cell']}: off/on ratio "
+            f"{ratio:.3f} < 0.95 — the counters-only default must cost "
+            f"the hot paths at most 5%")
 
     print(f"{path.name}: {len(rows)} rows OK")
     return 0

@@ -21,6 +21,11 @@
   device_agg       ONE batched container sweep (agg_ring_poll + one
                    ifunc_vm over all K sub-bodies) vs the per-slot
                    singleton device ring at the same K=64 workload
+  obs_overhead     the repro.obs telemetry tax: counters-only Obs()
+                   (the always-on default) vs Obs(enabled=False),
+                   interleaved same-run arms over the slim_agg and
+                   stream shapes — persisted ratio = off/on us, gated
+                   >= 0.95 from PR8 on
   micro_slab       fresh-bytearray vs slab in-place frame packing
   micro_checksum   pure-Python vs vectorized fletcher32
   micro_header     naive vs precompiled-struct frame header seal/peek
@@ -30,7 +35,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
 normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?,
-ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR7.json``
+ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR8.json``
 at the repo root) — prior ``BENCH_PR*.json`` files are committed history
 and are never rewritten (PR 3's harness accidentally churned
 ``BENCH_PR2.json`` on every re-run; the per-PR-file routing that caused
@@ -47,9 +52,10 @@ plain ``latency`` rows (see BENCH_PR2.json, frozen); the persisted field
 fixes that going forward.
 
 ``--quick`` (the CI smoke mode) runs the cached-fast-path suite
-(fig5_cached incl. slim_agg + the four microbenches) plus fig_graph and
-fig_flow with reduced iteration counts.  ``device_agg`` and ``fig_stream`` run in
-full mode only: their committed rows survive a --quick merge untouched.
+(fig5_cached incl. slim_agg + the four microbenches) plus fig_graph,
+fig_flow, and obs_overhead with reduced iteration counts.  ``device_agg``
+and ``fig_stream`` run in full mode only: their committed rows survive a
+--quick merge untouched.
 """
 
 from __future__ import annotations
@@ -66,7 +72,7 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
-CURRENT = ROOT / "BENCH_PR7.json"    # the ONE file this harness writes
+CURRENT = ROOT / "BENCH_PR8.json"    # the ONE file this harness writes
 
 
 def _emit(rows: list[dict]) -> None:
@@ -169,6 +175,12 @@ def fig_stream() -> list[dict]:
     return B.bench_stream()
 
 
+def obs_overhead(quick: bool = False) -> list[dict]:
+    if quick:
+        return B.bench_obs_overhead(agg_iters=320, stream_iters=16)
+    return B.bench_obs_overhead()
+
+
 def transport_fanout() -> list[dict]:
     return B.bench_dispatcher_fanout()
 
@@ -216,11 +228,12 @@ def main() -> None:
                   lambda: micro_slab(quick=True),
                   lambda: micro_checksum(quick=True),
                   lambda: micro_header(quick=True),
-                  lambda: micro_agg(quick=True)]
+                  lambda: micro_agg(quick=True),
+                  lambda: obs_overhead(quick=True)]
     else:
         suites = [fig3_latency, fig4_throughput, fig5_cached, fig_stream,
                   fig_graph, fig_flow, s34_link_cost, tierB_uvm, device_agg,
-                  transport_fanout, micro_slab, micro_checksum,
+                  obs_overhead, transport_fanout, micro_slab, micro_checksum,
                   micro_header, micro_agg, roofline_summary]
     all_rows = []
     for fn in suites:

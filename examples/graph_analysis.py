@@ -89,8 +89,14 @@ for u, v, _ in edges:
 
 # --- topology ---------------------------------------------------------------
 source = Context("source")
+# REPRO_TRACE=trace.json turns on span tracing and writes a Chrome
+# trace_event file (chrome://tracing or ui.perfetto.dev) at exit
+_trace_out = os.environ.get("REPRO_TRACE")
+from repro.obs import Obs
+obs = Obs("graph_analysis", trace=bool(_trace_out))
 rt = TaskRuntime(source, Dispatcher(source, ProgressEngine(
-    flush_threshold=8, inflight_window="trailer")), default_timeout=120.0)
+    flush_threshold=8, inflight_window="trailer"), obs=obs),
+    default_timeout=120.0)
 relax_h = register_ifunc(source, "graph_relax")
 fetch_h = register_ifunc(source, "graph_fetch")
 degree_h = register_ifunc(source, "graph_degree")
@@ -251,5 +257,9 @@ print(f"placement: {decisions}, rebalanced={moves}, "
       f"engine={engine.stats}")
 print("per-peer stats:")
 rt.dispatcher.print_stats()
+if _trace_out:
+    doc = obs.tracer.export_chrome(_trace_out)
+    print(f"trace: {len(doc['traceEvents'])} events "
+          f"({obs.tracer.open_count()} open) -> {_trace_out}")
 print("GRAPH_OK")
 sys.exit(0)

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import Context, register_ifunc
 from repro.core.codegen import deserialize_uvm
+from repro.obs import Obs
 from repro.transport import Dispatcher, LoopbackFabric, ProgressEngine, RdmaFabric
 from repro.transport.device_fabric import DeviceMeshFabric
 
@@ -54,8 +55,11 @@ from repro.parallel.sharding import make_mesh
 n_dev = len(jax.devices())
 mesh = make_mesh((n_dev,), ("model",))
 
+obs = Obs("multi_peer", trace=True)       # spans on: this smoke also gates
+#                                           the telemetry layer (OBS_OK)
 dispatcher = Dispatcher(source, ProgressEngine(flush_threshold=8,
-                                               inflight_window="trailer"))
+                                               inflight_window="trailer"),
+                        obs=obs)
 dispatcher.set_coalescing(True, max_subs=16)
 host_args = lambda: {"externals": {"W": W}, "results": []}
 for name in ("rdma_a", "rdma_b"):
@@ -170,8 +174,42 @@ for name, peer in dispatcher.peers.items():
     leftover = sum(len(q.subs) for q in peer.coalesce.values())
     if leftover:
         failures.append(f"{name}: {leftover} coalesced records undrained")
+# --- observability: metrics snapshot + Perfetto trace -----------------------
+snap = obs.snapshot()
+rtt = obs.rtt_hist
+print(f"metrics: {len(snap['counters'])} counters, "
+      f"{len(snap['histograms'])} histograms; deliver_us count={rtt.count} "
+      f"p50={rtt.quantile(0.5)} p99={rtt.quantile(0.99)}")
+trace_path = pathlib.Path(__file__).resolve().parent / "multi_peer_trace.json"
+doc = obs.tracer.export_chrome(trace_path)
+spans = obs.tracer.spans()
+wire_spans = obs.tracer.spans(cat="wire")
+print(f"trace: {len(doc['traceEvents'])} events ({len(spans)} spans, "
+      f"{len(wire_spans)} wire) -> {trace_path.name}")
+
+# OBS_OK contract: tracing actually recorded spans, every wire span closed
+# (no orphans — a put without a poll outcome is a lifecycle bug), the
+# counters saw the traffic the legacy stats saw, and a recorder ring of
+# recent transport events exists for a postmortem.
+if not spans:
+    failures.append("obs: no spans recorded with tracing on")
+if obs.tracer.open_count():
+    failures.append(f"obs: {obs.tracer.open_count()} orphan (unclosed) "
+                    f"spans: {[s.name for s in obs.tracer.open_spans()][:8]}")
+sent_metric = sum(v for k, v in snap["counters"].items()
+                  if k.startswith("peer.") and k.endswith(".sent"))
+sent_stats = sum(p.stats["sent"] for p in dispatcher.peers.values())
+if sent_metric != sent_stats:
+    failures.append(f"obs: registry sees {sent_metric} sends, "
+                    f"peer stats say {sent_stats}")
+if rtt.count == 0:
+    failures.append("obs: deliver_us histogram empty after a fan-out")
+if len(obs.recorder) == 0:
+    failures.append("obs: flight recorder empty after transport traffic")
+
 if failures:
     print("MULTI_PEER_FAILED:" + "; ".join(failures))
     raise SystemExit(1)
 print("MULTI_PEER_OK")
 print("AGG_OK")
+print("OBS_OK")

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import Context, register_ifunc
 from repro.flow import Flow, FlowEngine
+from repro.obs import Obs
 from repro.tasks.graph import pack_csr_shard
 from repro.tasks.wire import RemoteExecutionError
 from repro.transport import LoopbackFabric, RdmaFabric
@@ -61,7 +62,9 @@ BATCHES = 6
 CONGEST_BATCH = 3
 
 origin = Context("host")
-eng = FlowEngine(origin, default_timeout=60.0)
+obs = Obs("storage_pipeline", trace=True)   # one bundle for the whole
+#                                             topology: peers = swimlanes
+eng = FlowEngine(origin, default_timeout=60.0, obs=obs)
 eng.add_node("csd", LoopbackFabric(), slot_size=256 << 10)
 eng.add_node("dpu_a", RdmaFabric(), slot_size=256 << 10)
 eng.add_node("dpu_b", RdmaFabric(), slot_size=256 << 10)
@@ -216,4 +219,41 @@ print(f"host sent {host['sent']} frames for "
 print("per-node flow stats:")
 eng.print_stats()
 print("FLOW_OK")
+
+# --- observability: the chain's life as a cross-peer trace -------------------
+snap = obs.snapshot()
+trace_path = pathlib.Path(__file__).resolve().parent / "storage_trace.json"
+obs.tracer.export_chrome(trace_path)
+import json
+with open(trace_path) as f:
+    doc = json.load(f)                    # valid Chrome trace_event JSON
+assert doc["traceEvents"], "empty trace export"
+flow_spans = obs.tracer.spans(cat="flow")
+chain_spans = obs.tracer.spans(cat="chain")
+stage_names = {s.name for s in flow_spans}
+# every flow stage must appear as a span with ifunc@peer attribution, on
+# the lane of the peer that actually ran it
+for want in ("csd_decompress@csd", "host_aggregate@agg", "flow_reduce@agg"):
+    assert want in stage_names, (want, sorted(stage_names))
+assert "dpu_filter@dpu_a" in stage_names or "dpu_filter@dpu_b" in stage_names, \
+    sorted(stage_names)
+for s in flow_spans:
+    assert s.actor == s.name.split("@", 1)[1], (s.name, s.actor)
+# chains: one end-to-end span per submitted flow, all of them closed
+assert len(chain_spans) == eng.stats["submitted"], (
+    len(chain_spans), eng.stats["submitted"])
+assert obs.tracer.open_count() == 0, (
+    f"orphan spans: {[s.name for s in obs.tracer.open_spans()][:8]}")
+# the streamed bulk load shows up chunk by chunk at the aggregator
+chunk_spans = [s for s in obs.tracer.spans(cat="stream")
+               if s.name.startswith("chunk:")]
+assert len(chunk_spans) >= n_chunks, (len(chunk_spans), n_chunks)
+rtt = obs.rtt_hist
+print(f"metrics: {len(snap['counters'])} counters; deliver_us "
+      f"count={rtt.count} p50={rtt.quantile(0.5)} p99={rtt.quantile(0.99)}; "
+      f"exec_us count={obs.exec_hist.count}")
+print(f"trace: {len(doc['traceEvents'])} events, {len(flow_spans)} flow "
+      f"stage spans, {len(chain_spans)} chains, {len(chunk_spans)} stream "
+      f"chunks -> {trace_path.name}")
+print("OBS_OK")
 sys.exit(0)

@@ -76,10 +76,14 @@ class Context:
     #                     recent FLAG_AGG frame this ctx consumed (set by
     #                     poll_ifunc, harvested by Mailbox.sweep into
     #                     Mailbox.last_agg for the dispatcher's completion)
+    obs: object = None                       # repro.obs.Obs bundle (installed
+    #                     by the dispatcher's add_peer so target-side exec
+    #                     spans land in the same trace as source-side puts)
     _agg_policy_ok: set = field(default_factory=set)   # memoized (name, kind)
     #                     pairs the policy already cleared (pure check)
     stats: dict = field(default_factory=lambda: {
-        "executed": 0, "rejected": 0, "links": 0, "bytes_in": 0, "nacks": 0})
+        "executed": 0, "rejected": 0, "links": 0, "bytes_in": 0, "nacks": 0,
+        "streams": 0, "stream_chunks": 0, "agg_errors": 0, "flow_errors": 0})
 
     def __post_init__(self):
         if self.nic is None:
@@ -427,7 +431,7 @@ def _run_agg(ctx: Context, batch, target_args) -> list[AggSubResult]:
         except Exception as e:          # raised *inside* the ifunc: poisoned
             out[i] = AggSubResult(Status.OK, names[name_idx[i]],
                                   batch.digest(i), corrs[i], error=e)
-            stats["agg_errors"] = stats.get("agg_errors", 0) + 1
+            stats["agg_errors"] += 1
             i += 1
     if executed:
         stats["executed"] += executed
@@ -589,12 +593,23 @@ def _poll_stream(ctx: Context, buf, hdr: F.FrameHeader, target_args,
                     F.clear_frame(buf, hdr)
                 return opened
             rx = streams[key] = opened
+            o = ctx.obs
+            if o is not None and o.enabled and o.tracer.enabled:
+                o.tracer.instant(
+                    f"stream_open:{hdr.name}@{ctx.name}", cat="stream",
+                    actor=ctx.name, corr=hdr.corr_id or None,
+                    chunks=opened.desc.n_chunks,
+                    bytes=opened.desc.total_len,
+                    mode="buffer" if opened.assembly is not None else "exec")
         desc = rx.desc
         mv = buf if isinstance(buf, memoryview) else memoryview(buf)
         cells = hdr.payload_offset + F.STREAM_DESC_LEN
         is_dict = isinstance(target_args, dict)
         consumed0 = rx.next_seq
         stats = ctx.stats
+        o = ctx.obs
+        tr = (o.tracer if o is not None and o.enabled and o.tracer.enabled
+              else None)               # per-chunk spans: tracing runs only
         try:
             while rx.next_seq < desc.n_chunks:
                 seq = rx.next_seq
@@ -616,6 +631,10 @@ def _poll_stream(ctx: Context, buf, hdr: F.FrameHeader, target_args,
                 elif comp_len != raw_len:
                     raise F.FrameError(f"raw chunk {seq} length mismatch "
                                        f"({comp_len} != {raw_len})")
+                sp = (tr.begin(f"chunk:{hdr.name}[{seq}]@{ctx.name}",
+                               cat="stream", actor=ctx.name,
+                               corr=hdr.corr_id or None, bytes=raw_len)
+                      if tr is not None else None)
                 if rx.assembly is None:
                     if is_dict:
                         target_args["stream"] = {
@@ -623,23 +642,42 @@ def _poll_stream(ctx: Context, buf, hdr: F.FrameHeader, target_args,
                             "offset": chunk_off, "total_len": desc.total_len,
                             "raw_len": raw_len,
                             "last": seq == desc.n_chunks - 1}
-                    rx.fn(data, raw_len, target_args)   # raise -> propagate
+                    try:
+                        rx.fn(data, raw_len, target_args)  # raise: propagate
+                    finally:
+                        if sp is not None:
+                            tr.end(sp, mode="exec")
                 else:
                     rx.assembly[chunk_off:chunk_off + raw_len] = data
+                    if sp is not None:
+                        tr.end(sp, mode="buffer")
                 rx.next_seq += 1
         finally:
             if rx.next_seq != consumed0:
-                stats["stream_chunks"] = (stats.get("stream_chunks", 0)
-                                          + rx.next_seq - consumed0)
+                stats["stream_chunks"] += rx.next_seq - consumed0
         if rx.next_seq < desc.n_chunks:
             return Status.IN_PROGRESS
         if rx.assembly is not None:
-            rx.fn(memoryview(rx.assembly), desc.total_len, target_args)
+            if o is not None and o.enabled:
+                t0 = time.perf_counter()
+                sp = (tr.begin(f"exec:{hdr.name}@{ctx.name}", cat="exec",
+                               actor=ctx.name, corr=hdr.corr_id or None,
+                               bytes=desc.total_len)
+                      if tr is not None else None)
+                try:
+                    rx.fn(memoryview(rx.assembly), desc.total_len,
+                          target_args)
+                finally:
+                    o.exec_hist.observe((time.perf_counter() - t0) * 1e6)
+                    if tr is not None:
+                        tr.end(sp)
+            else:
+                rx.fn(memoryview(rx.assembly), desc.total_len, target_args)
         elif is_dict:
             target_args.pop("stream", None)
         stats["executed"] += 1
         stats["bytes_in"] += hdr.frame_len + desc.total_len
-        stats["streams"] = stats.get("streams", 0) + 1
+        stats["streams"] += 1
         streams.pop(key, None)
         if clear:
             F.clear_frame(buf, hdr)
@@ -696,7 +734,19 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
             # run every record in a single pass; per-record outcomes land
             # in ctx.last_agg_results for the transport completion.
             batch = F.parse_agg(payload)         # FrameError -> REJECTED
-            results = _run_agg(ctx, batch, target_args)
+            o = ctx.obs
+            if o is not None and o.enabled:
+                t0 = time.perf_counter()
+                sp = (o.tracer.begin(f"exec:agg@{ctx.name}", cat="exec",
+                                     actor=ctx.name, subs=batch.n)
+                      if o.tracer.enabled else None)
+                try:
+                    results = _run_agg(ctx, batch, target_args)
+                finally:
+                    o.exec_hist.observe((time.perf_counter() - t0) * 1e6)
+                    o.tracer.end(sp)
+            else:
+                results = _run_agg(ctx, batch, target_args)
             ctx.last_agg_results = results
             ctx.stats["bytes_in"] += hdr.frame_len
             if clear:
@@ -749,7 +799,21 @@ def poll_ifunc(ctx: Context, buffer, buffer_size: int | None, target_args,
                 F.scrub_slot(buf)
             return Status.REJECTED
     else:
-        fn(payload, len(payload), target_args)
+        o = ctx.obs
+        if o is not None and o.enabled:
+            t0 = time.perf_counter()
+            sp = (o.tracer.begin(f"exec:{hdr.name}@{ctx.name}", cat="exec",
+                                 actor=ctx.name, corr=hdr.corr_id or None)
+                  if o.tracer.enabled else None)
+            try:
+                fn(payload, len(payload), target_args)
+            finally:
+                # the span closes even when the ifunc raises (poisoned
+                # slot): the exception's flight is visible in the trace
+                o.exec_hist.observe((time.perf_counter() - t0) * 1e6)
+                o.tracer.end(sp)
+        else:
+            fn(payload, len(payload), target_args)
         ctx.stats["executed"] += 1
     ctx.stats["bytes_in"] += hdr.frame_len
     if clear:

@@ -40,6 +40,7 @@ from repro.core import Context, register_ifunc
 from repro.core import frame as F
 from repro.flow import descriptor as D
 from repro.flow.node import FlowNode
+from repro.obs import Obs
 from repro.tasks import wire
 from repro.tasks.future import Future
 from repro.transport import ProgressEngine, TransportError
@@ -133,10 +134,16 @@ class FlowEngine:
     def __init__(self, ctx: Context, *, engine: ProgressEngine | None = None,
                  default_timeout: float | None = 60.0,
                  n_slots: int = 8, slot_size: int = 64 << 10,
-                 coalesce: bool = False):
+                 coalesce: bool = False, obs: Obs | None = None):
         self.ctx = ctx
         self.pe = engine if engine is not None else ProgressEngine(
             flush_threshold=8, inflight_window="trailer")
+        #: ONE obs bundle for the whole flow topology: every node's
+        #: dispatcher and context share it, so one Perfetto export shows
+        #: the chain hopping across the peers' swimlanes
+        self.obs = obs if obs is not None else Obs("flow")
+        if getattr(self.pe, "obs", None) is None:
+            self.pe.obs = self.obs
         self.default_timeout = default_timeout
         #: coalesced forwarding: every node's dispatcher aggregates
         #: cache-warm continuation forwards (frame v2.3 FLAG_AGG), so a
@@ -153,6 +160,7 @@ class FlowEngine:
         self._gid = 0
         self.stats = {"submitted": 0, "completed": 0, "errors": 0,
                       "orphan_replies": 0, "reply_rejects": 0}
+        self.obs.metrics.register_dict("flow", self.stats)
         # the origin is a node like any other, so chains may route through
         # (or even end at) the submitting host; its 'fabric' to itself is
         # the loopback bus
@@ -173,6 +181,9 @@ class FlowEngine:
                 "has no continuation hook (host tiers only)")
         if ctx is None:
             ctx = Context(name, lib_dir=self.ctx.lib_dir)
+        if getattr(ctx, "obs", None) is None:
+            ctx.obs = self.obs      # target-side exec/sweep metrics land
+            #                         in the same bundle as the chain spans
         node = FlowNode(self, name, ctx, fabric,
                         n_slots=n_slots, slot_size=slot_size)
         self.nodes[name] = node
@@ -227,11 +238,26 @@ class FlowEngine:
         fut = Future(self, corr, peer, flow.label)
         self.futures[corr] = fut
         self.stats["submitted"] += 1
+        tr = self.obs.tracer
+        sp = None
+        if tr.enabled:
+            # the chain's end-to-end span on the origin lane; each hop's
+            # stage spans (cat "flow", same corr) nest across peer lanes
+            sp = tr.begin(f"chain:{flow.label}", cat="chain",
+                          actor=self.ctx.name, corr=corr,
+                          route=peer, stages=len(entries))
+
+            def _close(f, _sp=sp, _tr=tr):
+                if _sp.dur is None:
+                    _tr.end(_sp, state=f.state.name)
+            fut.add_done_callback(_close)
         try:
             self.origin.continue_chain(D.Chain(self.ctx.name, corr, entries),
                                        args)
         except BaseException:
             self.futures.pop(corr, None)
+            if sp is not None and sp.dur is None:
+                tr.end(sp, state="SUBMIT_ERROR")
             raise
         return fut
 

@@ -36,7 +36,10 @@ class FlowNode:
         self.ctx = ctx
         self.fabric = fabric
         self.n_slots, self.slot_size = n_slots, slot_size
-        self.dispatcher = Dispatcher(ctx, engine.pe)
+        # every node's dispatcher shares the flow engine's obs bundle:
+        # one trace, peers as swimlanes
+        self.dispatcher = Dispatcher(ctx, engine.pe,
+                                     obs=getattr(engine, "obs", None))
         if getattr(engine, "coalesce", False):
             # forwards ride the coalescing queue: a scatter fanning N
             # branches through the same downstream peer ships them as ONE
@@ -50,7 +53,9 @@ class FlowNode:
         self._pricer = None
         self.stats = {"forwards": 0, "gather_buffered": 0,
                       "gather_reduced": 0, "replies": 0, "errors": 0,
-                      "deferred": 0}
+                      "deferred": 0, "gather_orphans": 0}
+        self.obs = self.dispatcher.obs
+        self.obs.metrics.register_dict(f"node.{name}", self.stats)
         ctx.flow = self                 # install the poll_ifunc hook
         # flow inboxes are drained by the engine's poll crank, not by a
         # dedicated spinning consumer: a mid-put frame (header landed,
@@ -138,11 +143,19 @@ class FlowNode:
             return
         if isinstance(target_args, dict):
             target_args.pop("result", None)
+        tr = self.obs.tracer
+        sp = (tr.begin(f"{hdr.name}@{self.name}", cat="flow",
+                       actor=self.name, corr=chain.corr)
+              if tr.enabled else None)
         try:
             fn(payload, len(payload), target_args)
         except Exception as e:          # stage failed: short-circuit to origin
+            if sp is not None:
+                tr.end(sp, status="error", error=type(e).__name__)
             self._short_circuit(chain, e, f"{hdr.name}@{self.name}")
             return
+        if sp is not None:
+            tr.end(sp, status="ok")
         ctx.stats["executed"] += 1
         value = (target_args.get("result")
                  if isinstance(target_args, dict) else None)
@@ -155,8 +168,7 @@ class FlowNode:
             # sibling branch to the origin, or the caller cancelled): a
             # late arrival must not resurrect rendezvous state that
             # engine._cleanup dropped — it could never fill
-            self.stats["gather_orphans"] = (
-                self.stats.get("gather_orphans", 0) + 1)
+            self.stats["gather_orphans"] += 1
             return
         key = (chain.corr, g.gid)
         st = self.gathers.setdefault(key, {"expect": g.expect, "chunks": {}})
@@ -169,11 +181,20 @@ class FlowNode:
             [st["chunks"][i] for i in sorted(st["chunks"])])
         if isinstance(target_args, dict):
             target_args.pop("result", None)
+        tr = self.obs.tracer
+        sp = (tr.begin(f"{g.ifunc}@{self.name}", cat="flow",
+                       actor=self.name, corr=chain.corr,
+                       gather=st["expect"])
+              if tr.enabled else None)
         try:
             fn(combined, len(combined), target_args)
         except Exception as e:
+            if sp is not None:
+                tr.end(sp, status="error", error=type(e).__name__)
             self._short_circuit(chain, e, g.label)
             return
+        if sp is not None:
+            tr.end(sp, status="ok")
         self.ctx.stats["executed"] += 1
         self.stats["gather_reduced"] += 1
         value = (target_args.get("result")
@@ -261,9 +282,10 @@ class FlowNode:
                        hop_label: str) -> None:
         """A failed stage kills the whole chain: ERR reply straight to the
         origin, carrying the failing hop."""
-        self.ctx.stats["flow_errors"] = (
-            self.ctx.stats.get("flow_errors", 0) + 1)
+        self.ctx.stats["flow_errors"] += 1
         self.stats["errors"] += 1
+        self.obs.record("flow_error", self.name,
+                        f"corr={chain.corr} hop={hop_label}")
         self.engine.post_reply(self, chain, exc, is_err=True, hop=hop_label)
 
     def summary(self) -> str:

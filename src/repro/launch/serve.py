@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import Obs, delta
 from repro.train import serve as SRV
 
 TINY = ModelConfig(name="serve-tiny", family="dense", num_layers=4, d_model=128,
@@ -44,7 +45,8 @@ class Request:
 class Server:
     """Fixed-slot continuous batcher (B slots, one sequence each)."""
 
-    def __init__(self, cfg: ModelConfig, params, batch_slots: int, cache_len: int):
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 cache_len: int, *, obs: Obs | None = None):
         self.cfg, self.params = cfg, params
         self.B, self.W = batch_slots, cache_len
         self.cache = T.init_cache(cfg, batch_slots, cache_len)
@@ -53,6 +55,15 @@ class Server:
         self.tokens = np.zeros((batch_slots, 1), np.int32)
         self._decode = jax.jit(SRV.make_decode_step(cfg), donate_argnums=1)
         self._prefill = jax.jit(SRV.make_prefill_step(cfg))
+        # pass the transport's bundle in to get one unified snapshot
+        # (ingest counters + serving counters); standalone default works too
+        self.obs = obs if obs is not None else Obs("server")
+        m = self.obs.metrics
+        self.admit_hist = m.histogram("serve.admit_us")
+        self._admitted = m.counter("serve.admitted")
+        self._decoded = m.counter("serve.decoded")
+        self._admit_full = m.counter("serve.admit_full")
+        self._wave_snap = self.obs.snapshot()
 
     def admit(self, req: Request) -> bool:
         """Wave batching: sequences in a wave advance in lockstep (shared
@@ -61,7 +72,9 @@ class Server:
         extension; the batching/cache plumbing here is identical."""
         free = [s for s in range(self.B) if s not in self.active]
         if not free:
+            self._admit_full.inc()
             return False
+        t0 = time.perf_counter()
         slot = free[0]
         # prefill the prompt into a fresh single-slot cache, splice it in
         cache1, last = self._prefill(self.params, {"tokens": req.prompt[None]})
@@ -81,6 +94,8 @@ class Server:
         self.pos[slot] = len(req.prompt)
         self.active[slot] = req
         req.out.append(int(self.tokens[slot, 0]))
+        self._admitted.inc()
+        self.admit_hist.observe((time.perf_counter() - t0) * 1e6)
         return True
 
     def tick(self) -> int:
@@ -100,7 +115,28 @@ class Server:
             emitted += 1
             if len(req.out) >= req.max_new:
                 del self.active[slot]
+        self._decoded.inc(emitted)
         return emitted
+
+    # -- observability -------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Full registry snapshot (serving counters, admission latency
+        histogram, and — when the transport's bundle was passed in —
+        ingest/dispatch counters), JSON-serializable."""
+        return self.obs.snapshot()
+
+    def wave_summary(self) -> str:
+        """One line covering activity since the previous call: requests
+        admitted, tokens decoded, and the p50/p99 admission latency."""
+        cur = self.obs.snapshot()
+        d = delta(cur, self._wave_snap)["counters"]
+        self._wave_snap = cur
+        h = self.admit_hist
+        return (f"wave: admitted={d.get('serve.admitted', 0)} "
+                f"decoded={d.get('serve.decoded', 0)} "
+                f"active={len(self.active)}/{self.B} "
+                f"admit_us p50={h.quantile(0.5)} p99={h.quantile(0.99)}")
 
 
 class IfuncFrontend:
@@ -165,9 +201,11 @@ def main():
         str(pathlib.Path(__file__).resolve().parents[3] / "ifunc_libs"))
     cfg = TINY
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    srv = Server(cfg, params, args.slots, args.cache)
     server_ctx = Context("server")
     fe = IfuncFrontend(server_ctx)
+    # ONE bundle across frontend transport + batcher: the final snapshot
+    # shows ingest (peer/dispatcher counters) and serving side by side
+    srv = Server(cfg, params, args.slots, args.cache, obs=fe.rt.obs)
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32),
                     max_new=args.steps) for i in range(args.slots + 2)]
@@ -185,10 +223,14 @@ def main():
             acks.append(fut)
             unsubmitted.pop(0)
         pending.extend(fe.server_poll())
+        admitted_now = 0
         while pending and srv.admit(pending[0]):
             req = pending.pop(0)
             done[req.rid] = req
+            admitted_now += 1
         total += srv.tick()
+        if admitted_now:
+            print(" ", srv.wave_summary())
     dt = time.time() - t0
     acked = [f.result(timeout=10.0) for f in acks]
     assert all(a["queued"] for a in acked), acked
@@ -205,6 +247,13 @@ def main():
           f"delivered={stats['delivered']} backpressure={stats['backpressure']} "
           f"replies={stats['replies']} via {stats['bytes']}B of ifunc frames "
           f"(oldest in-flight {stats['oldest_inflight_s']:.3f}s)")
+    snap = srv.metrics()
+    h = srv.admit_hist
+    print(f"metrics: admitted={snap['counters']['serve.admitted']} "
+          f"decoded={snap['counters']['serve.decoded']} "
+          f"admit_us p50={h.quantile(0.5)} p99={h.quantile(0.99)} "
+          f"({len(snap['counters'])} counters, "
+          f"{len(snap['histograms'])} histograms in the registry)")
     for rid in sorted(done)[:2]:
         r = done[rid]
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out[:args.steps]}")

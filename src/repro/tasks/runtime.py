@@ -26,6 +26,8 @@ the graph workload (``examples/graph_analysis.py``) sit on.
 
 from __future__ import annotations
 
+import time
+
 from repro.tasks import wire
 from repro.tasks.future import Future, TaskState, TaskTimeout, wait_all
 from repro.transport import (DEFAULT_N_SLOTS, DEFAULT_SLOT_SIZE, Dispatcher,
@@ -51,6 +53,8 @@ class TaskRuntime:
         self.default_timeout = default_timeout
         self.stats = {"submitted": 0, "resolved": 0, "errors": 0,
                       "orphan_replies": 0, "local_runs": 0}
+        self.obs = self.dispatcher.obs
+        self.obs.metrics.register_dict("runtime", self.stats)
 
     # -- topology -----------------------------------------------------------
 
@@ -78,6 +82,25 @@ class TaskRuntime:
 
     # -- task dispatch ------------------------------------------------------
 
+    def _begin_submit(self, fut: Future, peer: str, name: str):
+        """Open the task's submit span (tracing runs only) and arm its
+        close on the future's resolution — whichever path resolves it
+        (reply, coalesced agg reply, fail_inflight, cancel), the span
+        ends, which is what makes the every-submit-span-closed trace
+        invariant hold."""
+        tr = self.obs.tracer
+        if not tr.enabled:
+            return None
+        sp = tr.begin(f"task:{name}@{peer}", cat="task",
+                      actor=getattr(self.ctx, "name", "source"),
+                      corr=fut.corr_id)
+
+        def _close(f, _sp=sp, _tr=tr):
+            if _sp.dur is None:          # refused submits end theirs early
+                _tr.end(_sp, state=f.state.name)
+        fut.add_done_callback(_close)
+        return sp
+
     def submit(self, peer: str, handle, source_args,
                source_args_size: int | None = None, *,
                wait_credits: bool = True,
@@ -96,6 +119,7 @@ class TaskRuntime:
         corr = self._corr
         fut = Future(self, corr, peer, handle.name)
         self.futures[corr] = fut
+        sp = self._begin_submit(fut, peer, handle.name)
         rounds = 0
         try:
             while not self.dispatcher.send_ifunc(
@@ -103,6 +127,8 @@ class TaskRuntime:
                     corr_id=corr, future=fut):
                 if not wait_credits:
                     del self.futures[corr]
+                    if sp is not None and sp.dur is None:
+                        self.obs.tracer.end(sp, state="REFUSED")
                     return None
                 self.progress()
                 rounds += 1
@@ -115,6 +141,8 @@ class TaskRuntime:
             # credit starvation, an ifunc error surfacing mid-progress):
             # unregister so the dict cannot accumulate dead futures
             self.futures.pop(corr, None)
+            if sp is not None and sp.dur is None:
+                self.obs.tracer.end(sp, state="SUBMIT_ERROR")
             raise
         self.stats["submitted"] += 1
         return fut
@@ -146,6 +174,11 @@ class TaskRuntime:
             corrs.append(self._corr)
         sent = d.send_ifunc_many(peer, handle, args_list,
                                  corr_ids=corrs, futures=futs)
+        if self.obs.tracer.enabled:
+            # spans open only for the accepted prefix — the refused tail's
+            # futures are discarded below and would orphan theirs
+            for i in range(sent):
+                self._begin_submit(futs[i], peer, handle.name)
         self.stats["submitted"] += sent
         # refused tail: unregister ALL the bulk futures first (if a
         # resubmit below raises, nothing stays registered that never went
@@ -212,6 +245,10 @@ class TaskRuntime:
         if fut is None:                      # duplicate / expired corr-id
             self.stats["orphan_replies"] += 1
             return
+        o = self.obs
+        if o.enabled:
+            o.reply_hist.observe(
+                (time.monotonic() - fut.submitted_at) * 1e6)
         if not decoded and not isinstance(value, wire.RemoteExecutionError):
             try:
                 value = wire.decode(value)

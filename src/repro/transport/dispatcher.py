@@ -116,12 +116,22 @@ from collections import deque
 from dataclasses import dataclass, field, replace
 
 from repro.core import frame as F
+from repro.obs import Obs
 from repro.transport import codec as WC
 from repro.transport.fabric import Fabric, TransportError
 from repro.transport.progress import ProgressEngine
 
 DEFAULT_SLOT_SIZE = 64 << 10
 DEFAULT_N_SLOTS = 8
+
+#: the full per-peer stats schema, seeded at construction (and by
+#: ``Peer.reset_stats``) so ``per_peer_stats()`` always returns the same
+#: keys — increment sites do plain ``+= 1``, never ``.get(k, 0)``
+_PEER_STAT_KEYS = (
+    "sent", "bytes", "delivered", "rejected", "backpressure",
+    "inflight_polls", "slim_sent", "nacks", "resent", "replies", "errors",
+    "coalesced", "agg_sent", "agg_subs", "agg_replies", "agg_harvest_lost",
+    "nack_lost", "reply_rejects", "streams", "stream_chunks", "timed_out")
 
 _API = None      # repro.core.api, imported lazily (it imports codegen —
 #                  the transport layer must stay importable without it)
@@ -153,6 +163,8 @@ class _TxRec:
     subs: list | None = None
     stream: object = None   # _StreamTx when this slot holds a FLAG_STREAM
     #                         frame (the pump's source-side state)
+    span: object = None     # open obs wire span (tracing runs only): put ->
+    #                         delivery confirmation / NACK / reject
 
 
 @dataclass(slots=True)
@@ -286,12 +298,14 @@ class Peer:
     reply_mailbox: object = None   # source-owned ring the target replies into
     reply_channel: object = None   # target->source path into it
     reply_tail: int = 0            # target-side produce index for replies
-    stats: dict = field(default_factory=lambda: {
-        "sent": 0, "bytes": 0, "delivered": 0, "rejected": 0,
-        "backpressure": 0, "inflight_polls": 0,
-        "slim_sent": 0, "nacks": 0, "resent": 0,
-        "replies": 0, "errors": 0,
-        "coalesced": 0, "agg_sent": 0, "agg_subs": 0})
+    stats: dict = field(
+        default_factory=lambda: dict.fromkeys(_PEER_STAT_KEYS, 0))
+
+    def reset_stats(self) -> None:
+        """Zero every counter in place (the dict identity is aliased into
+        the obs registry and shared with callers — never replace it)."""
+        for k in _PEER_STAT_KEYS:
+            self.stats[k] = 0
 
     @property
     def credits(self) -> int:
@@ -343,13 +357,23 @@ class Dispatcher:
     """One source fanning ifunc frames out to heterogeneous targets."""
 
     def __init__(self, src_ctx=None, engine: ProgressEngine | None = None, *,
-                 coalesce: bool = False):
+                 coalesce: bool = False, obs: Obs | None = None):
         self.src_ctx = src_ctx
         self.engine = engine if engine is not None else ProgressEngine()
         self.peers: dict[str, Peer] = {}
         self._rr = 0             # fairness cursor over (peer, ring) lanes
         self.stats = {"sent": 0, "polled": 0, "poll_rounds": 0, "nacks": 0,
-                      "replies": 0, "reply_dropped": 0}
+                      "replies": 0, "reply_dropped": 0, "agg_sent": 0,
+                      "streams": 0, "timed_out": 0}
+        # observability bundle: counters + flight recorder by default,
+        # span tracing when the caller opted in (Obs(trace=True)).  One
+        # bundle is shared across the dispatcher, its engine, and every
+        # peer's target context, so cross-peer traces land in one file.
+        self.obs = obs if obs is not None else Obs("dispatcher")
+        self.obs.metrics.register_dict("dispatcher", self.stats)
+        if getattr(self.engine, "obs", None) is None:
+            self.engine.obs = self.obs
+            self.obs.metrics.register_dict("engine", self.engine.stats)
         # task-runtime hooks (see repro.tasks): the router receives
         # (corr_id, name, value, is_err, decoded); the codec provides
         # encode(value)->bytes / encode_error(exc)->bytes for reply frames
@@ -451,6 +475,13 @@ class Dispatcher:
             peer.rings.append(RingState(mb, ch))
         peer.stripe = stripe and rings > 1
         self.peers[name] = peer
+        self.obs.metrics.register_dict(f"peer.{name}", peer.stats)
+        if (target_ctx is not None
+                and getattr(target_ctx, "obs", None) is None
+                and hasattr(target_ctx, "obs")):
+            # share the bundle with the target side: execute/sweep spans
+            # land in the same trace as the source's put spans
+            target_ctx.obs = self.obs
         return peer
 
     def attach_reply_ring(self, name: str, mailbox, channel) -> None:
@@ -517,6 +548,13 @@ class Dispatcher:
         lane = max(lanes, key=lambda r: r.credits)
         return lane if lane.credits > 0 else None
 
+    def _bp(self, peer: Peer) -> None:
+        """Count (and flight-record) one backpressure event."""
+        peer.stats["backpressure"] += 1
+        if self.obs.enabled:
+            self.obs.recorder.add("backpressure", peer.name,
+                                  f"credits={peer.credits}")
+
     @staticmethod
     def _check_ring_kw(peer: Peer, ring: int | None) -> None:
         if ring is not None and peer.stripe:
@@ -526,6 +564,19 @@ class Dispatcher:
 
     def _post_view(self, peer: Peer, lane: RingState, view, rec, on_complete,
                    future=None):
+        o = self.obs
+        if o.enabled and rec is not None:
+            o.recorder.add("put", peer.name,
+                           f"{rec.name} corr={rec.corr_id} {len(view)}B"
+                           f"{' slim' if rec.slim else ''}")
+            if (o.tracer.enabled and rec.span is None
+                    and peer.fabric.kind != "device"):
+                # the wire span: post -> delivery confirmation (poll OK),
+                # NACK, or reject — ended where the inflight record pops
+                rec.span = o.tracer.begin(
+                    f"put:{rec.name}@{peer.name}", cat="wire",
+                    actor=getattr(self.src_ctx, "name", "source"),
+                    corr=rec.corr_id or None, bytes=len(view))
         self.engine.post(lane.channel, view, lane.tail, peer=peer.name,
                          on_complete=on_complete, future=future)
         if rec is not None and peer.fabric.kind != "device":
@@ -590,6 +641,7 @@ class Dispatcher:
             if lane is None:
                 return False
             msg = peer.resend.popleft()
+            o = self.obs
             if isinstance(msg, _StreamResend):
                 # NACKed SLIM stream: re-open FULL from chunk 0 under a
                 # fresh nonce (the miss surfaced at the descriptor, before
@@ -597,14 +649,28 @@ class Dispatcher:
                 # the dead open's still-racing chunk puts unmistakable)
                 tx = msg.tx
                 tx.desc = replace(tx.desc, nonce=self._next_nonce())
+                if o.enabled:
+                    o.recorder.add("resend", peer.name,
+                                   f"stream {tx.handle.lib.name} "
+                                   f"corr={tx.corr_id} FULL re-open")
                 self._open_stream(peer, lane, tx, slim=False)
                 peer.stats["resent"] += 1
                 continue
-            self._slab_post(peer, lane, msg.frame,
-                            _TxRec(msg.handle.lib.name,
-                                   msg.handle.lib.code_digest,
-                                   msg.handle, slim=False,
-                                   corr_id=getattr(msg, "corr_id", 0)))
+            rec = _TxRec(msg.handle.lib.name, msg.handle.lib.code_digest,
+                         msg.handle, slim=False,
+                         corr_id=getattr(msg, "corr_id", 0))
+            if o.enabled:
+                o.recorder.add("resend", peer.name,
+                               f"{rec.name} corr={rec.corr_id} FULL")
+                if o.tracer.enabled:
+                    # the retransmit is a child of the frame's logical
+                    # lifetime: same corr as the NACKed wire span, its own
+                    # interval under the "resend" category
+                    rec.span = o.tracer.begin(
+                        f"resend:{rec.name}@{peer.name}", cat="resend",
+                        actor=getattr(self.src_ctx, "name", "source"),
+                        corr=rec.corr_id or None)
+            self._slab_post(peer, lane, msg.frame, rec)
             peer.stats["resent"] += 1
         return True
 
@@ -721,16 +787,28 @@ class Dispatcher:
                                           future=tx.future)
             tx.next_send = desc.n_chunks
             peer.stats["bytes"] += wire + F.TRAILER_LEN
-            peer.stats["stream_chunks"] = (
-                peer.stats.get("stream_chunks", 0) + desc.n_chunks)
+            peer.stats["stream_chunks"] += desc.n_chunks
         else:
             self.engine.post_stream_open(lane.channel, slab[:prefix], flen,
                                          lane.tail, peer=peer.name,
                                          future=tx.future)
             peer.stats["bytes"] += prefix + F.TRAILER_LEN
-        lane.inflight[lane.tail] = _TxRec(lib.name, lib.code_digest,
-                                          tx.handle, slim,
-                                          corr_id=tx.corr_id, stream=tx)
+        rec = _TxRec(lib.name, lib.code_digest, tx.handle, slim,
+                     corr_id=tx.corr_id, stream=tx)
+        o = self.obs
+        if o.enabled:
+            o.recorder.add("stream_open", peer.name,
+                           f"{lib.name} corr={tx.corr_id} "
+                           f"{desc.total_len}B/{desc.n_chunks}ch"
+                           f"{' eager' if eager else ''}"
+                           f"{' slim' if slim else ''}")
+            if o.tracer.enabled:
+                rec.span = o.tracer.begin(
+                    f"stream:{lib.name}@{peer.name}", cat="stream",
+                    actor=getattr(self.src_ctx, "name", "source"),
+                    corr=tx.corr_id or None, bytes=desc.total_len,
+                    chunks=desc.n_chunks)
+        lane.inflight[lane.tail] = rec
         lane.tail += 1
         peer.stats["sent"] += 1
         if slim:
@@ -770,14 +848,14 @@ class Dispatcher:
         if total == 0:
             raise TransportError("cannot stream an empty payload")
         if not self._flush_resends(peer):
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         if not self._flush_coalesce_peer(peer):
-            peer.stats["backpressure"] += 1   # FIFO: queued records go first
+            self._bp(peer)                    # FIFO: queued records go first
             return False
         lane = self._pick_lane(peer, ring)
         if lane is None:
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         lib = handle.lib
         desc = self._stream_geometry(
@@ -787,8 +865,8 @@ class Dispatcher:
         tx = _StreamTx(handle, pv, desc, peer.codec, peer, lane, lane.tail,
                        0, corr_id=corr_id, future=future)
         self._open_stream(peer, lane, tx, slim=self._slim_ok(peer, lib))
-        peer.stats["streams"] = peer.stats.get("streams", 0) + 1
-        self.stats["streams"] = self.stats.get("streams", 0) + 1
+        peer.stats["streams"] += 1
+        self.stats["streams"] += 1
         self._pump_streams()
         return True
 
@@ -823,8 +901,7 @@ class Dispatcher:
                 tx.next_send += 1
                 posted += 1
                 peer.stats["bytes"] += len(hdr) + len(data) + len(seal)
-                peer.stats["stream_chunks"] = (
-                    peer.stats.get("stream_chunks", 0) + 1)
+                peer.stats["stream_chunks"] += 1
             if tx.next_send > before:
                 flushes[id(channel)] = channel
             if tx.next_send < desc.n_chunks:
@@ -875,7 +952,7 @@ class Dispatcher:
             q0 = peer.coalesce.get(ring)
             if (q0 is not None and len(q0.subs)
                     >= self._agg_max_subs * lane0.mailbox.n_slots):
-                peer.stats["backpressure"] += 1
+                self._bp(peer)
                 return False
         payload = self._materialize_payload(lib, source_args,
                                             source_args_size)
@@ -900,11 +977,11 @@ class Dispatcher:
             # bandwidth-bound record: aggregation buys nothing — ship it
             # as a plain SLIM singleton, after anything queued before it
             if not self._flush_coalesce_peer(peer, ring):
-                peer.stats["backpressure"] += 1
+                self._bp(peer)
                 return False
             lane = self._pick_lane(peer, ring)
             if lane is None:
-                peer.stats["backpressure"] += 1
+                self._bp(peer)
                 return False
             self._post_agg(peer, lane, [sub])
             return True
@@ -1079,7 +1156,7 @@ class Dispatcher:
                 peer.stats["agg_sent"] += 1
                 peer.stats["agg_subs"] += len(subs)
                 peer.stats["coalesced"] += len(subs)
-                self.stats["agg_sent"] = self.stats.get("agg_sent", 0) + 1
+                self.stats["agg_sent"] += 1
                 n += len(subs)
                 if stop:
                     break
@@ -1128,13 +1205,20 @@ class Dispatcher:
         slab = self.engine.slab_slot(lane.channel, lane.tail)
         n = F.seal_agg_frame(slab, subs, kind=subs[0].kind)
         futs = [s.future for s in subs if s.future is not None]
-        self._post_view(peer, lane, slab[:n],
-                        _TxRec(F.AGG_NAME, F.NO_DIGEST, None, slim=True,
-                               subs=list(subs)),
-                        None, futs or None)
+        rec = _TxRec(F.AGG_NAME, F.NO_DIGEST, None, slim=True,
+                     subs=list(subs))
+        o = self.obs
+        if o.tracer.enabled and peer.fabric.kind != "device":
+            # the container flush is its own span: the coalesced records'
+            # submit spans (tasks layer) nest around it by corr
+            rec.span = o.tracer.begin(
+                f"agg:{len(subs)}@{peer.name}", cat="agg",
+                actor=getattr(self.src_ctx, "name", "source"),
+                subs=len(subs), bytes=n)
+        self._post_view(peer, lane, slab[:n], rec, None, futs or None)
         peer.stats["agg_sent"] += 1
         peer.stats["agg_subs"] += len(subs)
-        self.stats["agg_sent"] = self.stats.get("agg_sent", 0) + 1
+        self.stats["agg_sent"] += 1
 
     @staticmethod
     def _split_budget(subs: list[_PendingSub], cap: int,
@@ -1188,7 +1272,7 @@ class Dispatcher:
             while posted < len(subs):
                 lane = self._pick_lane(peer, key)
                 if lane is None:
-                    peer.stats["backpressure"] += 1
+                    self._bp(peer)
                     ok = False
                     break
                 take = self._split_budget(subs[posted:], cap, max_subs)
@@ -1239,16 +1323,16 @@ class Dispatcher:
         peer = self.peers[peer_name]
         self._check_ring_kw(peer, ring)
         if not self._flush_resends(peer):
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         if not self._flush_coalesce_peer(peer):
             # queued coalesced records precede this frame in program order:
             # they must post first or per-peer FIFO breaks
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         lane = self._pick_lane(peer, ring)
         if lane is None:
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         frame = msg.frame if hasattr(msg, "frame") else msg
         handle = getattr(msg, "handle", None)
@@ -1327,14 +1411,14 @@ class Dispatcher:
                                      source_args_size, ring, corr_id,
                                      future, cont)
         if not self._flush_resends(peer):
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         if not self._flush_coalesce_peer(peer):
-            peer.stats["backpressure"] += 1   # FIFO: queued records go first
+            self._bp(peer)                    # FIFO: queued records go first
             return False
         lane = self._pick_lane(peer, ring)
         if lane is None:
-            peer.stats["backpressure"] += 1
+            self._bp(peer)
             return False
         lib = handle.lib
         if source_args_size is None:
@@ -1474,14 +1558,19 @@ class Dispatcher:
         poll budget."""
         A = _api()
         Status = A.Status
+        o = self.obs
+        if o.enabled:
+            o.rtt_hist.observe((time.monotonic() - rec.sent_at) * 1e6)
+            if rec.span is not None:
+                o.tracer.end(rec.span, subs=len(rec.subs or ()))
+                rec.span = None
         results = lane.mailbox.last_agg.pop(coords, None)
         if results is not None and len(results) != len(rec.subs):
             # a harvest that does not match the container we sent (an
             # external sweeper raced us, or the bounded stash evicted):
             # trusting per-index outcomes would misattribute NACKs —
             # treat as delivered-without-detail instead
-            peer.stats["agg_harvest_lost"] = (
-                peer.stats.get("agg_harvest_lost", 0) + 1)
+            peer.stats["agg_harvest_lost"] += 1
             results = None
         cached_add = peer.cached.add
         subs = rec.subs
@@ -1508,6 +1597,9 @@ class Dispatcher:
             st = Status.OK if res is None else res.status
             if st == Status.NACK_UNCACHED:
                 n_nack += 1
+                if o.enabled:
+                    o.recorder.add("nack", peer.name,
+                                   f"agg sub {sub.name} corr={sub.corr_id}")
                 peer.cached.discard(sub.digest)
                 if sub.handle is not None:
                     lib = sub.handle.lib
@@ -1519,8 +1611,7 @@ class Dispatcher:
                                                   corr_id=sub.corr_id,
                                                   cont=sub.cont))
                 else:
-                    peer.stats["nack_lost"] = (
-                        peer.stats.get("nack_lost", 0) + 1)
+                    peer.stats["nack_lost"] += 1
                 continue
             consumed += 1
             if st == Status.REJECTED:
@@ -1591,7 +1682,7 @@ class Dispatcher:
                              peer=peer.name)
             peer.reply_tail += 1
             peer.stats["replies"] += len(wire)
-            peer.stats["agg_replies"] = peer.stats.get("agg_replies", 0) + 1
+            peer.stats["agg_replies"] += 1
             self.stats["replies"] += len(wire)
             return
         for sub, value, is_err in reply_subs:
@@ -1651,8 +1742,7 @@ class Dispatcher:
                 F.scrub_slot(buf)
                 mb.head += 1
                 mb.consumed += 1
-                peer.stats["reply_rejects"] = (
-                    peer.stats.get("reply_rejects", 0) + 1)
+                peer.stats["reply_rejects"] += 1
                 continue
             if hdr is None or not F.trailer_arrived(buf, hdr):
                 break
@@ -1792,6 +1882,13 @@ class Dispatcher:
                             peer.cached.add(rec.digest)
                             if rec.stream is not None:
                                 rec.stream.dead = True   # complete: pump off
+                            o = self.obs
+                            if o.enabled:
+                                o.rtt_hist.observe(
+                                    (time.monotonic() - rec.sent_at) * 1e6)
+                                if rec.span is not None:
+                                    o.tracer.end(rec.span, status="ok")
+                                    rec.span = None
                         if not track:
                             ent = (lane.corr_by_coords.pop(coord, None)
                                    if coord is not None else None)
@@ -1802,6 +1899,16 @@ class Dispatcher:
                         peer.stats["rejected"] += 1
                         done += 1
                         progressed = True
+                        if rec is not None:
+                            o = self.obs
+                            if o.enabled:
+                                o.recorder.add(
+                                    "reject", peer.name,
+                                    f"{rec.name} corr={rec.corr_id}")
+                                if rec.span is not None:
+                                    o.tracer.end(rec.span,
+                                                 status="rejected")
+                                    rec.span = None
                         if rec is not None and rec.stream is not None:
                             # corrupt stream: ONLY this stream dies — stop
                             # its pump; the scrubbed slot flows on
@@ -1829,6 +1936,16 @@ class Dispatcher:
                         peer.stats["nacks"] += 1
                         self.stats["nacks"] += 1
                         progressed = True
+                        if rec is not None:
+                            o = self.obs
+                            if o.enabled:
+                                o.recorder.add(
+                                    "nack", peer.name,
+                                    f"{rec.name} corr={rec.corr_id} "
+                                    f"slim miss")
+                                if rec.span is not None:
+                                    o.tracer.end(rec.span, status="nack")
+                                    rec.span = None
                         if rec is not None and rec.stream is not None:
                             # SLIM stream missed the cache at its
                             # descriptor: park the pump and queue a FULL
@@ -1843,8 +1960,7 @@ class Dispatcher:
                         else:
                             # a SLIM frame we have no record/handle for (raw
                             # send): nothing to rebuild — surface the loss
-                            peer.stats["nack_lost"] = (
-                                peer.stats.get("nack_lost", 0) + 1)
+                            peer.stats["nack_lost"] += 1
                     elif st == Status.IN_PROGRESS:
                         peer.stats["inflight_polls"] += 1
                 if peer.stripe:
@@ -1908,6 +2024,10 @@ class Dispatcher:
                     if slot >= low and now - rec.sent_at < min_age:
                         continue         # young: the peer may still be alive
                     del lane.inflight[slot]
+                    o = self.obs
+                    if o.enabled and rec.span is not None:
+                        o.tracer.end(rec.span, status="failed")
+                        rec.span = None
                     if rec.stream is not None:
                         rec.stream.dead = True   # half-arrived stream: the
                         #          pump must never touch the slot again
@@ -1915,6 +2035,11 @@ class Dispatcher:
                             self._active_streams.remove(rec.stream)
                     if slot < low:
                         continue
+                    if o.enabled:
+                        o.recorder.add(
+                            "fail_inflight", peer.name,
+                            f"{rec.name} corr={rec.corr_id} "
+                            f"age={now - rec.sent_at:.3f}s")
                     if rec.subs is not None:
                         for sub in rec.subs:   # aggregate: fail per record
                             if sub.corr_id:
@@ -1982,10 +2107,16 @@ class Dispatcher:
                                     f"{peer.name!r}: {reason}"),
                                 True, decoded=True)
                             timed_out += 1
-                peer.stats["timed_out"] = (
-                    peer.stats.get("timed_out", 0) + timed_out)
+                peer.stats["timed_out"] += timed_out
                 failed += timed_out
-        self.stats["timed_out"] = self.stats.get("timed_out", 0) + failed
+        self.stats["timed_out"] += failed
+        if failed:
+            o = self.obs
+            if o.enabled:
+                o.recorder.add("fail_inflight", "",
+                               f"{failed} futures failed: {reason}")
+                if o.dump_on_fail:
+                    o.dump(f"fail_inflight: {reason}")
         return failed
 
     def drain(self, max_rounds: int = 64, deadline: float | None = None) -> int:
@@ -2025,6 +2156,10 @@ class Dispatcher:
                 if idle and self._pending_inflight() == 0:
                     break
                 if time.monotonic() - t0 >= deadline:
+                    self.obs.record(
+                        "drain_deadline", "",
+                        f"{deadline:.3g}s exceeded, "
+                        f"{self._pending_inflight()} frames inflight")
                     self.fail_inflight(
                         f"drain deadline ({deadline:.3g}s) exceeded",
                         min_age=deadline)

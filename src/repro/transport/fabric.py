@@ -23,6 +23,7 @@ dispatcher, the pod controller, serving) speak Channel/Mailbox only.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 from repro.core import frame as F
@@ -143,6 +144,10 @@ class Mailbox:
 
         out = []
         budget = self.n_slots if budget is None else budget
+        obs = getattr(ctx, "obs", None)
+        t0 = (time.perf_counter() if obs is not None and obs.enabled
+              else None)
+        consumed0 = self.consumed
         for _ in range(budget):
             try:
                 st = A.poll_ifunc(ctx, self.slot_view(self.head), None,
@@ -168,6 +173,10 @@ class Mailbox:
                 self.consumed += 1
             else:
                 break
+        if t0 is not None and self.consumed != consumed0:
+            # only sweeps that consumed something observe: idle polls would
+            # otherwise flood the distribution with empty-peek latencies
+            obs.sweep_hist.observe((time.perf_counter() - t0) * 1e6)
         return out
 
 

@@ -82,7 +82,11 @@ class ProgressEngine:
         self._slabs: dict[int, tuple[bytearray, int, int]] = {}
         self._seq = 0
         self.stats = {"posted": 0, "completed": 0, "flushes": 0,
-                      "auto_flushes": 0, "callbacks": 0, "slab_bytes": 0}
+                      "auto_flushes": 0, "callbacks": 0, "slab_bytes": 0,
+                      "futures_sent": 0}
+        #: repro.obs.Obs bundle — installed by the owning Dispatcher so
+        #: flush spans land in the same trace as its put/poll spans
+        self.obs = None
 
     # -- send slabs ---------------------------------------------------------
 
@@ -224,6 +228,14 @@ class ProgressEngine:
         entries.  Returns the number of completions."""
         keys = [id(channel)] if channel is not None else list(self._outstanding)
         n = 0
+        o = self.obs
+        sp = None
+        if (o is not None and o.enabled and o.tracer.enabled
+                and any(self._outstanding.get(k) for k in keys)):
+            sp = o.tracer.begin("flush", cat="engine",
+                                actor="engine",
+                                channels=sum(1 for k in keys
+                                             if self._outstanding.get(k)))
         for key in keys:
             handles = self._outstanding.pop(key, [])
             if not handles:
@@ -241,14 +253,15 @@ class ProgressEngine:
                             else (h.future,))
                     for f in futs:
                         f._mark_sent(h.seq)
-                    self.stats["futures_sent"] = (
-                        self.stats.get("futures_sent", 0) + len(futs))
+                    self.stats["futures_sent"] += len(futs)
                 if h.on_complete is not None:
                     h.on_complete(h)
                     self.stats["callbacks"] += 1
                 n += 1
         self.stats["completed"] += n
         self.stats["flushes"] += 1
+        if sp is not None:
+            o.tracer.end(sp, completions=n)
         return n
 
     def progress(self) -> int:

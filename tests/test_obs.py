@@ -1,0 +1,290 @@
+"""repro.obs: power-of-two histograms, the registry's legacy-dict aliasing,
+cross-peer span lifecycle (including SLIM->NACK->FULL retransmit), the
+flight-recorder ring, and the counters-only / disabled operating modes."""
+
+import io
+import json
+
+import pytest
+
+from repro.core import Context, register_ifunc
+from repro.obs import (FlightRecorder, Histogram, Obs, Registry, Tracer,
+                       delta, merge_snapshots)
+from repro.obs.metrics import N_BUCKETS
+from repro.transport import Dispatcher, ProgressEngine, RdmaFabric
+
+
+# ---------------------------------------------------------------------------
+# histogram bucket math
+
+
+def test_histogram_bucket_math():
+    h = Histogram("t")
+    # bucket i holds v with int(v).bit_length() == i, i.e. [2^(i-1), 2^i)
+    assert Histogram.bucket_of(0) == 0
+    assert Histogram.bucket_of(0.5) == 0
+    assert Histogram.bucket_of(1) == 1
+    assert Histogram.bucket_of(1.9) == 1
+    assert Histogram.bucket_of(2) == 2
+    assert Histogram.bucket_of(3) == 2
+    assert Histogram.bucket_of(4) == 3
+    assert Histogram.bucket_of(2 ** 70) == N_BUCKETS - 1   # clamped
+    for v in (0, 1, 3, 100, 100, 100):
+        h.observe(v)
+    assert h.count == 6
+    assert h.min == 0 and h.max == 100
+    assert h.mean == pytest.approx(304 / 6)
+    assert h.buckets[0] == 1 and h.buckets[1] == 1 and h.buckets[2] == 1
+    assert h.buckets[7] == 3                               # 100 in [64, 128)
+    # quantile reports the holding bucket's upper bound (<=2x overestimate):
+    # rank 3 of {0,1,3,100,100,100} is the 3, whose bucket tops out at 4
+    assert h.quantile(0.5) == 4
+    assert h.quantile(0.75) == 128
+    assert h.quantile(1.0) == 128
+    assert h.quantile(0.0) == 1                            # first non-empty
+
+
+def test_histogram_empty_quantile_is_none():
+    h = Histogram("t")
+    assert h.quantile(0.5) is None
+    assert h.mean == 0.0
+
+
+def test_histogram_merge_and_snapshot_roundtrip():
+    a, b = Histogram("a"), Histogram("b")
+    for v in (1, 2, 4):
+        a.observe(v)
+    for v in (1024, 0):
+        b.observe(v)
+    a.merge(b)
+    assert a.count == 5
+    assert a.min == 0 and a.max == 1024
+    assert a.total == pytest.approx(1031.0)
+    snap = a.snapshot()
+    assert snap["buckets"][11] == 1                        # 1024 in [1024, 2048)
+    back = Histogram.from_snapshot("a2", snap)
+    assert back.count == a.count and back.buckets == a.buckets
+    assert back.quantile(0.99) == a.quantile(0.99) == 2048
+
+
+# ---------------------------------------------------------------------------
+# registry: aliased legacy dicts, uniquification, delta/merge
+
+
+def test_registry_aliases_live_dicts_and_uniquifies():
+    r = Registry("t")
+    stats = {"sent": 0, "note": "not-a-number"}
+    assert r.register_dict("peer.a", stats) == "peer.a"
+    assert r.register_dict("peer.a", stats) == "peer.a"    # same dict: idempotent
+    other = {"sent": 7}
+    assert r.register_dict("peer.a", other) == "peer.a.2"  # collision: uniquified
+    assert r.register_dict("peer.a", other) == "peer.a.2"  # and still idempotent
+    stats["sent"] = 3                                      # live mutation, no copy
+    snap = r.snapshot()
+    assert snap["counters"]["peer.a.sent"] == 3
+    assert snap["counters"]["peer.a.2.sent"] == 7
+    assert "peer.a.note" not in snap["counters"]           # non-numeric skipped
+
+
+def test_snapshot_delta_and_merge():
+    r = Registry("t")
+    c = r.counter("x")
+    h = r.histogram("lat")
+    c.inc(2)
+    h.observe(10)
+    prev = r.snapshot()
+    c.inc(5)
+    h.observe(10)
+    d = delta(r.snapshot(), prev)
+    assert d["counters"]["x"] == 5
+    assert d["histograms"]["lat"]["count"] == 1
+    merged = merge_snapshots([prev, r.snapshot()])
+    assert merged["counters"]["x"] == 2 + 7
+    assert merged["histograms"]["lat"]["count"] == 3
+
+
+# ---------------------------------------------------------------------------
+# transport integration: span lifecycle across SLIM -> NACK -> FULL
+
+
+def _mk(lib_dir, obs, n_slots=4):
+    src = Context("src", lib_dir=lib_dir)
+    d = Dispatcher(src, ProgressEngine(flush_threshold=64), obs=obs)
+    tgt = Context("p", lib_dir=lib_dir, link_mode="remote")
+    d.add_peer("p", RdmaFabric(), tgt, n_slots=n_slots, slot_size=8 << 10,
+               target_args={"db": []})
+    return d, tgt
+
+
+def test_span_lifecycle_nack_retransmit(lib_dir):
+    """One logical frame, two wire legs: the SLIM put's span closes with
+    status=nack, and the FULL retransmit is a separate cat=resend span tied
+    to the same corr — not a silently reopened original."""
+    obs = Obs("t", trace=True)
+    d, tgt = _mk(lib_dir, obs)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    assert d.send_ifunc("p", h, b"first", corr_id=11)      # FULL warmup
+    d.drain()
+    tgt.link_cache.invalidate(h.name)                      # eviction / restart
+    assert d.send_ifunc("p", h, b"second", corr_id=22)     # goes out SLIM
+    d.drain()
+    assert d.peers["p"].stats["nacks"] == 1
+    assert d.peers["p"].stats["resent"] == 1
+
+    tr = obs.tracer
+    assert tr.open_count() == 0, [s.name for s in tr.open_spans()]
+    wire = tr.spans(cat="wire")
+    assert [s.args.get("status") for s in tr.spans(cat="wire", corr=11)] \
+        == ["ok"]
+    nacked = [s for s in wire if s.args.get("status") == "nack"]
+    assert len(nacked) == 1 and nacked[0].corr == 22
+    resends = tr.spans(cat="resend")
+    assert len(resends) == 1
+    rs = resends[0]
+    assert rs.name == "resend:rle_insert@p" and rs.corr == 22
+    assert rs.args.get("status") == "ok"                   # retransmit landed
+    assert rs.ts >= nacked[0].ts + nacked[0].dur           # strictly after
+    # the target side executed twice (warmup + retransmit), never the NACK
+    assert len(tr.spans(cat="exec")) == 2
+    # the recorder kept the wire story for a postmortem
+    kinds = [k for _, k, _, _ in obs.recorder.events()]
+    assert "nack" in kinds and "resend" in kinds and "put" in kinds
+
+
+def test_chrome_export_schema(tmp_path, lib_dir):
+    obs = Obs("t", trace=True)
+    d, _ = _mk(lib_dir, obs)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    assert d.send_ifunc("p", h, b"x", corr_id=9)
+    d.drain()
+    path = tmp_path / "trace.json"
+    obs.tracer.export_chrome(path)
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert meta and spans
+    assert {m["args"]["name"] for m in meta} >= {"src", "p"}
+    put = next(e for e in spans if e["name"].startswith("put:"))
+    assert put["args"]["corr"] == 9
+    assert put["dur"] >= 0 and isinstance(put["tid"], int)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder ring
+
+
+def test_flight_recorder_wraparound():
+    clock_t = [0.0]
+    r = FlightRecorder(capacity=4, clock=lambda: clock_t[0])
+    for i in range(10):
+        clock_t[0] = float(i)
+        r.add("put", f"peer{i}", f"ev{i}")
+    assert len(r) == 4 and r.total == 10
+    assert [info for _, _, _, info in r.events()] == \
+        ["ev6", "ev7", "ev8", "ev9"]                       # oldest first
+    assert [info for _, _, _, info in r.last(2)] == ["ev8", "ev9"]
+    text = r.format("test")
+    assert "last 4 of 10 events, 6 older dropped" in text
+    assert text.count("\n") == 5                           # head + 4 + tail
+    r.clear()
+    assert len(r) == 0 and r.total == 0
+
+
+def test_flight_recorder_under_capacity():
+    r = FlightRecorder(capacity=8)
+    r.add("nack", "p", "one")
+    assert len(r) == 1 and r.total == 1
+    assert "older dropped" not in r.format()
+    assert "manual" in r.format()                          # default reason
+    buf = io.StringIO()
+    assert r.dump("why", stream=buf) == buf.getvalue().rstrip("\n")
+
+
+def test_fail_inflight_dumps_recorder(lib_dir, capsys):
+    """A wedged peer's fail_inflight auto-dumps the ring: the postmortem
+    names the frames that died and the reason, on stderr, unprompted."""
+    obs = Obs("t")                                         # counters-only
+    d, _ = _mk(lib_dir, obs)
+    for r in d.peers["p"].rings:                           # peer stops consuming
+        r.mailbox.sweep = lambda *a, **k: []
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    errs = []
+    d.reply_router = lambda corr, name, value, is_err, decoded: \
+        errs.append((corr, is_err))
+    assert d.send_ifunc("p", h, b"doomed", corr_id=404)
+    assert d.fail_inflight("wedged peer") >= 1
+    assert errs == [(404, True)]
+    err = capsys.readouterr().err
+    assert "flight recorder dump (fail_inflight: wedged peer)" in err
+    assert "corr=404" in err                               # the dead frame
+    assert "put" in err                                    # ...and its put event
+    kinds = [k for _, k, _, _ in obs.recorder.events()]
+    assert "fail_inflight" in kinds
+
+
+def test_fail_inflight_dump_can_be_disabled(lib_dir, capsys):
+    obs = Obs("t", dump_on_fail=False)
+    d, _ = _mk(lib_dir, obs)
+    for r in d.peers["p"].rings:
+        r.mailbox.sweep = lambda *a, **k: []
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    d.reply_router = lambda *a: None
+    assert d.send_ifunc("p", h, b"doomed", corr_id=7)
+    assert d.fail_inflight("quiet") >= 1
+    assert "flight recorder dump" not in capsys.readouterr().err
+    # the events are still in the ring for a manual obs.dump()
+    assert any(k == "fail_inflight" for _, k, _, _ in obs.recorder.events())
+
+
+# ---------------------------------------------------------------------------
+# operating modes
+
+
+def test_counters_only_mode_records_no_spans(lib_dir):
+    """The default Obs(): histograms/counters/recorder live, tracer dark —
+    begin() returns None so the hot paths carry no span objects at all."""
+    obs = Obs("t")
+    assert not obs.tracing
+    d, _ = _mk(lib_dir, obs)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    for i in range(4):
+        assert d.send_ifunc("p", h, bytes([i]), corr_id=i + 1)
+    d.drain()
+    assert obs.tracer.begin("x") is None
+    assert obs.tracer.events == [] and obs.tracer.open_count() == 0
+    assert obs.rtt_hist.count == 4                         # counters still on
+    assert len(obs.recorder) >= 4                          # ring still on
+    snap = obs.snapshot()
+    assert snap["counters"]["peer.p.sent"] == 4            # stats aliased
+    assert snap["counters"]["peer.p.delivered"] == 4
+    assert "peer.p.sent 4" in obs.to_text()
+
+
+def test_disabled_obs_is_inert(lib_dir):
+    """Obs(enabled=False) is the bench off-arm: traffic flows, nothing is
+    observed anywhere — no histogram samples, no ring events, no spans."""
+    obs = Obs("t", enabled=False, trace=True)              # trace loses to enabled
+    d, _ = _mk(lib_dir, obs)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    for i in range(3):
+        assert d.send_ifunc("p", h, bytes([i]))
+    d.drain()
+    assert obs.rtt_hist.count == 0
+    assert len(obs.recorder) == 0
+    assert obs.tracer.events == []
+    assert d.peers["p"].stats["delivered"] == 3            # traffic unharmed
+
+
+def test_set_tracing_toggles_midrun(lib_dir):
+    obs = Obs("t")
+    d, _ = _mk(lib_dir, obs)
+    h = register_ifunc(d.src_ctx, "rle_insert")
+    assert d.send_ifunc("p", h, b"dark")
+    d.drain()
+    assert obs.tracer.events == []
+    obs.set_tracing(True)
+    assert d.send_ifunc("p", h, b"lit")
+    d.drain()
+    assert obs.tracer.spans(cat="wire")
+    assert obs.tracer.open_count() == 0
