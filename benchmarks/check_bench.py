@@ -39,7 +39,14 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
 9. (BENCH_PR8+) the ``obs_overhead`` rows exist and every ``*_on``
    cell's persisted ratio (off_us / on_us, same-run interleaved arms)
    is >= 0.95 — the counters-only telemetry default taxes the slim_agg
-   and stream hot paths at most 5%.
+   and stream hot paths at most 5%;
+10. (BENCH_PR9+) the ``fig_serve`` rows exist and at the LARGEST client
+    fleet the disaggregated prefill/decode fabric sustains at least the
+    single-host server's tok/s (persisted ratio >= 1.0 — disaggregation
+    must not cost throughput to buy its isolation) and completes
+    requests at >= 25 req/s (an absolute CI floor well under the
+    measured ~100 req/s, catching order-of-magnitude regressions
+    without being machine-sensitive).
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -225,6 +232,31 @@ def check(path: pathlib.Path) -> int:
             f"telemetry tax over budget at {r['cell']}: off/on ratio "
             f"{ratio:.3f} < 0.95 — the counters-only default must cost "
             f"the hot paths at most 5%")
+
+    serve = {r["cell"]: r for r in rows if r["bench"] == "fig_serve"}
+    fleets = sorted(int(c.split("/c")[1]) for c in serve
+                    if c.startswith("disagg/"))
+    if pr >= 9:
+        assert fleets, "no fig_serve disagg/* rows"
+    for n in fleets:
+        host = serve[f"host/c{n}"]["msgs_per_s"]
+        dis = serve[f"disagg/c{n}"]
+        req = serve[f"disagg_req/c{n}"]["msgs_per_s"]
+        print(f"fig_serve   c{n:>4}: host={host:7.0f}tok/s "
+              f"disagg={dis['msgs_per_s']:7.0f}tok/s "
+              f"({req:.0f}req/s) -> {dis['ratio']:.2f}x")
+    if fleets:
+        big = fleets[-1]
+        dis = serve[f"disagg/c{big}"]
+        req = serve[f"disagg_req/c{big}"]["msgs_per_s"]
+        assert dis["ratio"] >= 1.0, (
+            f"disaggregated fabric under single-host tok/s at the "
+            f"largest fleet c{big} (ratio {dis['ratio']:.3f} < 1.0) — "
+            f"the decode tier's deeper batches must at least pay for "
+            f"the KV migration")
+        assert req >= 25.0, (
+            f"fabric request completion rate {req:.1f} req/s under the "
+            f"25 req/s CI floor at c{big}")
 
     print(f"{path.name}: {len(rows)} rows OK")
     return 0

@@ -31,11 +31,15 @@
   micro_header     naive vs precompiled-struct frame header seal/peek
   micro_agg        naive per-record container decode vs the vectorized
                    structured parse (unpack_agg_py vs unpack_agg)
+  fig_serve        open-loop serving throughput: single-host Server vs
+                   the disaggregated prefill/decode fabric at fleet sizes
+                   1+1 and 2+2 (us/token, tok/s, req/s; ratio = host/
+                   disagg us per token, >= 1 means the fabric wins)
   roofline         summary of the dry-run roofline terms (if artifacts exist)
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
 normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?,
-ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR8.json``
+ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR9.json``
 at the repo root) — prior ``BENCH_PR*.json`` files are committed history
 and are never rewritten (PR 3's harness accidentally churned
 ``BENCH_PR2.json`` on every re-run; the per-PR-file routing that caused
@@ -53,9 +57,9 @@ fixes that going forward.
 
 ``--quick`` (the CI smoke mode) runs the cached-fast-path suite
 (fig5_cached incl. slim_agg + the four microbenches) plus fig_graph,
-fig_flow, and obs_overhead with reduced iteration counts.  ``device_agg``
-and ``fig_stream`` run in full mode only: their committed rows survive a
---quick merge untouched.
+fig_flow, and obs_overhead with reduced iteration counts.  ``device_agg``,
+``fig_stream``, and ``fig_serve`` run in full mode only: their committed
+rows survive a --quick merge untouched.
 """
 
 from __future__ import annotations
@@ -72,7 +76,7 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
-CURRENT = ROOT / "BENCH_PR8.json"    # the ONE file this harness writes
+CURRENT = ROOT / "BENCH_PR9.json"    # the ONE file this harness writes
 
 
 def _emit(rows: list[dict]) -> None:
@@ -176,8 +180,8 @@ def fig_stream() -> list[dict]:
 
 
 def obs_overhead(quick: bool = False) -> list[dict]:
-    if quick:
-        return B.bench_obs_overhead(agg_iters=320, stream_iters=16)
+    # no reduced quick arm: the ratio gate needs the full chunk count to
+    # be stable, and the whole bench is only a few seconds
     return B.bench_obs_overhead()
 
 
@@ -199,6 +203,10 @@ def micro_header(quick: bool = False) -> list[dict]:
 
 def micro_agg(quick: bool = False) -> list[dict]:
     return B.bench_agg_parse(n_iters=60 if quick else 300)
+
+
+def fig_serve() -> list[dict]:
+    return B.bench_serve()
 
 
 def roofline_summary() -> list[dict]:
@@ -234,7 +242,7 @@ def main() -> None:
         suites = [fig3_latency, fig4_throughput, fig5_cached, fig_stream,
                   fig_graph, fig_flow, s34_link_cost, tierB_uvm, device_agg,
                   obs_overhead, transport_fanout, micro_slab, micro_checksum,
-                  micro_header, micro_agg, roofline_summary]
+                  micro_header, micro_agg, fig_serve, roofline_summary]
     all_rows = []
     for fn in suites:
         rows = fn()

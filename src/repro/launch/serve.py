@@ -1,15 +1,20 @@
-"""Serving driver: continuous batching over prefill + decode steps, fed
-through the ifunc transport layer.
+"""Serving driver — a thin CLI over :mod:`repro.serving`.
 
-A minimal production loop: requests arrive as *ifunc messages* (the
-``srv_enqueue`` verb — codec ships with the frame) through a
-``transport.Dispatcher`` peer ring with credit-based flow control, get
-prefilled into a shared ring of cache slots, and a single compiled decode
-step advances every active sequence one token per tick.  Works on any mesh
-(pass ``--mesh host`` locally; the production meshes are exercised through
-launch/dryrun.py).
+Two deployment shapes, one decode engine:
+
+* ``--mode host`` (default): single-host :class:`~repro.serving.Server`
+  fed ``srv_enqueue`` frames by an :class:`~repro.serving.IfuncFrontend`
+  over a credit-flow-controlled ring.
+* ``--mode disagg``: the disaggregated
+  :class:`~repro.serving.ServingFabric` — dedicated prefill peers stream
+  each sequence's KV cache to continuous-batching decode peers as
+  ``FLAG_STREAM`` payloads, placed by a pricing router.
+
+Completion is signalled off the decode path in both modes: a request is
+done when its last token has been *decoded*, never at admission.
 
     PYTHONPATH=src python -m repro.launch.serve --steps 8
+    PYTHONPATH=src python -m repro.launch.serve --mode disagg --requests 8
 """
 
 from __future__ import annotations
@@ -18,197 +23,31 @@ import argparse
 import os
 import pathlib
 import time
-from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
-from repro.models.config import ModelConfig
-from repro.obs import Obs, delta
-from repro.train import serve as SRV
-
-TINY = ModelConfig(name="serve-tiny", family="dense", num_layers=4, d_model=128,
-                   num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
-                   q_chunk=128)
+from repro.serving import (TINY, IfuncFrontend, Request, Server,
+                           ServingFabric)
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: list = field(default_factory=list)
+def make_requests(n: int, max_new: int, *, seed: int = 0) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, TINY.vocab_size, size=8,
+                                    dtype=np.int32), max_new=max_new)
+            for i in range(n)]
 
 
-class Server:
-    """Fixed-slot continuous batcher (B slots, one sequence each)."""
-
-    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
-                 cache_len: int, *, obs: Obs | None = None):
-        self.cfg, self.params = cfg, params
-        self.B, self.W = batch_slots, cache_len
-        self.cache = T.init_cache(cfg, batch_slots, cache_len)
-        self.pos = np.zeros(batch_slots, np.int32)      # per-slot next position
-        self.active: dict[int, Request] = {}            # slot -> request
-        self.tokens = np.zeros((batch_slots, 1), np.int32)
-        self._decode = jax.jit(SRV.make_decode_step(cfg), donate_argnums=1)
-        self._prefill = jax.jit(SRV.make_prefill_step(cfg))
-        # pass the transport's bundle in to get one unified snapshot
-        # (ingest counters + serving counters); standalone default works too
-        self.obs = obs if obs is not None else Obs("server")
-        m = self.obs.metrics
-        self.admit_hist = m.histogram("serve.admit_us")
-        self._admitted = m.counter("serve.admitted")
-        self._decoded = m.counter("serve.decoded")
-        self._admit_full = m.counter("serve.admit_full")
-        self._wave_snap = self.obs.snapshot()
-
-    def admit(self, req: Request) -> bool:
-        """Wave batching: sequences in a wave advance in lockstep (shared
-        cache slot_pos).  Per-slot positions (true continuous batching) need
-        a vectorized ``pos`` through attention_decode — the production
-        extension; the batching/cache plumbing here is identical."""
-        free = [s for s in range(self.B) if s not in self.active]
-        if not free:
-            self._admit_full.inc()
-            return False
-        t0 = time.perf_counter()
-        slot = free[0]
-        # prefill the prompt into a fresh single-slot cache, splice it in
-        cache1, last = self._prefill(self.params, {"tokens": req.prompt[None]})
-        cache1 = SRV.pad_cache_to(cache1, T.cache_shapes(self.cfg, 1, self.W))
-        full = T.cache_shapes(self.cfg, self.B, self.W)
-        one = T.cache_shapes(self.cfg, 1, self.W)
-        for k in self.cache:
-            bdim = next((i for i, (a, b) in enumerate(
-                zip(full[k].shape, one[k].shape)) if a != b), None)
-            src = cache1[k].astype(self.cache[k].dtype)
-            if bdim is None:            # batch-free entry (slot_pos): shared
-                self.cache[k] = src
-            else:
-                idx = tuple([slice(None)] * bdim + [slice(slot, slot + 1)])
-                self.cache[k] = self.cache[k].at[idx].set(src)
-        self.tokens[slot, 0] = int(jnp.argmax(last[0, -1]))
-        self.pos[slot] = len(req.prompt)
-        self.active[slot] = req
-        req.out.append(int(self.tokens[slot, 0]))
-        self._admitted.inc()
-        self.admit_hist.observe((time.perf_counter() - t0) * 1e6)
-        return True
-
-    def tick(self) -> int:
-        """One decode step for all active slots; returns #tokens emitted."""
-        if not self.active:
-            return 0
-        pos = int(max(self.pos[s] for s in self.active))  # static-shape step
-        self.cache, logits = self._decode(self.params, self.cache,
-                                          jnp.asarray(self.tokens), jnp.int32(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        emitted = 0
-        for slot, req in list(self.active.items()):
-            tok = int(nxt[slot])
-            req.out.append(tok)
-            self.tokens[slot, 0] = tok
-            self.pos[slot] += 1
-            emitted += 1
-            if len(req.out) >= req.max_new:
-                del self.active[slot]
-        self._decoded.inc(emitted)
-        return emitted
-
-    # -- observability -------------------------------------------------------
-
-    def metrics(self) -> dict:
-        """Full registry snapshot (serving counters, admission latency
-        histogram, and — when the transport's bundle was passed in —
-        ingest/dispatch counters), JSON-serializable."""
-        return self.obs.snapshot()
-
-    def wave_summary(self) -> str:
-        """One line covering activity since the previous call: requests
-        admitted, tokens decoded, and the p50/p99 admission latency."""
-        cur = self.obs.snapshot()
-        d = delta(cur, self._wave_snap)["counters"]
-        self._wave_snap = cur
-        h = self.admit_hist
-        return (f"wave: admitted={d.get('serve.admitted', 0)} "
-                f"decoded={d.get('serve.decoded', 0)} "
-                f"active={len(self.active)}/{self.B} "
-                f"admit_us p50={h.quantile(0.5)} p99={h.quantile(0.99)}")
-
-
-class IfuncFrontend:
-    """Request/response ingestion over the task runtime: the frontend
-    submits ``srv_enqueue`` ifuncs into the server's mailbox ring and gets
-    an *admission ack future* back per request — the server's reply frame
-    carries ``{rid, queued, depth}``, so the frontend knows not just that
-    the frame left but that the batcher actually accepted the request.
-    Ring credits remain the admission-control backpressure — a frontend
-    outrunning the server sees ``submit`` return None instead of
-    overwriting unconsumed requests."""
-
-    def __init__(self, server_ctx, n_slots: int = 4, slot_size: int = 8 << 10):
-        from repro.core import Context, register_ifunc
-        from repro.tasks import TaskRuntime
-        from repro.transport import ProgressEngine, RdmaFabric
-
-        self.ctx = Context("frontend")
-        self.inbox: dict = {"queue": []}
-        self.rt = TaskRuntime(self.ctx,
-                              engine=ProgressEngine(flush_threshold=4))
-        self.dispatcher = self.rt.dispatcher
-        self.rt.add_peer("server", RdmaFabric(), server_ctx,
-                         n_slots=n_slots, slot_size=slot_size,
-                         target_args=self.inbox)
-        self._handle = register_ifunc(self.ctx, "srv_enqueue")
-
-    def submit(self, req: Request):
-        """Zero-copy ingestion: the request codec packs straight into the
-        server ring's slab cell.  The first request ships the srv_enqueue
-        code FULL; once delivery confirms the server's link cache, every
-        later request goes SLIM (header + payload, codec elided) — the
-        warmed-up steady state is the paper's cached fast path.  Returns
-        the admission-ack Future, or None under backpressure."""
-        return self.rt.submit(
-            "server", self._handle,
-            {"rid": req.rid, "max_new": req.max_new, "prompt": req.prompt},
-            wait_credits=False)
-
-    def server_poll(self, max_msgs: int = 16) -> list[Request]:
-        """Server side: flush in-flight frames, drain the mailbox through
-        the dispatcher's poll loop (which also posts + routes the acks),
-        return newly arrived requests."""
-        self.dispatcher.flush()
-        self.dispatcher.poll(budget=max_msgs)
-        out = [Request(d["rid"], np.asarray(d["prompt"], np.int32), d["max_new"])
-               for d in self.inbox["queue"]]
-        self.inbox["queue"] = []
-        return out
-
-
-def main():
+def run_host(args, params) -> None:
     from repro.core import Context
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--cache", type=int, default=64)
-    args = ap.parse_args()
-    os.environ.setdefault(
-        "REPRO_IFUNC_LIB_DIR",
-        str(pathlib.Path(__file__).resolve().parents[3] / "ifunc_libs"))
-    cfg = TINY
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
     server_ctx = Context("server")
     fe = IfuncFrontend(server_ctx)
     # ONE bundle across frontend transport + batcher: the final snapshot
     # shows ingest (peer/dispatcher counters) and serving side by side
-    srv = Server(cfg, params, args.slots, args.cache, obs=fe.rt.obs)
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32),
-                    max_new=args.steps) for i in range(args.slots + 2)]
+    srv = Server(TINY, params, args.slots, args.cache, obs=fe.rt.obs)
+    reqs = make_requests(args.requests, args.steps)
     unsubmitted = list(reqs)
     acks = []
     done: dict[int, Request] = {}
@@ -225,21 +64,26 @@ def main():
         pending.extend(fe.server_poll())
         admitted_now = 0
         while pending and srv.admit(pending[0]):
-            req = pending.pop(0)
-            done[req.rid] = req
+            pending.pop(0)
             admitted_now += 1
-        total += srv.tick()
+        # completion comes off the DECODE path: tick() hands back the
+        # requests whose last token just landed — only those are done
+        emitted, finished = srv.tick()
+        total += emitted
+        for req in finished:
+            done[req.rid] = req
         if admitted_now:
             print(" ", srv.wave_summary())
     dt = time.time() - t0
     acked = [f.result(timeout=10.0) for f in acks]
     assert all(a["queued"] for a in acked), acked
+    assert len(done) == len(reqs), (len(done), len(reqs))
     # shutdown drain with the transport liveness floor: if the server ring
     # wedged, outstanding admission futures fail with a TransportError
     # after the deadline instead of hanging the frontend forever
     fe.rt.drain(deadline=5.0)
     stats = fe.dispatcher.per_peer_stats()["server"]
-    assert stats.get("timed_out", 0) == 0, stats
+    assert stats["timed_out"] == 0, stats
     print(f"served {len(reqs)} requests ({len(acked)} acked, max queue depth "
           f"{max(a['depth'] for a in acked)}), {total} decode tokens in "
           f"{dt:.2f}s ({total / max(dt, 1e-9):.0f} tok/s, batch={args.slots}); "
@@ -248,15 +92,59 @@ def main():
           f"replies={stats['replies']} via {stats['bytes']}B of ifunc frames "
           f"(oldest in-flight {stats['oldest_inflight_s']:.3f}s)")
     snap = srv.metrics()
-    h = srv.admit_hist
     print(f"metrics: admitted={snap['counters']['serve.admitted']} "
           f"decoded={snap['counters']['serve.decoded']} "
-          f"admit_us p50={h.quantile(0.5)} p99={h.quantile(0.99)} "
           f"({len(snap['counters'])} counters, "
           f"{len(snap['histograms'])} histograms in the registry)")
     for rid in sorted(done)[:2]:
         r = done[rid]
-        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out[:args.steps]}")
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
+
+
+def run_disagg(args, params) -> None:
+    fab = ServingFabric(TINY, params, n_prefill=args.prefill,
+                        n_decode=args.decode, batch_slots=args.slots,
+                        cache_len=args.cache)
+    reqs = make_requests(args.requests, args.steps)
+    t0 = time.time()
+    done = fab.run(reqs)
+    dt = time.time() - t0
+    fab.drain()
+    total = sum(len(r.out) for r in done.values())
+    assert fab.buffered_installs() == 0, "a KV slab arrived unstreamed"
+    print(f"served {len(done)} requests across {args.prefill} prefill + "
+          f"{args.decode} decode peers: {total} tokens in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.0f} tok/s); "
+          f"{fab.streams_landed()} KV streams landed, "
+          f"{fab.buffered_installs()} buffered installs")
+    snap = fab.obs.snapshot()["counters"]
+    routed = snap.get("serve.router.routed", 0)
+    comps = snap.get("serve.router.completions", 0)
+    print(f"router: routed={routed} completions={comps} "
+          f"admit_retries={snap.get('serve.router.admit_retries', 0)}")
+    for rid in sorted(done)[:2]:
+        r = done[rid]
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("host", "disagg"), default="host")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prefill", type=int, default=2)
+    ap.add_argument("--decode", type=int, default=2)
+    args = ap.parse_args()
+    os.environ.setdefault(
+        "REPRO_IFUNC_LIB_DIR",
+        str(pathlib.Path(__file__).resolve().parents[3] / "ifunc_libs"))
+    params = T.init_params(TINY, jax.random.PRNGKey(0))
+    if args.mode == "host":
+        run_host(args, params)
+    else:
+        run_disagg(args, params)
 
 
 if __name__ == "__main__":

@@ -222,43 +222,76 @@ def attention_seq(p, x, cfg, *, window: int = 0):
     return out
 
 
-def attn_cache_specs(cfg, batch: int, cache_len: int) -> dict[str, Spec]:
+def attn_cache_specs(cfg, batch: int, cache_len: int, *,
+                     per_slot: bool = False) -> dict[str, Spec]:
+    """KV-cache layout.  ``per_slot=True`` gives every batch row its own
+    ``slot_pos`` vector ([batch, cache_len] instead of the shared
+    [cache_len]) — the layout continuous batching needs so sequences at
+    different positions coexist in one cache."""
     Kv, hd = cfg.num_kv_heads, cfg.head_dim
+    sp_shape = (batch, cache_len) if per_slot else (cache_len,)
+    sp_axes = ("cache_batch", "cache_seq") if per_slot else ("cache_seq",)
     return {
         "k": ((batch, cache_len, Kv, hd), ("cache_batch", "cache_seq", "cache_kv_heads", None)),
         "v": ((batch, cache_len, Kv, hd), ("cache_batch", "cache_seq", "cache_kv_heads", None)),
-        "slot_pos": ((cache_len,), ("cache_seq",)),
+        "slot_pos": (sp_shape, sp_axes),
     }
 
 
 def attention_decode(p, x, cfg, cache, pos, *, window: int = 0):
     """Single-token decode against a (possibly ring) KV cache.
 
-    x: [B,1,D]; cache k/v: [B,W,Kv,hd]; slot_pos: [W] absolute position per
-    slot (-1 = empty).  pos: scalar int32 current position.  Returns
-    ([B,1,D], new_cache).  Grouped-query attention; the cache stays at Kv
-    heads and its seq axis is sharded (sequence-parallel decode).
+    x: [B,1,D]; cache k/v: [B,W,Kv,hd].  Two cache layouts share this
+    implementation, distinguished by ``slot_pos``'s rank:
+
+    * **wave batching** (``slot_pos: [W]``, shared): ``pos`` is a scalar
+      int32 — every row writes the same ring slot and advances in
+      lockstep (the legacy single-wave layout).
+    * **continuous batching** (``slot_pos: [B,W]``, per row): ``pos`` may
+      be a ``[B]`` int32 vector — each row writes its own ring slot
+      ``pos[b] % W`` and masks against its own validity row, so
+      sequences admitted mid-wave decode at unequal positions.
+
+    Returns ([B,1,D], new_cache).  Grouped-query attention; the cache
+    stays at Kv heads and its seq axis is sharded (sequence-parallel
+    decode).
     """
     B = x.shape[0]
     H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = cfg.group_size
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
-    q, k_new, v_new = _qkv(p, x, cfg, positions)
-
+    per_slot = cache["slot_pos"].ndim == 2
     W = cache["k"].shape[1]
-    slot = (pos % W).astype(jnp.int32)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
-    slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+    if per_slot:
+        pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        positions = pos_v[:, None]
+        q, k_new, v_new = _qkv(p, x, cfg, positions)
+        slot = (pos_v % W).astype(jnp.int32)
+        b_idx = jnp.arange(B)
+        k = cache["k"].at[b_idx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[b_idx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+        slot_pos = cache["slot_pos"].at[b_idx, slot].set(pos_v)
+    else:
+        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+        q, k_new, v_new = _qkv(p, x, cfg, positions)
+        slot = (pos % W).astype(jnp.int32)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
 
     qg = q.reshape(B, Kv, G, hd)
     qg = shard_act(qg, "cache_batch", "cache_kv_heads", None, None)
     s_ = jnp.einsum("bkgd,btkd->bkgt", qg, k, preferred_element_type=jnp.float32)
     s_ = _softcap(s_ / np.sqrt(hd), cfg.attn_logit_softcap)
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
-    if window:
-        valid &= slot_pos > pos - window
-    s_ = jnp.where(valid[None, None, None, :], s_, -1e30)
+    if per_slot:
+        valid = (slot_pos >= 0) & (slot_pos <= pos_v[:, None])
+        if window:
+            valid &= slot_pos > pos_v[:, None] - window
+        s_ = jnp.where(valid[:, None, None, :], s_, -1e30)
+    else:
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window:
+            valid &= slot_pos > pos - window
+        s_ = jnp.where(valid[None, None, None, :], s_, -1e30)
     pr = jax.nn.softmax(s_, axis=-1).astype(x.dtype)
     pr = shard_act(pr, "cache_batch", "cache_kv_heads", None, "cache_seq")
     o = jnp.einsum("bkgt,btkd->bkgd", pr, v, preferred_element_type=x.dtype)

@@ -88,10 +88,11 @@ def init_params(cfg: ModelConfig, key) -> dict:
     return L.init_from_specs(param_specs(cfg), key, cfg.w_dtype)
 
 
-def _cache_entry_specs(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+def _cache_entry_specs(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                       per_slot: bool = False):
     if kind in ATTN_KINDS:
         W = min(cache_len, cfg.attn_window) if (kind == "attn_local" and cfg.attn_window) else cache_len
-        return L.attn_cache_specs(cfg, batch, W)
+        return L.attn_cache_specs(cfg, batch, W, per_slot=per_slot)
     if kind == "ssd":
         return S.ssd_cache_specs(cfg, batch)
     if kind == "rglru":
@@ -99,19 +100,25 @@ def _cache_entry_specs(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
     raise ValueError(kind)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict[str, L.Spec]:
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, *,
+                per_slot: bool = False) -> dict[str, L.Spec]:
+    """``per_slot=True`` selects the continuous-batching cache layout:
+    attention ``slot_pos`` carries a batch axis so every sequence tracks
+    its own ring occupancy (see :func:`layers.attn_cache_specs`).  The
+    default stays the shared-wave layout every existing caller uses."""
     out: dict[str, L.Spec] = {}
     for slot, kind in enumerate(cfg.block_pattern):
-        es = _cache_entry_specs(cfg, kind, batch, cache_len)
+        es = _cache_entry_specs(cfg, kind, batch, cache_len, per_slot)
         out.update({f"s{slot}_{k}": v for k, v in _stack_specs(es, cfg.n_super).items()})
     for ti, kind in enumerate(cfg.trailing):
-        es = _cache_entry_specs(cfg, kind, batch, cache_len)
+        es = _cache_entry_specs(cfg, kind, batch, cache_len, per_slot)
         out.update({f"t{ti}_{k}": v for k, v in es.items()})
     return out
 
 
-def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
-    sp = cache_specs(cfg, batch, cache_len)
+def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int, *,
+                 per_slot: bool = False) -> dict:
+    sp = cache_specs(cfg, batch, cache_len, per_slot=per_slot)
     out = {}
     for n, (shape, _) in sp.items():
         if n.endswith("slot_pos"):
@@ -123,13 +130,15 @@ def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
     return out
 
 
-def cache_axes(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
-    return L.specs_axes(cache_specs(cfg, batch, cache_len))
+def cache_axes(cfg: ModelConfig, batch: int, cache_len: int, *,
+               per_slot: bool = False) -> dict:
+    return L.specs_axes(cache_specs(cfg, batch, cache_len, per_slot=per_slot))
 
 
-def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+               per_slot: bool = False) -> dict:
     out = {}
-    for n, sd in cache_shapes(cfg, batch, cache_len).items():
+    for n, sd in cache_shapes(cfg, batch, cache_len, per_slot=per_slot).items():
         if n.endswith("slot_pos"):
             out[n] = jnp.full(sd.shape, -1, jnp.int32)
         else:
@@ -224,7 +233,9 @@ def forward(params: dict, inputs: dict, cfg: ModelConfig, *, mode: str = "train"
     """Run the stack.  Returns (logits, new_cache, aux_loss).
 
     inputs: {"tokens": [B,S] int32, optional "ext_embed": [B,L,D]}.
-    decode mode: tokens is [B,1]; ``pos`` is a scalar int32 position.
+    decode mode: tokens is [B,1]; ``pos`` is a scalar int32 position, or a
+    ``[B]`` int32 vector when the cache uses the per-slot (continuous
+    batching) layout — see :func:`cache_specs`.
     """
     x = _embed_inputs(params, inputs, cfg)
     pattern = cfg.block_pattern

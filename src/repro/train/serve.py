@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -18,11 +20,32 @@ def make_prefill_step(cfg: ModelConfig):
 
 def make_decode_step(cfg: ModelConfig):
     def decode_step(params, cache, tokens, pos):
-        """tokens [B,1] int32; pos scalar int32 -> (cache, logits [B,1,V])."""
+        """tokens [B,1] int32; pos scalar int32 (wave batching) or [B]
+        int32 (continuous batching over a per-slot cache) ->
+        (cache, logits [B,1,V])."""
         logits, new_cache, _ = T.forward(params, {"tokens": tokens}, cfg,
                                          mode="decode", cache=cache, pos=pos)
         return new_cache, logits
     return decode_step
+
+
+# -- shared jitted steps -----------------------------------------------------
+# Every serving peer runs the SAME program for a given config; memoizing
+# the jitted callables means a fleet of N prefill + M decode workers
+# compiles each step once, not N+M times (``ModelConfig`` is frozen, so
+# it keys the cache directly).  Distinct batch shapes still trace
+# separately inside the one jit, as usual.
+
+
+@functools.lru_cache(maxsize=None)
+def jit_prefill_step(cfg: ModelConfig):
+    return jax.jit(make_prefill_step(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_decode_step(cfg: ModelConfig, donate: bool = False):
+    fn = make_decode_step(cfg)
+    return jax.jit(fn, donate_argnums=1) if donate else jax.jit(fn)
 
 
 def greedy_token(logits):
@@ -30,10 +53,16 @@ def greedy_token(logits):
 
 
 def pad_cache_to(cache: dict, target: dict):
-    """Pad a prefill cache (seq width S) into the decode cache layout (width W>=S)."""
+    """Pad a prefill cache (seq width S) into the decode cache layout
+    (width W>=S).  Entries whose target has one more axis than the source
+    (the per-slot ``slot_pos``, which gains a batch axis in the continuous
+    batching layout) are expanded with a singleton batch dim before
+    padding."""
     out = {}
     for k, tgt in target.items():
         src = cache[k]
+        if src.ndim == len(tgt.shape) - 1:
+            src = src[None] if len(tgt.shape) == 2 else jnp.expand_dims(src, -2)
         if src.shape == tgt.shape:
             out[k] = src.astype(tgt.dtype)
             continue

@@ -71,6 +71,12 @@ class Codec:
 
     id: int = RAW
     name: str = "raw"
+    #: a lossy codec does not restore chunk bytes bit-exact.  The stream
+    #: sender ships chunk 0 RAW under a lossy codec: streamed payloads
+    #: commonly open with a structured prefix (magic/routing fields an
+    #: execute-on-arrival ifunc peeks at, e.g. the KV slab header), and
+    #: that prefix must survive the wire exactly.
+    lossy: bool = False
 
     def encode(self, data) -> bytes | None:
         return None                      # raw never re-encodes
@@ -117,6 +123,7 @@ class RleCodec(Codec):
 class Quant8Codec(Codec):
     id = QUANT8
     name = "quant8"
+    lossy = True
 
     def encode(self, data) -> bytes | None:
         if len(data) % 4 or len(data) < 8:

@@ -484,6 +484,18 @@ class Dispatcher:
             target_ctx.obs = self.obs
         return peer
 
+    def set_peer_codec(self, name: str, codec) -> None:
+        """(Re-)negotiate the wire codec streamed sends to ``name`` encode
+        their chunks with — the runtime half of codec negotiation: the
+        decode side *advertises* accepted codecs in its admission ack and
+        the sender arms the winner here, instead of baking one in at
+        ``add_peer`` time.  Safe while streams are idle; an in-flight
+        stream keeps the codec it opened with (``_StreamTx`` snapshots
+        it), so a renegotiation never splits one payload across codecs."""
+        peer = self.peers[name]
+        c = WC.get_codec(codec)
+        peer.codec = None if c.id == WC.RAW else c
+
     def attach_reply_ring(self, name: str, mailbox, channel) -> None:
         """Give a host peer a result-return path: ``mailbox`` is a
         source-owned ring (opened on the *source* context), ``channel`` the
@@ -712,7 +724,10 @@ class Dispatcher:
         desc = tx.desc
         off = seq * desc.chunk_bytes
         raw = tx.payload[off:off + desc.chunk_bytes]
-        coded = None if tx.codec is None else tx.codec.encode(raw)
+        # chunk 0 ships bit-exact under a lossy codec: the payload prefix
+        # carries routing fields arrival-executing ifuncs peek at
+        skip = tx.codec is None or (seq == 0 and tx.codec.lossy)
+        coded = None if skip else tx.codec.encode(raw)
         if coded is None:
             data, used = raw, WC.RAW
         else:
@@ -764,7 +779,8 @@ class Dispatcher:
             for seq in range(desc.n_chunks):
                 cell = prefix + desc.cell_off(seq)
                 raw = tx.payload[seq * chunk:(seq + 1) * chunk]
-                coded = None if codec is None else codec.encode(raw)
+                skip = codec is None or (seq == 0 and codec.lossy)
+                coded = None if skip else codec.encode(raw)
                 if coded is None:
                     data, used = raw, WC.RAW
                 else:
