@@ -1244,3 +1244,121 @@ def bench_serve(fleet_sizes: tuple = (1, 2), host_slots: int = 8,
     finally:
         gc.enable()
     return rows
+
+
+def bench_elastic(deadlines_ms: tuple = (20, 50, 100), repeats: int = 3,
+                  n_msgs: int = 1024) -> list[dict]:
+    """'fig_elastic': elastic-recovery latency vs heartbeat deadline plus
+    the control plane's price against the data plane (PR 10).
+
+    Recovery arm: a two-peer fleet heartbeats under an
+    ``ElasticController`` riding the dispatcher poll loop; the
+    ``FaultInjector`` kills one peer with a task in flight and the timed
+    window runs kill -> recovery complete (peer retired from the
+    dispatcher, in-flight future failed with TransportError, generation
+    bumped).  Rows ``recover/<D>ms`` carry us = time-to-recover (best of
+    ``repeats``) and ``ratio`` = recovery time over the deadline — the
+    whole point of a heartbeat deadline is that detection is bounded by
+    it, so check_bench (PR >= 10) holds ratio in [0.8, 3.0]: recovery
+    tracks the configured deadline, not poll-loop luck.
+
+    Overhead arm: ``hb_overhead`` prices the control ring against the
+    slim data path.  ``n_msgs`` warm tasks stream through the same fleet
+    under a 0.5s deadline (2 members x 3 beats/deadline = 12 beats/s of
+    nominal control traffic) and ratio = nominal beats-per-second over
+    measured task msgs-per-second.  check_bench holds ratio <= 0.02 —
+    the <=2% heartbeat budget from ROADMAP item 4.
+    """
+    import gc
+
+    from repro.core import register_ifunc
+    from repro.runtime import ElasticController, FleetState
+    from repro.tasks import TaskRuntime
+    from repro.transport import (FaultInjector, LoopbackFabric,
+                                 ProgressEngine, RdmaFabric, TransportError)
+
+    libdir = pathlib.Path(os.environ["REPRO_IFUNC_LIB_DIR"])
+    names = ("pa", "pb")
+
+    def mk(deadline_s):
+        src = Context("src", lib_dir=libdir)
+        rt = TaskRuntime(src, engine=ProgressEngine(flush_threshold=64,
+                                                    inflight_window="trailer"),
+                         default_timeout=30.0)
+        fabs, ctxs = {}, {}
+        for i, name in enumerate(names):
+            fabs[name] = RdmaFabric() if i % 2 == 0 else LoopbackFabric()
+            ctxs[name] = Context(name, lib_dir=libdir, link_mode="remote")
+            rt.add_peer(name, fabs[name], ctxs[name], n_slots=8,
+                        slot_size=16 << 10, target_args={})
+        fleet = FleetState(list(names), heartbeat_deadline=deadline_s)
+        inj = FaultInjector()
+        ec = ElasticController(rt, fleet, injector=inj)  # auto_poll rides
+        for name in names:                               # rt.progress()
+            ec.watch(name, fabs[name], ctxs[name])
+        h = register_ifunc(src, "task_sum")
+        return rt, ec, inj, h
+
+    def settle(rt, fut):
+        rt.flush()
+        while not fut.done():
+            rt.progress()
+
+    def run_recover(deadline_s):
+        rt, ec, inj, h = mk(deadline_s)
+        f = rt.submit("pa", h, b"\x01" * 8)   # warm rings + fold a beat
+        settle(rt, f)
+        f.result()
+        rt.progress()                          # freshest possible last_seen
+        inj.kill_peer("pa")
+        doomed = rt.submit("pa", h, b"\x02" * 8)
+        rt.flush()
+        t0 = time.perf_counter()
+        while "pa" in rt.dispatcher.peers:     # poll loop drives detection
+            rt.progress()
+        dt = time.perf_counter() - t0
+        assert doomed.done(), "fail_inflight should resolve the future"
+        try:
+            doomed.result()
+            raise AssertionError("future on the dead peer must fail")
+        except TransportError:
+            pass
+        assert ec.stats["deaths"] == 1 and rt.generation > 0
+        return dt
+
+    def run_overhead(deadline_s=0.5):
+        rt, ec, _inj, h = mk(deadline_s)
+        payload = b"\x05" * 64
+        for name in names:                     # warm the SLIM cache
+            settle(rt, rt.submit(name, h, payload))
+        t0 = time.perf_counter()
+        i = 0
+        while i < n_msgs:
+            burst = [rt.submit(names[i % len(names)], h, payload)
+                     for _ in range(min(8, n_msgs - i))]
+            i += len(burst)
+            rt.flush()
+            while not all(f.done() for f in burst):
+                rt.progress()
+        dt = time.perf_counter() - t0
+        msgs_per_s = n_msgs / dt
+        beats_per_s = len(names) * 3.0 / deadline_s   # interval=deadline/3
+        return msgs_per_s, beats_per_s / msgs_per_s
+
+    rows = []
+    run_recover(deadlines_ms[0] / 1e3)         # warm (link cache, slabs)
+    gc.collect()
+    gc.disable()
+    try:
+        for dms in deadlines_ms:
+            dt = min(run_recover(dms / 1e3) for _ in range(repeats))
+            rows.append({"bench": "fig_elastic", "api": "recover",
+                         "size": dms, "cell": f"recover/{dms}ms",
+                         "us": dt * 1e6, "ratio": dt / (dms / 1e3)})
+        msgs_per_s, ratio = run_overhead()
+        rows.append({"bench": "fig_elastic", "api": "hb", "size": n_msgs,
+                     "cell": "hb_overhead", "us": 1e6 / msgs_per_s,
+                     "msgs_per_s": msgs_per_s, "ratio": ratio})
+    finally:
+        gc.enable()
+    return rows

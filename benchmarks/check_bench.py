@@ -46,7 +46,13 @@ Checks (used by the CI bench-smoke step and by hand after a full run):
     must not cost throughput to buy its isolation) and completes
     requests at >= 25 req/s (an absolute CI floor well under the
     measured ~100 req/s, catching order-of-magnitude regressions
-    without being machine-sensitive).
+    without being machine-sensitive);
+11. (BENCH_PR10+) the ``fig_elastic`` rows exist; every ``recover/<D>ms``
+    cell's persisted ratio (time-to-recover over the heartbeat deadline)
+    sits in [0.8, 3.0] — detection must be bounded by the configured
+    deadline, not by poll-loop luck or sweep starvation; and the
+    ``hb_overhead`` ratio (control-ring beats/s over data-plane task
+    msgs/s) is <= 0.02 — the 2% heartbeat budget from ROADMAP item 4.
 
     PYTHONPATH=src python benchmarks/check_bench.py [BENCH_PR2.json ...]
 """
@@ -257,6 +263,33 @@ def check(path: pathlib.Path) -> int:
         assert req >= 25.0, (
             f"fabric request completion rate {req:.1f} req/s under the "
             f"25 req/s CI floor at c{big}")
+
+    elastic = {r["cell"]: r for r in rows if r["bench"] == "fig_elastic"}
+    deadlines = sorted(int(c.split("/")[1][:-2]) for c in elastic
+                       if c.startswith("recover/"))
+    if pr >= 10:
+        assert deadlines, "no fig_elastic recover/* rows"
+        assert "hb_overhead" in elastic, "no fig_elastic hb_overhead row"
+    for dms in deadlines:
+        r = elastic[f"recover/{dms}ms"]
+        ratio = r.get("ratio")
+        assert ratio is not None, f"recover cell without ratio: {r}"
+        print(f"fig_elastic {dms:>4}ms: recover={r['us']:9.1f}us "
+              f"-> {ratio:.2f}x deadline")
+        assert 0.8 <= ratio <= 3.0, (
+            f"recovery time off the deadline at {dms}ms (ratio "
+            f"{ratio:.2f} outside [0.8, 3.0]) — death detection must be "
+            f"heartbeat-deadline-bound, neither early-fired nor starved "
+            f"by the poll loop")
+    if "hb_overhead" in elastic:
+        r = elastic["hb_overhead"]
+        ratio = r.get("ratio")
+        assert ratio is not None, f"hb_overhead cell without ratio: {r}"
+        print(f"fig_elastic hb_overhead: {r['msgs_per_s']:8.0f}msg/s "
+              f"beats/msgs={ratio:.4f}")
+        assert ratio <= 0.02, (
+            f"heartbeat overhead {ratio:.4f} over the 2% budget — the "
+            f"control ring must stay negligible next to the data plane")
 
     print(f"{path.name}: {len(rows)} rows OK")
     return 0

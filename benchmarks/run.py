@@ -39,7 +39,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Every run persists the
 normalized rows in the stable schema ``{bench, cell, us, msgs_per_s?,
-ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR9.json``
+ratio?}`` to the CURRENT PR's trajectory file only (``BENCH_PR10.json``
 at the repo root) — prior ``BENCH_PR*.json`` files are committed history
 and are never rewritten (PR 3's harness accidentally churned
 ``BENCH_PR2.json`` on every re-run; the per-PR-file routing that caused
@@ -57,9 +57,9 @@ fixes that going forward.
 
 ``--quick`` (the CI smoke mode) runs the cached-fast-path suite
 (fig5_cached incl. slim_agg + the four microbenches) plus fig_graph,
-fig_flow, and obs_overhead with reduced iteration counts.  ``device_agg``,
-``fig_stream``, and ``fig_serve`` run in full mode only: their committed
-rows survive a --quick merge untouched.
+fig_flow, fig_elastic, and obs_overhead with reduced iteration counts.
+``device_agg``, ``fig_stream``, and ``fig_serve`` run in full mode only:
+their committed rows survive a --quick merge untouched.
 """
 
 from __future__ import annotations
@@ -76,7 +76,7 @@ from benchmarks import bench_ifunc as B  # noqa: E402
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT = ROOT / "experiments" / "bench_results.json"
-CURRENT = ROOT / "BENCH_PR9.json"    # the ONE file this harness writes
+CURRENT = ROOT / "BENCH_PR10.json"   # the ONE file this harness writes
 
 
 def _emit(rows: list[dict]) -> None:
@@ -209,6 +209,12 @@ def fig_serve() -> list[dict]:
     return B.bench_serve()
 
 
+def fig_elastic(quick: bool = False) -> list[dict]:
+    if quick:
+        return B.bench_elastic(repeats=1, n_msgs=256)
+    return B.bench_elastic()
+
+
 def roofline_summary() -> list[dict]:
     path = OUT.parent / "roofline.json"
     if not path.exists():
@@ -237,12 +243,14 @@ def main() -> None:
                   lambda: micro_checksum(quick=True),
                   lambda: micro_header(quick=True),
                   lambda: micro_agg(quick=True),
-                  lambda: obs_overhead(quick=True)]
+                  lambda: obs_overhead(quick=True),
+                  lambda: fig_elastic(quick=True)]
     else:
         suites = [fig3_latency, fig4_throughput, fig5_cached, fig_stream,
                   fig_graph, fig_flow, s34_link_cost, tierB_uvm, device_agg,
                   obs_overhead, transport_fanout, micro_slab, micro_checksum,
-                  micro_header, micro_agg, fig_serve, roofline_summary]
+                  micro_header, micro_agg, fig_serve, fig_elastic,
+                  roofline_summary]
     all_rows = []
     for fn in suites:
         rows = fn()

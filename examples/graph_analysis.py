@@ -30,11 +30,24 @@ model's queue term steals its tasks (fetch beats a backlogged owner) and
 "dynamically choose where code runs as the application progresses" moment.
 
     PYTHONPATH=src python examples/graph_analysis.py
+
+With ``--kill-peer`` the run doubles as the elastic-recovery smoke: an
+:class:`ElasticController` heartbeats every host peer on a control ring
+off the dispatcher poll loop, and a :class:`FaultInjector` kills shard
+1's owner mid-round with relax tasks in flight.  The heartbeat deadline
+— not any manual hook — fires the recovery (futures fail with
+TransportError and are re-run locally, shards reassign deterministically,
+corr_ids fence the dead generation), the peer is re-admitted with a warm
+LinkCache manifest, serves SLIM traffic again with zero NACKs, and the
+SSSP result still matches Bellman-Ford.
+
+    PYTHONPATH=src python examples/graph_analysis.py --kill-peer
 """
 
 import os
 import pathlib
 import sys
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
 os.environ.setdefault("REPRO_IFUNC_LIB_DIR",
@@ -45,13 +58,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Context, register_ifunc
+from repro.core import frame as FR
 from repro.core.codegen import deserialize_uvm
 from repro.parallel.sharding import make_mesh
+from repro.runtime import ElasticController, FleetState
 from repro.tasks import (DataDirectory, Decision, PlacementEngine,
                          TaskRuntime, LOCAL_SITE)
-from repro.transport import (Dispatcher, LoopbackFabric, ProgressEngine,
-                             RdmaFabric)
+from repro.tasks.future import TaskTimeout
+from repro.transport import (Dispatcher, FaultInjector, LoopbackFabric,
+                             ProgressEngine, RdmaFabric, TransportError)
 from repro.transport.device_fabric import DeviceMeshFabric
+
+KILL_MODE = "--kill-peer" in sys.argv
+KILL_PEER = "rdma_b"            # shard 1's owner dies mid-run
 
 V, T = 128, 128                 # vertices; one μVM tile holds the graph
 N_SHARDS = 4
@@ -105,10 +124,11 @@ bump_h = register_ifunc(source, "counter_bump")
 HOST_PEERS = ("rdma_a", "rdma_b", "csd")
 FABRICS = {"rdma_a": RdmaFabric(), "rdma_b": RdmaFabric(),
            "csd": LoopbackFabric()}
-stores = {}
+stores, ctxs = {}, {}
 for name in HOST_PEERS:
     stores[name] = {"shards": {}}
-    rt.add_peer(name, FABRICS[name], Context(name, link_mode="remote"),
+    ctxs[name] = Context(name, link_mode="remote")
+    rt.add_peer(name, FABRICS[name], ctxs[name],
                 n_slots=8, slot_size=SLOT, target_args=stores[name])
 
 n_dev = len(jax.devices())
@@ -132,6 +152,27 @@ directory.add_replica(3, LOCAL_SITE)
 local_shards = {3: shard_bytes[3]}
 engine = PlacementEngine(directory, rt.dispatcher, steal_depth=3)
 
+ec = injector = fleet = None
+if KILL_MODE:
+    # the elastic fabric: hb_beat ifuncs on a control ring per host peer,
+    # stepped from inside every Dispatcher.poll (auto_poll) — the workload
+    # loop below never calls the controller directly
+    fleet = FleetState(list(HOST_PEERS), heartbeat_deadline=0.2)
+    injector = FaultInjector()
+    ec = ElasticController(rt, fleet, placement=engine, injector=injector)
+    for name in HOST_PEERS:
+        ec.watch(name, FABRICS[name], ctxs[name])
+
+    def _reseed_shards(dead):
+        # ownership already moved (deterministic round-robin); the source
+        # re-ships its canonical shard bytes to each new owner — the
+        # restore-from-replica step a checkpointing deployment would do
+        for sid in directory.shards:
+            owner = directory.owner(sid)
+            if owner in stores and sid not in stores[owner]["shards"]:
+                stores[owner]["shards"][sid] = shard_bytes[sid]
+    ec.on_death.append(_reseed_shards)
+
 print(f"graph: {V} vertices, {len(edges)} edges in {N_SHARDS} shards "
       f"({', '.join(f's{s}={len(shard_bytes[s])}B@{o}' for s, o in OWNERS.items())}) "
       f"+ {n_dev}-shard device adjacency; peers over "
@@ -151,9 +192,31 @@ decisions = {"migrate": 0, "fetch": 0, "local": 0}
 moves = []
 rounds = 0
 CONGEST_ROUND = 2               # burst background traffic at the hot owner
+killed = readmitted = False
+recovered_tasks = 0
+fence_gen = 0
 
 while frontier and rounds < 64:
     rounds += 1
+
+    if KILL_MODE and killed and not readmitted:
+        # one round after the death: the restarted peer rejoins with a
+        # fresh context, a generation fence, and the one-frame warm
+        # LinkCache manifest; shard 1 moves home so it serves again
+        FABRICS[KILL_PEER] = RdmaFabric()
+        ctxs[KILL_PEER] = Context(KILL_PEER, link_mode="remote")
+        stores[KILL_PEER] = {"shards": {}}
+        re_peer = ec.readmit(KILL_PEER, FABRICS[KILL_PEER], ctxs[KILL_PEER],
+                             target_args=stores[KILL_PEER],
+                             n_slots=8, slot_size=SLOT)
+        fence_gen = re_peer.fence
+        assert fence_gen == fleet.generation > 0
+        directory.move(1, KILL_PEER)
+        stores[KILL_PEER]["shards"][1] = shard_bytes[1]
+        readmitted = True
+        print(f"  round {rounds}: {KILL_PEER} re-admitted "
+              f"(gen={fence_gen}, manifest={len(ec.members[KILL_PEER].manifest)} "
+              f"entries) and takes shard 1 back")
     # 1) device tier: frontier-expansion counts per column shard (futures
     #    resolved from the compiled sweep, correlated by corr-id)
     f_ind = np.zeros(V, np.float32)
@@ -212,10 +275,46 @@ while frontier and rounds < 64:
             futs.append((sid, "local",
                          rt.run_local(local_relax, local_shards[sid], fr)))
 
+    # 3.5) the failure: once the victim's cache is warm and it has served
+    #      this round, it silently dies with one relax in flight —
+    #      detection comes from the heartbeat deadline inside the poll
+    #      loop, never from this script
+    if (KILL_MODE and not killed
+            and rt.dispatcher.peers[KILL_PEER].cached
+            and any(getattr(f, "peer", None) == KILL_PEER
+                    for _, _, f in futs)):
+        doomed_sid = next(s for s in sorted(directory.shards)
+                          if directory.owner(s) == KILL_PEER)
+        doomed = rt.submit(KILL_PEER, relax_h,
+                           {"sid": doomed_sid,
+                            "frontier": by_shard[doomed_sid]})
+        futs.append((doomed_sid, "doomed", doomed))
+        injector.kill_peer(KILL_PEER)
+        rt.flush()
+        time.sleep(fleet.deadline + 0.05)
+        rt.progress()           # poll crank: beats fold, the deadline fires
+        killed = True
+        assert KILL_PEER not in rt.dispatcher.peers
+        assert fleet.alive() == sorted(set(HOST_PEERS) - {KILL_PEER})
+        assert directory.owner(doomed_sid) != KILL_PEER
+        assert doomed.done()    # failed by the recovery, not by a timeout
+        print(f"  round {rounds}: {KILL_PEER} KILLED with relax(s"
+              f"{doomed_sid}) in flight -> deadline fired "
+              f"(gen={fleet.generation}), s{doomed_sid} -> "
+              f"{directory.owner(doomed_sid)}, "
+              f"{ec.stats['futures_failed']} futures failed")
+
     # 4) min-merge updates -> next frontier
     new_frontier = {}
     for sid, how, fut in futs:
-        upd = fut.result()
+        try:
+            upd = fut.result()
+        except (TransportError, TaskTimeout):
+            # the relax died with its peer: re-run from the source's
+            # canonical shard bytes — at-least-once, the relax is a
+            # min-merge so a duplicate is idempotent
+            recovered_tasks += 1
+            upd = local_relax(shard_bytes[sid], by_shard[sid])
         if isinstance(upd, (bytes, bytearray)):
             upd = decode_updates(upd)
         for v, d in upd.items():
@@ -245,9 +344,10 @@ for _ in range(V):               # Bellman-Ford reference
 np.testing.assert_allclose(dist, ref, rtol=1e-5, atol=1e-5)
 assert np.isfinite(dist).all(), "graph not fully relaxed"
 
-mix_ok = all(decisions[k] > 0 for k in ("migrate", "fetch", "local"))
-assert mix_ok, f"placement mix degenerate: {decisions}"
-assert moves, "congestion never triggered an ownership rebalance"
+if not KILL_MODE:
+    mix_ok = all(decisions[k] > 0 for k in ("migrate", "fetch", "local"))
+    assert mix_ok, f"placement mix degenerate: {decisions}"
+    assert moves, "congestion never triggered an ownership rebalance"
 orphans = rt.stats["orphan_replies"]
 assert orphans == 0 and rt.pending() == 0, (orphans, rt.pending())
 
@@ -261,5 +361,29 @@ if _trace_out:
     doc = obs.tracer.export_chrome(_trace_out)
     print(f"trace: {len(doc['traceEvents'])} events "
           f"({obs.tracer.open_count()} open) -> {_trace_out}")
-print("GRAPH_OK")
+
+if KILL_MODE:
+    assert killed and readmitted, (killed, readmitted)
+    assert ec.stats["deaths"] == 1 and ec.stats["readmissions"] == 1
+    assert ec.stats["futures_failed"] >= 1      # the in-flight relax died
+    assert recovered_tasks >= 1                 # ... and was re-run locally
+    assert ec.stats["beats_folded"] > 0         # liveness = executed beats
+    re_peer = rt.dispatcher.peers[KILL_PEER]
+    assert re_peer.fence == fence_gen           # stale-gen replies fence
+    assert re_peer.stats["nacks"] == 0          # warm manifest: no NACK storm
+    assert re_peer.stats["replies"] >= 1        # and it served tasks again
+    fenced = re_peer.stats["fenced_orphans"]
+    post = rt.submit(KILL_PEER, relax_h, {"sid": 1, "frontier": []})
+    assert FR.corr_gen(post.corr_id) == fence_gen   # new epoch on the wire
+    rt.flush()
+    rt.drain()
+    assert decode_updates(post.result()) == {}
+    print(f"elastic: deaths={ec.stats['deaths']} "
+          f"failed={ec.stats['futures_failed']} recovered={recovered_tasks} "
+          f"readmit_gen={fence_gen} fenced_orphans={fenced} "
+          f"beats={ec.stats['beats_sent']}/{ec.stats['beats_folded']} "
+          f"manifest={ec.stats['manifest_entries']}")
+    print("ELASTIC_OK")
+else:
+    print("GRAPH_OK")
 sys.exit(0)

@@ -163,6 +163,34 @@ SIGNAL_OFF = 96             # header signal location; fletcher32 over [0, 96)
 NO_DIGEST = b"\0" * DIGEST_LEN
 AGG_NAME = "__agg__"        # header name of every aggregate container frame
 
+# -- generation-fenced correlation ids ---------------------------------------
+# The u64 corr_id carries the fleet generation in its top 16 bits so a
+# membership epoch rides every request/reply without a header change (the
+# FLAG_AGG sub-record table stores corr as <u8 too, so coalesced and device
+# paths keep the word intact).  A reply whose generation predates the
+# receiving peer's fence (stamped at re-admission) is a resurrection attempt
+# from a previous life and is dropped as a fenced orphan.  corr_id == 0
+# stays the no-reply sentinel: generation 0 + sequence 0 is never allocated.
+CORR_GEN_SHIFT = 48
+CORR_SEQ_MASK = (1 << CORR_GEN_SHIFT) - 1
+CORR_GEN_MAX = (1 << 16) - 1
+
+
+def make_corr(seq: int, gen: int = 0) -> int:
+    """Stamp ``gen`` (fleet generation, wraps at 16 bits) into the top word
+    of a correlation id.  ``seq`` must be nonzero for replyable frames."""
+    return ((gen & CORR_GEN_MAX) << CORR_GEN_SHIFT) | (seq & CORR_SEQ_MASK)
+
+
+def corr_gen(corr: int) -> int:
+    """The fleet generation a corr_id was allocated under."""
+    return (corr >> CORR_GEN_SHIFT) & CORR_GEN_MAX
+
+
+def corr_seq(corr: int) -> int:
+    """The per-runtime monotone sequence half of a corr_id."""
+    return corr & CORR_SEQ_MASK
+
 _HEADER_FMT = "<IQIQI32sI16sQQ"  # magic, frame_len, code_off, payload_off,
                                  # kind, name, flags, digest, corr_id,
                                  # cont_off

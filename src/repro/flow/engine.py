@@ -158,8 +158,15 @@ class FlowEngine:
         self.futures: dict[int, Future] = {}
         self._corr = 0
         self._gid = 0
+        #: per-live-chain progress records for elastic replay: corr ->
+        #: {entries, entry_ops, remaining, value, node} — updated by every
+        #: node's continue_chain (branch arrivals excluded: a branch result
+        #: in flight is not chain-level progress), consumed by
+        #: :meth:`on_peer_death` to replay from the last completed stage
+        self._chains: dict[int, dict] = {}
         self.stats = {"submitted": 0, "completed": 0, "errors": 0,
-                      "orphan_replies": 0, "reply_rejects": 0}
+                      "orphan_replies": 0, "reply_rejects": 0,
+                      "replays": 0, "replay_failed": 0}
         self.obs.metrics.register_dict("flow", self.stats)
         # the origin is a node like any other, so chains may route through
         # (or even end at) the submitting host; its 'fabric' to itself is
@@ -237,6 +244,13 @@ class FlowEngine:
                 else "+".join(b.peer for b in first.branches))
         fut = Future(self, corr, peer, flow.label)
         self.futures[corr] = fut
+        # the replay record: compiled entries align 1:1 with the builder
+        # ops (stage -> Hop, scatter -> Scatter, gather -> gather Hop), so
+        # a re-route can recover a dead stage's *candidate list* from the
+        # op its entry was compiled from
+        self._chains[corr] = {
+            "entries": entries, "entry_ops": tuple(flow._ops),
+            "remaining": entries, "value": args, "node": self.ctx.name}
         self.stats["submitted"] += 1
         tr = self.obs.tracer
         sp = None
@@ -340,9 +354,139 @@ class FlowEngine:
         """Drop gather state a resolved (or failed) chain left behind — an
         error short-circuit races its sibling branches, which may still be
         rendezvousing at the gather peer."""
+        self._chains.pop(corr, None)
         for node in self.nodes.values():
             for key in [k for k in node.gathers if k[0] == corr]:
                 del node.gathers[key]
+
+    # -- elastic replay ------------------------------------------------------
+
+    def note_progress(self, corr: int, remaining, value, node_name: str
+                      ) -> None:
+        """Record a chain's last completed stage: ``remaining`` is the
+        entry suffix still to run, ``value`` the result in hand at
+        ``node_name``.  Called from every node's ``continue_chain``."""
+        st = self._chains.get(corr)
+        if st is not None:
+            st["remaining"] = tuple(remaining)
+            st["value"] = value
+            st["node"] = node_name
+
+    @staticmethod
+    def _touches(entries, dead: str) -> bool:
+        for e in entries:
+            if isinstance(e, D.Scatter):
+                if any(b.peer == dead for b in e.branches):
+                    return True
+            elif e.peer == dead:
+                return True
+        return False
+
+    def _recompile(self, st: dict, dead: str) -> tuple:
+        """Rebuild a chain's remaining entries with ``dead`` excluded.
+        A multi-candidate stage re-prices ``hop_cost`` over its surviving
+        candidates (the dead hop now costs infinity everywhere anyway); a
+        stage *pinned* to the dead peer, a scatter branch placed there, or
+        a gather rendezvous there is semantic placement — the chain fails
+        with the death instead of silently running somewhere else.
+        Surviving gather entries get a fresh gid so branch results of the
+        pre-death fan-out can never rendezvous with the replayed one."""
+        entries, rem = st["entries"], st["remaining"]
+        base = len(entries) - len(rem)
+        out = []
+        prev_peer = self.ctx.name
+        for k, ent in enumerate(rem):
+            op = st["entry_ops"][base + k]
+            if isinstance(ent, D.Scatter):
+                if any(b.peer == dead for b in ent.branches):
+                    raise D.FlowError(
+                        f"scatter branch placed at dead peer {dead!r}")
+                out.append(ent)
+                continue
+            if ent.kind == D.KIND_GATHER:
+                if ent.peer == dead:
+                    raise D.FlowError(
+                        f"gather rendezvous at dead peer {dead!r}")
+                self._gid = (self._gid % 0xFFFF) + 1
+                out.append(D.Hop(ent.peer, ent.ifunc, ent.digest, ent.bind,
+                                 gid=self._gid, kind=D.KIND_GATHER))
+                prev_peer = ent.peer
+                continue
+            if ent.peer != dead:
+                out.append(ent)
+                prev_peer = ent.peer
+                continue
+            _, ifunc, at, bind, est = op
+            cands = [c for c in (at if isinstance(at, (list, tuple))
+                                 else [at])
+                     if c != dead and c in self.nodes]
+            if not cands:
+                raise D.FlowError(
+                    f"stage {ifunc!r} pinned to dead peer {dead!r} "
+                    f"(no surviving candidate)")
+            peer = self.pick_peer(prev_peer, cands, est)
+            out.append(D.Hop(peer, ent.ifunc, ent.digest, ent.bind))
+            prev_peer = peer
+        return tuple(out)
+
+    def on_peer_death(self, dead: str) -> int:
+        """Elastic recovery, flow side (driven by the ElasticController):
+        retire the dead node and its lanes everywhere, then for every live
+        chain whose *remaining* route touches the dead peer, re-route
+        around it and replay from the last completed stage — the replayed
+        frames reuse the normal forward path, so SLIM->NACK->FULL rebuild
+        machinery covers any cache the survivors are missing.  Chains that
+        cannot re-route (stage/scatter/gather pinned to the dead peer)
+        fail their futures with a TransportError.  Returns chains
+        replayed."""
+        node = self.nodes.pop(dead, None)
+        ret = self.returns.pop(dead, None)
+        if ret is not None:
+            self.pe.release_slab(ret["ch"])
+        for nd in self.nodes.values():
+            nd.dispatcher.remove_peer(dead)
+            if nd.outbox:
+                # deferred forwards to the dead peer: the chain record
+                # still shows the pre-forward remaining, so the replay
+                # below covers them — the queued copy would only duplicate
+                nd.outbox = type(nd.outbox)(
+                    e for e in nd.outbox if e[0] != dead)
+        if node is not None:
+            for pname in list(node.dispatcher.peers):
+                node.dispatcher.remove_peer(pname)   # release its slabs
+        replayed = 0
+        for corr, st in list(self._chains.items()):
+            fut = self.futures.get(corr)
+            if fut is None or fut.done():
+                self._chains.pop(corr, None)
+                continue
+            if not self._touches(st["remaining"], dead):
+                continue                 # untouched chains keep running —
+                #                          replaying them would double-run
+            try:
+                new = self._recompile(st, dead)
+            except D.FlowError as e:
+                self.futures.pop(corr, None)
+                self._cleanup(corr)
+                fut.set_exception(TransportError(
+                    f"chain corr={corr}: peer {dead!r} died and the route "
+                    f"cannot be rebuilt: {e}"))
+                self.stats["errors"] += 1
+                self.stats["replay_failed"] += 1
+                continue
+            # pre-death rendezvous state for this chain is unusable (fresh
+            # gids); drop it, keep the chain record
+            for nd in self.nodes.values():
+                for key in [k for k in nd.gathers if k[0] == corr]:
+                    del nd.gathers[key]
+            done_prefix = len(st["entries"]) - len(st["remaining"])
+            st["entries"] = st["entries"][:done_prefix] + new
+            st["remaining"] = new
+            self.stats["replays"] += 1
+            replayed += 1
+            self.origin.continue_chain(
+                D.Chain(self.ctx.name, corr, new), st["value"])
+        return replayed
 
     # -- progress -----------------------------------------------------------
 

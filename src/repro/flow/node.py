@@ -53,7 +53,7 @@ class FlowNode:
         self._pricer = None
         self.stats = {"forwards": 0, "gather_buffered": 0,
                       "gather_reduced": 0, "replies": 0, "errors": 0,
-                      "deferred": 0, "gather_orphans": 0}
+                      "deferred": 0, "gather_orphans": 0, "dead_drops": 0}
         self.obs = self.dispatcher.obs
         self.obs.metrics.register_dict(f"node.{name}", self.stats)
         ctx.flow = self                 # install the poll_ifunc hook
@@ -213,6 +213,13 @@ class FlowNode:
             self.engine.post_reply(self, chain, value, is_err=False)
             return
         head = ents[0]
+        if not (isinstance(head, D.Hop)
+                and head.kind in (D.KIND_GATHER, D.KIND_GATHER_ARRIVAL)):
+            # chain-level progress record (elastic replay resumes from the
+            # last value that reached a stage boundary); a branch result
+            # headed for its rendezvous is NOT chain progress — the whole
+            # scatter replays if the gather peer dies
+            self.engine.note_progress(chain.corr, ents, value, self.name)
         try:
             if isinstance(head, D.Scatter):
                 rest = ents[1:]
@@ -249,6 +256,14 @@ class FlowNode:
             self._short_circuit(chain, e, f"{label}")
 
     def _forward(self, chain: D.Chain, hop: D.Hop, remaining, value) -> None:
+        if hop.peer not in self.engine.nodes:
+            # the hop's peer was retired by elastic recovery between this
+            # stage's execution and its forward: drop silently — the
+            # engine's chain record already replayed (or failed) the chain
+            # from the origin, and a short-circuit here would race that
+            # resolution with a spurious ERR
+            self.stats["dead_drops"] += 1
+            return
         h = self.handle(hop.ifunc, hop.digest)
         args = D.apply_bind(hop.bind, value)
         cont = D.pack_chain(D.Chain(chain.origin, chain.corr,

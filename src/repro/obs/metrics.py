@@ -193,6 +193,17 @@ class Registry:
         self._dicts[prefix] = stats
         return prefix
 
+    def unregister_dict(self, prefix: str, stats: dict | None = None) -> None:
+        """Drop a dict alias (peer retirement): removes ``prefix`` and any
+        suffix-uniquified aliases of the same dict.  ``stats`` (when given)
+        guards against unbinding a *different* dict that later claimed the
+        prefix.  Missing prefixes are ignored — retirement paths may race."""
+        victims = [p for p, d in self._dicts.items()
+                   if (p == prefix or p.startswith(prefix + "."))
+                   and (stats is None or d is stats)]
+        for p in victims:
+            del self._dicts[p]
+
     # -- read side ----------------------------------------------------------
 
     def snapshot(self) -> dict:

@@ -1,3 +1,5 @@
 from repro.runtime.checkpoint import CheckpointManager  # noqa: F401
-from repro.runtime.elastic import FleetState, StragglerMitigator  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    ElasticController, FleetState, StragglerMitigator,
+)
 from repro.runtime.controller import PodController, WorkerAgent  # noqa: F401

@@ -150,7 +150,12 @@ class PlacementEngine:
         """Modeled seconds for one hop carrying ``nbytes`` to a peer:
         fabric wire time plus the toll of everything already queued there.
         The one formula every decision below — and the flow compiler's
-        per-stage candidate pricing — is built from."""
+        per-stage candidate pricing — is built from.  A peer the
+        dispatcher no longer knows (retired by elastic recovery between
+        compile and re-price) costs infinity: the dead hop loses every
+        candidate comparison instead of KeyErroring the re-route."""
+        if peer_name not in self.dispatcher.peers:
+            return float("inf")
         return (self._wire(peer_name, nbytes)
                 + self.queue_depth(peer_name) * self.service_s)
 

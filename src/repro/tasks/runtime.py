@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import time
 
+from repro.core import frame as F
 from repro.tasks import wire
 from repro.tasks.future import Future, TaskState, TaskTimeout, wait_all
 from repro.transport import (DEFAULT_N_SLOTS, DEFAULT_SLOT_SIZE, Dispatcher,
@@ -50,6 +51,11 @@ class TaskRuntime:
         self.dispatcher.reply_codec = wire
         self.futures: dict[int, Future] = {}
         self._corr = 0
+        self.generation = 0      # fleet generation stamped into the top 16
+        #       bits of every allocated corr_id (frame.make_corr) — bumped
+        #       by the ElasticController on membership change, so a reply
+        #       from a peer's previous life is identifiable (and fenceable)
+        #       by its corr alone
         self.default_timeout = default_timeout
         self.stats = {"submitted": 0, "resolved": 0, "errors": 0,
                       "orphan_replies": 0, "local_runs": 0}
@@ -116,7 +122,7 @@ class TaskRuntime:
         it so the eventual reply is dropped as an orphan instead of
         accumulating registrations."""
         self._corr += 1
-        corr = self._corr
+        corr = F.make_corr(self._corr, self.generation)
         fut = Future(self, corr, peer, handle.name)
         self.futures[corr] = fut
         sp = self._begin_submit(fut, peer, handle.name)
@@ -168,10 +174,11 @@ class TaskRuntime:
         futs, corrs = [], []
         for _ in args_list:
             self._corr += 1
-            fut = Future(self, self._corr, peer, handle.name)
-            self.futures[self._corr] = fut
+            corr = F.make_corr(self._corr, self.generation)
+            fut = Future(self, corr, peer, handle.name)
+            self.futures[corr] = fut
             futs.append(fut)
-            corrs.append(self._corr)
+            corrs.append(corr)
         sent = d.send_ifunc_many(peer, handle, args_list,
                                  corr_ids=corrs, futures=futs)
         if self.obs.tracer.enabled:
@@ -201,7 +208,8 @@ class TaskRuntime:
         """Execute inline, wrapped in an already-resolved Future — the
         uniform result object for LOCAL placement decisions."""
         self._corr += 1
-        fut = Future(self, self._corr, "local", getattr(fn, "__name__", "fn"))
+        fut = Future(self, F.make_corr(self._corr, self.generation),
+                     "local", getattr(fn, "__name__", "fn"))
         fut._mark_sent(None)
         self.stats["local_runs"] += 1
         try:

@@ -19,6 +19,7 @@ Layer diagram (see ARCHITECTURE.md):
 from repro.transport.dispatcher import (  # noqa: F401
     DEFAULT_N_SLOTS, DEFAULT_SLOT_SIZE, Dispatcher, Peer, RingState,
 )
+from repro.transport.faults import FaultInjector  # noqa: F401
 from repro.transport.fabric import (  # noqa: F401
     Channel, Fabric, LoopbackChannel, LoopbackFabric, LoopbackMailbox,
     Mailbox, RdmaChannel, RdmaFabric, RdmaMailbox, TransportError,

@@ -131,7 +131,8 @@ _PEER_STAT_KEYS = (
     "sent", "bytes", "delivered", "rejected", "backpressure",
     "inflight_polls", "slim_sent", "nacks", "resent", "replies", "errors",
     "coalesced", "agg_sent", "agg_subs", "agg_replies", "agg_harvest_lost",
-    "nack_lost", "reply_rejects", "streams", "stream_chunks", "timed_out")
+    "nack_lost", "reply_rejects", "streams", "stream_chunks", "timed_out",
+    "fenced_orphans", "dropped_puts")
 
 _API = None      # repro.core.api, imported lazily (it imports codegen —
 #                  the transport layer must stay importable without it)
@@ -298,6 +299,13 @@ class Peer:
     reply_mailbox: object = None   # source-owned ring the target replies into
     reply_channel: object = None   # target->source path into it
     reply_tail: int = 0            # target-side produce index for replies
+    fence: int = 0                 # generation fence: replies whose corr was
+    #                                  allocated under an earlier fleet
+    #                                  generation (corr_gen < fence) are
+    #                                  resurrection attempts from this peer's
+    #                                  previous life — dropped + counted as
+    #                                  fenced_orphans.  Stamped at
+    #                                  re-admission; 0 = never fenced.
     stats: dict = field(
         default_factory=lambda: dict.fromkeys(_PEER_STAT_KEYS, 0))
 
@@ -392,6 +400,12 @@ class Dispatcher:
         self._sweep_raise = None   # deferred mid-batch ifunc exception (a
         #       corr-less poisoned slot behind already-swept frames): poll
         #       re-raises it only after processing those frames' statuses
+        self.faults = None       # FaultInjector: consulted (when set) at the
+        #       poll loop (down peers stop being swept), the post point
+        #       (k-th-put drops), and the ElasticController's beat pump
+        self.pollers: list = []  # side-band callables invoked at every
+        #       poll() entry — the ElasticController rides here so
+        #       heartbeats pump/sweep on the same cadence as data traffic
         if coalesce:
             self.set_coalescing(True)
 
@@ -511,12 +525,34 @@ class Dispatcher:
         peer.reply_tail = 0
 
     def remove_peer(self, name: str) -> None:
+        """Cleanly retire a peer: release its slab-backed channels, drop
+        queued coalesced sub-records and NACK retransmits, clear stripe
+        rotation and in-flight tracking, and unregister its obs alias (so a
+        re-admitted peer's stats dict reclaims ``peer.<name>`` instead of
+        landing under a uniquified suffix).  Idempotent — recovery paths
+        (controller deadline, explicit teardown, tests) may race to call it.
+        Does NOT resolve in-flight futures; call :meth:`fail_inflight`
+        (scoped via ``peers={name}``) *before* removal if the peer died
+        with work outstanding."""
         peer = self.peers.pop(name, None)
-        if peer is not None:
-            for r in peer.rings:
-                self.engine.release_slab(r.channel)
-            if peer.reply_channel is not None:
-                self.engine.release_slab(peer.reply_channel)
+        if peer is None:
+            return
+        for r in peer.rings:
+            self.engine.release_slab(r.channel)
+            r.inflight.clear()
+            r.corr_by_coords.clear()
+            r.agg_by_coords.clear()
+        if peer.reply_channel is not None:
+            self.engine.release_slab(peer.reply_channel)
+        peer.resend.clear()
+        for q in peer.coalesce.values():
+            q.subs.clear()
+        peer.coalesce.clear()
+        peer.stripe_tx = peer.stripe_rx = 0
+        self._active_streams = [tx for tx in self._active_streams
+                                if tx.peer is not peer]
+        self.obs.metrics.unregister_dict(f"peer.{name}", peer.stats)
+        self._rr = 0             # lane list shrank: restart the fair cursor
 
     # -- source side --------------------------------------------------------
 
@@ -589,8 +625,20 @@ class Dispatcher:
                     f"put:{rec.name}@{peer.name}", cat="wire",
                     actor=getattr(self.src_ctx, "name", "source"),
                     corr=rec.corr_id or None, bytes=len(view))
-        self.engine.post(lane.channel, view, lane.tail, peer=peer.name,
-                         on_complete=on_complete, future=future)
+        if (self.faults is not None
+                and self.faults.should_drop_put(peer.name)):
+            # injected wire loss: the source's bookkeeping proceeds exactly
+            # as if the put landed (tx record, tail advance, stripe
+            # rotation, stats) but the bytes never reach the target — the
+            # frame is recovered only when the liveness deadline fires
+            # fail_inflight, same as a genuinely lost put
+            peer.stats["dropped_puts"] += 1
+            if o.enabled:
+                o.recorder.add("drop_put", peer.name,
+                               f"{rec.name if rec else '?'} slot={lane.tail}")
+        else:
+            self.engine.post(lane.channel, view, lane.tail, peer=peer.name,
+                             on_complete=on_complete, future=future)
         if rec is not None and peer.fabric.kind != "device":
             lane.inflight[lane.tail] = rec
             if len(lane.inflight) > 2 * lane.mailbox.n_slots:
@@ -1779,6 +1827,10 @@ class Dispatcher:
                 mb.head += 1
                 mb.consumed += 1
                 for corr, name, payload, is_err in routed:
+                    if peer.fence and F.corr_gen(corr) < peer.fence:
+                        peer.stats["fenced_orphans"] += 1
+                        continue     # stale-generation record in a fresh
+                        #              container: fence per record
                     self._route_reply(corr, name, payload, is_err,
                                       decoded=False)
                 n += len(routed)
@@ -1788,6 +1840,20 @@ class Dispatcher:
             F.clear_frame(buf, hdr)
             mb.head += 1
             mb.consumed += 1
+            if peer.fence and F.corr_gen(corr) < peer.fence:
+                # a reply stamped under an earlier fleet generation: this
+                # peer died and was re-admitted since the request was
+                # allocated, so whatever future the corr named was already
+                # resolved (TransportError) by fail_inflight — executing the
+                # route would resurrect it.  Count + drop.
+                peer.stats["fenced_orphans"] += 1
+                if self.obs.enabled:
+                    self.obs.recorder.add(
+                        "fenced_orphan", peer.name,
+                        f"corr={corr} gen={F.corr_gen(corr)} "
+                        f"fence={peer.fence}")
+                n += 1
+                continue
             self._route_reply(corr, name, payload, is_err, decoded=False)
             n += 1
         return n
@@ -1816,6 +1882,11 @@ class Dispatcher:
         side effect; they do not count against ``budget``."""
         Status = _api().Status
 
+        for cb in tuple(self.pollers):
+            # side-band pollers (ElasticController heartbeat pump/sweep)
+            # run BEFORE the lane snapshot: one may retire a dead peer,
+            # and the data sweep below must not visit its rings
+            cb()
         if self._coalesce:
             self._age_flush()            # adaptive bound: no record waits
             #                              longer than agg_max_age queued
@@ -1836,6 +1907,13 @@ class Dispatcher:
                 peer, lane = lanes[(start + k) % len(lanes)]
                 if budget is not None and done >= budget:
                     break
+                if (self.faults is not None
+                        and self.faults.is_down(
+                            peer.name,
+                            delivered=peer.stats["delivered"])):
+                    continue     # injected death: the peer's progress side
+                    #              is gone — posted frames sit undelivered
+                    #              until the heartbeat deadline recovers them
                 if peer.stripe and lane is not peer.rings[
                         peer.stripe_rx % len(peer.rings)]:
                     continue         # striped peer: consume in the same
@@ -2020,18 +2098,23 @@ class Dispatcher:
         return n
 
     def fail_inflight(self, reason: str = "liveness deadline exceeded",
-                      min_age: float = 0.0) -> int:
+                      min_age: float = 0.0,
+                      peers: set | None = None) -> int:
         """Give up on tracked in-flight frames at least ``min_age`` seconds
         old: corr-carrying records resolve their futures with a
         TransportError through the reply router (instead of hanging
         forever on a wedged peer); the records and that peer's queued
         retransmits are dropped.  ``min_age`` is what makes this a *per
         frame* liveness floor — a healthy peer actively consuming its
-        backlog only has young records, and keeps them.  Returns futures
-        failed."""
+        backlog only has young records, and keeps them.  ``peers`` scopes
+        the pass to named peers (the elastic failure path: ONE peer died;
+        everyone else's in-flight work is healthy and must not be touched).
+        Returns futures failed."""
         now = time.monotonic()
         failed = 0
-        for peer in self.peers.values():
+        targets = (list(self.peers.values()) if peers is None
+                   else [p for n, p in self.peers.items() if n in peers])
+        for peer in targets:
             timed_out = 0
             for lane in peer.rings:
                 low = lane.mailbox.consumed

@@ -1,0 +1,520 @@
+"""Elastic fleet recovery: heartbeat ifuncs on the control ring, peer
+death -> scoped fail_inflight + retirement + deterministic shard
+reassignment, generation-fenced corr_ids, warm LinkCache restore at
+re-admission, flow re-route/replay around a dead hop, and the
+deterministic FaultInjector the whole suite is driven by.
+"""
+
+import struct
+
+import pytest
+
+from repro.core import Context, register_ifunc
+from repro.core import frame as F
+from repro.flow import Flow, FlowEngine
+from repro.runtime import ElasticController, FleetState
+from repro.tasks import DataDirectory, PlacementEngine, TaskRuntime
+from repro.transport import (Dispatcher, FaultInjector, LoopbackFabric,
+                             ProgressEngine, RdmaFabric, TransportError)
+
+DEADLINE = 0.3
+
+
+def _mk_rt(lib_dir, names=("a", "b"), **peer_kw):
+    src = Context("src", lib_dir=lib_dir)
+    rt = TaskRuntime(src, engine=ProgressEngine(flush_threshold=64,
+                                                inflight_window="trailer"),
+                     default_timeout=10.0)
+    fabs, ctxs = {}, {}
+    for i, name in enumerate(names):
+        fabs[name] = RdmaFabric() if i % 2 == 0 else LoopbackFabric()
+        ctxs[name] = Context(name, lib_dir=lib_dir, link_mode="remote")
+        rt.add_peer(name, fabs[name], ctxs[name], n_slots=4,
+                    slot_size=16 << 10, target_args={}, **peer_kw)
+    return rt, fabs, ctxs
+
+
+def _mk_ec(lib_dir, names=("a", "b"), *, injector=None, placement=None,
+           flow=None, auto_poll=False):
+    rt, fabs, ctxs = _mk_rt(lib_dir, names)
+    fleet = FleetState(list(names), heartbeat_deadline=DEADLINE)
+    ec = ElasticController(rt, fleet, injector=injector, placement=placement,
+                           flow=flow, lib_dir=lib_dir, auto_poll=auto_poll)
+    for name in names:
+        ec.watch(name, fabs[name], ctxs[name], now=0.0)
+    return rt, ec, fabs, ctxs
+
+
+def _settle(rt, fut, rounds=80):
+    rt.flush()
+    for _ in range(rounds):
+        rt.progress()
+        if fut.done():
+            return
+    raise AssertionError(f"future never resolved: {fut!r}")
+
+
+# ---------------------------------------------------------------------------
+# corr generation bits + FleetState fixes
+
+
+def test_corr_generation_codec():
+    corr = F.make_corr(123, 7)
+    assert F.corr_seq(corr) == 123 and F.corr_gen(corr) == 7
+    assert F.make_corr(123, 0) == 123          # gen 0 is the legacy corr
+    # the sequence wraps under the gen bits instead of spilling into them
+    assert F.corr_gen(F.make_corr(F.CORR_SEQ_MASK + 5, 3)) == 3
+
+
+def test_fleet_revival_gets_fresh_workerinfo():
+    """A restarted worker must NOT inherit its previous life's step_times /
+    backup_of (they used to leak into the straggler math)."""
+    fl = FleetState(["w0", "w1"], heartbeat_deadline=1.0)
+    fl.workers["w0"].step_times.append(9.9)
+    fl.workers["w0"].backup_of = "w1"
+    fl.heartbeat("w0", 0.0)
+    fl.heartbeat("w1", 0.0)
+    assert fl.sweep_dead(2.0) == ["w0", "w1"] and fl.generation == 1
+    gen = fl.generation
+    fl.heartbeat("w0", 3.0)                    # revival
+    w = fl.workers["w0"]
+    assert w.alive and w.step_times == [] and w.backup_of is None
+    assert fl.generation == gen + 1
+    fl.heartbeat("late", 3.0)                  # late join: also a fresh info
+    assert fl.generation == gen + 2 and fl.workers["late"].alive
+
+
+# ---------------------------------------------------------------------------
+# the fault injector
+
+
+def test_fault_injector_semantics():
+    inj = FaultInjector()
+    inj.kill_peer("a", after_delivered=3)
+    assert not inj.is_down("a", delivered=2)
+    assert inj.is_down("a", delivered=3)       # threshold reached: latches
+    assert inj.is_down("a", delivered=0)       # ... even if the count rewinds
+    assert inj.stats["kills"] == 1
+    inj.revive("a")
+    assert not inj.is_down("a", delivered=99)
+    inj.drop_put("b", kth=2)
+    assert not inj.should_drop_put("b")        # 1st put passes
+    assert inj.should_drop_put("b")            # 2nd dropped
+    assert not inj.should_drop_put("b")        # one-shot
+    inj.delay_heartbeats("c", beats=2)
+    assert inj.should_drop_beat("c") and inj.should_drop_beat("c")
+    assert not inj.should_drop_beat("c")
+
+
+def test_drop_kth_put_loses_the_frame(lib_dir):
+    """A dropped put is bookkept as sent at the source but never lands:
+    the future only resolves through the liveness deadline."""
+    rt, fabs, ctxs = _mk_rt(lib_dir, names=("a",))
+    inj = FaultInjector()
+    rt.dispatcher.faults = inj
+    h = register_ifunc(rt.ctx, "task_sum")
+    inj.drop_put("a", kth=1)
+    fut = rt.submit("a", h, b"\x01\x02")
+    rt.flush()
+    for _ in range(10):
+        rt.progress()
+    assert not fut.done()                      # the frame is genuinely gone
+    peer = rt.dispatcher.peers["a"]
+    assert peer.stats["dropped_puts"] == 1
+    assert inj.stats["dropped_puts"] == 1
+    assert rt.dispatcher.fail_inflight("deadline") == 1
+    with pytest.raises(TransportError):
+        fut.result()
+    # a lost put wedges the in-order ring for good — recovery is peer
+    # recycling (exactly what the elastic death path does), after which
+    # the one-shot injector lets traffic through again
+    rt.dispatcher.remove_peer("a")
+    rt.add_peer("a", fabs["a"], Context("a", lib_dir=ctxs["a"].lib_dir,
+                                        link_mode="remote"),
+                n_slots=4, slot_size=16 << 10, target_args={})
+    f2 = rt.submit("a", h, b"\x01\x02\x03")
+    _settle(rt, f2)
+    assert f2.result() == 6
+
+
+# ---------------------------------------------------------------------------
+# remove_peer: full + idempotent
+
+
+def test_remove_peer_full_and_idempotent(lib_dir):
+    rt, fabs, ctxs = _mk_rt(lib_dir)
+    h = register_ifunc(rt.ctx, "task_sum")
+    fut = rt.submit("a", h, b"\x01")
+    _settle(rt, fut)
+    assert fut.result() == 1
+    d = rt.dispatcher
+    assert "peer.a" in d.obs.metrics._dicts
+    d.remove_peer("a")
+    assert "a" not in d.peers
+    assert "peer.a" not in d.obs.metrics._dicts   # obs alias released
+    assert all(tx.peer.name != "a" for tx in d._active_streams)
+    d.remove_peer("a")                         # second call: clean no-op
+    d.remove_peer("never-was")                 # unknown peer: no-op too
+    f2 = rt.submit("b", h, b"\x02\x03")        # survivor unaffected
+    _settle(rt, f2)
+    assert f2.result() == 5
+
+
+def test_kill_mid_stream_resolves_and_cleans(lib_dir):
+    """A peer dying with a stream half-posted: fail_inflight resolves the
+    stream's future, remove_peer drops its _StreamTx from the pump."""
+    src = Context("src", lib_dir=lib_dir)
+    d = Dispatcher(src, ProgressEngine(flush_threshold=64))
+    d.add_peer("p", RdmaFabric(),
+               Context("p", lib_dir=lib_dir, link_mode="remote"),
+               n_slots=4, slot_size=32 << 10, target_args={"db": []})
+    inj = FaultInjector()
+    d.faults = inj
+    replies = []
+    d.reply_router = lambda corr, name, value, is_err, decoded: \
+        replies.append((corr, is_err))
+    h = register_ifunc(src, "host_aggregate")
+    assert d.send_stream("p", h, bytes(20000), corr_id=5,
+                         chunk_bytes=2048, window=2)
+    inj.kill_peer("p")                         # mid-stream: chunks remain
+    assert d._active_streams
+    for _ in range(5):
+        d.poll()                               # down peer: nothing executes
+    assert replies == []
+    assert d.fail_inflight("peer 'p' missed its deadline",
+                           peers={"p"}) >= 1
+    d.remove_peer("p")
+    assert replies == [(5, True)]
+    assert not d._active_streams               # the pump never touches it
+
+
+# ---------------------------------------------------------------------------
+# heartbeat-driven death + recovery
+
+
+def test_heartbeats_keep_fleet_alive(lib_dir):
+    rt, ec, fabs, ctxs = _mk_ec(lib_dir)
+    t = 0.0
+    for _ in range(12):                        # 4 deadline windows
+        t += 0.1
+        assert ec.step(now=t) == []
+    assert ec.fleet.alive() == ["a", "b"]
+    assert ec.stats["beats_sent"] >= 8
+    assert ec.stats["beats_folded"] >= 8       # executed beats, not sends
+
+
+def test_death_fires_scoped_recovery(lib_dir):
+    rt, ec, fabs, ctxs = _mk_ec(lib_dir, injector=FaultInjector())
+    h = register_ifunc(rt.ctx, "task_sum")
+    warm = rt.submit("a", h, b"\x01\x02\x03")
+    _settle(rt, warm)
+    assert warm.result() == 6                  # peer a's link cache is warm
+    ec.injector.kill_peer("a")
+    doomed = rt.submit("a", h, b"\x05")        # in flight at death
+    ok = rt.submit("b", h, b"\x01" * 4)        # other peer: must survive
+    rt.flush()
+    gen0 = ec.fleet.generation
+    t, dead = 0.0, []
+    while not dead:
+        t += 0.1
+        dead = ec.step(now=t)
+        assert t < 10 * DEADLINE
+    assert dead == ["a"]
+    assert ec.fleet.alive() == ["b"]
+    assert "a" not in rt.dispatcher.peers      # retired everywhere
+    assert not ec.members["a"].active          # control ring stops too
+    assert rt.generation == ec.fleet.generation > gen0
+    with pytest.raises(TransportError):        # scoped: only a's futures
+        doomed.result()
+    _settle(rt, ok)
+    assert ok.result() == 4
+    assert ec.members["a"].manifest            # warm-cache snapshot taken
+    assert ec.stats["deaths"] == 1 and ec.stats["futures_failed"] == 1
+
+
+def test_delayed_heartbeats_then_recovery(lib_dir):
+    """Beats dropped by the injector age the worker toward the deadline;
+    once the delay window passes, beats resume and the fleet holds."""
+    inj = FaultInjector()
+    rt, ec, fabs, ctxs = _mk_ec(lib_dir, injector=inj)
+    inj.delay_heartbeats("a", beats=2)
+    t = 0.0
+    for _ in range(2):
+        t += 0.11
+        assert ec.step(now=t) == []
+    assert ec.stats["beats_skipped"] == 2
+    for _ in range(6):
+        t += 0.11
+        assert ec.step(now=t) == []            # resumed beats beat the clock
+    assert ec.fleet.alive() == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# generation fencing
+
+
+def test_stale_generation_reply_is_fenced(lib_dir):
+    """A reply minted by a peer's previous life (gen bits below the fence)
+    is dropped as fenced_orphans — it must not resolve anything."""
+    rt, fabs, ctxs = _mk_rt(lib_dir, names=("a",))
+    h = register_ifunc(rt.ctx, "task_sum")
+    fut = rt.submit("a", h, b"\x01\x02")       # corr carries gen 0
+    rt.flush()
+    peer = rt.dispatcher.peers["a"]
+    peer.fence = 1                             # re-admission happened: epoch 1
+    for _ in range(40):
+        rt.progress()
+    assert not fut.done()                      # the stale reply was dropped
+    assert peer.stats["fenced_orphans"] == 1
+    assert rt.stats["orphan_replies"] == 0     # fenced != orphan: never demuxed
+    rt.generation = 1                          # post-fence epoch resolves fine
+    f2 = rt.submit("a", h, b"\x03\x04")
+    assert F.corr_gen(f2.corr_id) == 1
+    _settle(rt, f2)
+    assert f2.result() == 7
+    assert peer.stats["fenced_orphans"] == 1
+
+
+def test_readmit_stamps_fence_and_fresh_workerinfo(lib_dir):
+    inj = FaultInjector()
+    rt, ec, fabs, ctxs = _mk_ec(lib_dir, injector=inj)
+    inj.kill_peer("a")
+    t, dead = 0.0, []
+    while not dead:
+        t += 0.1
+        dead = ec.step(now=t)
+    ec.fleet.workers["a"].step_times = [1.0]   # stale-life residue
+    ctx2 = Context("a", lib_dir=lib_dir, link_mode="remote")
+    peer = ec.readmit("a", RdmaFabric(), ctx2, target_args={}, now=t,
+                      n_slots=4, slot_size=16 << 10)
+    assert peer.fence == ec.fleet.generation > 0
+    assert rt.generation == ec.fleet.generation
+    w = ec.fleet.workers["a"]
+    assert w.alive and w.step_times == []      # fresh WorkerInfo
+    assert ec.fleet.alive() == ["a", "b"]
+    assert ec.members["a"].active
+    for _ in range(3):                         # control ring beats again
+        t += 0.11
+        assert ec.step(now=t) == []
+
+
+# ---------------------------------------------------------------------------
+# warm LinkCache restore
+
+
+def test_warm_restore_zero_nacks(lib_dir):
+    inj = FaultInjector()
+    rt, ec, fabs, ctxs = _mk_ec(lib_dir, injector=inj)
+    h = register_ifunc(rt.ctx, "task_sum")
+    warm = rt.submit("a", h, b"\x01\x02\x03")
+    _settle(rt, warm)
+    inj.kill_peer("a")
+    t, dead = 0.0, []
+    while not dead:
+        t += 0.1
+        dead = ec.step(now=t)
+    manifest = ec.members["a"].manifest
+    assert manifest and manifest[0][0] == "task_sum"
+    # restart = a brand-new context (empty LinkCache), warm restore on
+    ctx2 = Context("a", lib_dir=lib_dir, link_mode="remote")
+    peer = ec.readmit("a", RdmaFabric(), ctx2, target_args={}, now=t,
+                      n_slots=4, slot_size=16 << 10)
+    assert (manifest[0][0], manifest[0][1]) in ctx2.link_cache.entries
+    assert manifest[0][1] in peer.cached       # source resumes SLIM at once
+    f2 = rt.submit("a", h, b"\x02" * 5)
+    _settle(rt, f2)
+    assert f2.result() == 10
+    assert peer.stats["nacks"] == 0            # zero NACK_UNCACHED
+    assert peer.stats["slim_sent"] >= 1        # and it WAS the slim path
+
+
+def test_cold_restart_nack_storm_is_the_alternative(lib_dir):
+    """The contrast case: same restart, warm=False, but the source still
+    believes the cache is hot -> SLIM -> NACK_UNCACHED -> FULL rebuild.
+    The task completes either way; the manifest only saves the storm."""
+    inj = FaultInjector()
+    rt, ec, fabs, ctxs = _mk_ec(lib_dir, injector=inj)
+    h = register_ifunc(rt.ctx, "task_sum")
+    warm = rt.submit("a", h, b"\x01\x02\x03")
+    _settle(rt, warm)
+    inj.kill_peer("a")
+    t, dead = 0.0, []
+    while not dead:
+        t += 0.1
+        dead = ec.step(now=t)
+    manifest = ec.members["a"].manifest
+    ctx2 = Context("a", lib_dir=lib_dir, link_mode="remote")
+    peer = ec.readmit("a", RdmaFabric(), ctx2, target_args={}, warm=False,
+                      now=t, n_slots=4, slot_size=16 << 10)
+    peer.cached.update(dg for _, dg in manifest)   # stale source belief
+    f2 = rt.submit("a", h, b"\x02" * 5)
+    _settle(rt, f2)
+    assert f2.result() == 10                   # FULL rebuild saves the task
+    assert peer.stats["nacks"] >= 1            # ... but the storm happened
+
+
+# ---------------------------------------------------------------------------
+# deterministic shard reassignment
+
+
+def test_shard_reassignment_is_deterministic(lib_dir):
+    def build():
+        inj = FaultInjector()
+        rt, fabs, ctxs = _mk_rt(lib_dir, names=("a", "b", "c"))
+        fleet = FleetState(["a", "b", "c"], heartbeat_deadline=DEADLINE)
+        dirx = DataDirectory()
+        for sid in range(7):
+            dirx.register(sid, ("a", "b", "c")[sid % 3], nbytes=1024)
+        pl = PlacementEngine(dirx, rt.dispatcher)
+        ec = ElasticController(rt, fleet, injector=inj, placement=pl,
+                               lib_dir=lib_dir, auto_poll=False)
+        for name in ("a", "b", "c"):
+            ec.watch(name, fabs[name], ctxs[name], now=0.0)
+        inj.kill_peer("b")
+        t, dead = 0.0, []
+        while not dead:
+            t += 0.1
+            dead = ec.step(now=t)
+        assert dead == ["b"]
+        return {sid: dirx.owner(sid) for sid in dirx.shards}, ec
+
+    owners1, ec1 = build()
+    owners2, ec2 = build()
+    assert owners1 == owners2                  # every survivor computes this
+    assert "b" not in owners1.values()         # dead peer owns nothing
+    assert ec1.stats["shards_moved"] == 2      # shards 1 and 4 moved
+    # round-robin over sorted survivors: sid 1 -> a, sid 4 -> c
+    assert owners1[1] == "a" and owners1[4] == "c"
+
+
+# ---------------------------------------------------------------------------
+# flow re-route / replay
+
+
+def _blob(runs):
+    return struct.pack("<I", len(runs)) + b"".join(
+        struct.pack("<II", v, c) for v, c in runs)
+
+
+_ETL_OUT = {"count": 5, "sum": 500, "min": 100, "max": 100}
+
+
+def _mk_flow(lib_dir, peers=("csd", "dpu", "dpu2", "agg")):
+    eng = FlowEngine(Context("host", lib_dir=lib_dir), default_timeout=20.0)
+    fabs = {"csd": LoopbackFabric()}
+    for p in peers:
+        eng.add_node(p, fabs.get(p, RdmaFabric()))
+    return eng
+
+
+def _etl(candidates=("dpu", "dpu2")):
+    return (Flow("etl")
+            .stage("csd_decompress", at="csd")
+            .then("dpu_filter", at=list(candidates),
+                  bind={"mode": "kw", "key": "data",
+                        "static": {"threshold": 50}})
+            .then("host_aggregate", at="agg"))
+
+
+def test_flow_reroutes_multi_candidate_stage(lib_dir):
+    eng = _mk_flow(lib_dir)
+    fut = eng.submit(_etl(), _blob([(7, 10), (100, 5), (7, 3)]))
+    picked = eng._chains[fut.corr_id]["entries"][1].peer
+    assert eng.on_peer_death(picked) == 1      # in flight: replays
+    assert picked not in eng.nodes
+    assert fut.result() == _ETL_OUT
+    assert eng.stats["replays"] == 1 and eng.stats["errors"] == 0
+    assert eng.pending() == 0
+
+
+def test_flow_kill_mid_chain_replays_from_progress(lib_dir):
+    """Stage 1 completes, the stage-2 peer dies holding the forward: the
+    replay resumes from the recorded stage-1 value, not from scratch."""
+    eng = _mk_flow(lib_dir)
+    inj = FaultInjector()
+    fut = eng.submit(_etl(), _blob([(7, 10), (100, 5), (7, 3)]))
+    picked = eng._chains[fut.corr_id]["entries"][1].peer
+    inj.kill_peer(picked)
+    for nd in eng.nodes.values():              # the whole mesh sees the kill
+        nd.dispatcher.faults = inj
+    for _ in range(6):
+        eng.progress()                         # stage 1 runs; stage 2 wedged
+    st = eng._chains[fut.corr_id]
+    assert st["node"] == "csd"                 # progress recorded at stage 1
+    assert len(st["remaining"]) == 2
+    assert eng.on_peer_death(picked) == 1
+    assert fut.result() == _ETL_OUT
+    assert eng.nodes["csd"].ctx.stats["executed"] == 1   # no re-run of stage 1
+
+
+def test_flow_pinned_stage_fails_future(lib_dir):
+    eng = _mk_flow(lib_dir)
+    fut = eng.submit(Flow("pinned")
+                     .stage("csd_decompress", at="csd")
+                     .then("host_aggregate", at="dpu"),
+                     _blob([(1, 2)]))
+    eng.on_peer_death("dpu")
+    with pytest.raises(TransportError, match="cannot be rebuilt"):
+        fut.result()
+    assert eng.stats["replay_failed"] == 1
+    assert eng.pending() == 0
+
+
+def test_flow_untouched_chains_not_replayed(lib_dir):
+    eng = _mk_flow(lib_dir)
+    fut = eng.submit(Flow("other").stage("csd_decompress", at="csd")
+                     .then("host_aggregate", at="agg"), _blob([(3, 4)]))
+    assert eng.on_peer_death("dpu2") == 0      # dpu2 never touched this chain
+    assert fut.result()["count"] == 4
+    assert eng.stats["replays"] == 0
+
+
+def test_flow_scatter_branch_death_fails_future(lib_dir):
+    """Scatter branches are semantic placement (the shard lives there):
+    a branch peer dying fails the chain instead of running elsewhere."""
+    from repro.tasks.graph import pack_csr_shard
+
+    eng = _mk_flow(lib_dir)
+    for (peer, sid), es in {("csd", 0): [(0, 1, 0.9)],
+                            ("dpu", 1): [(2, 3, 0.8)]}.items():
+        eng.nodes[peer].target_args.setdefault("shards", {})[sid] = \
+            pack_csr_shard(sid * 2, 2, es)
+    q = (Flow("count")
+         .scatter("graph_count", at=["csd", "dpu"],
+                  binds=[{"mode": "static", "static": {"sid": 0, "wmin": 0.0}},
+                         {"mode": "static", "static": {"sid": 1, "wmin": 0.0}}])
+         .gather("flow_reduce", at="agg"))
+    fut = eng.submit(q, None)
+    eng.on_peer_death("dpu")
+    with pytest.raises(TransportError):
+        fut.result()
+    # no stale rendezvous state survives the failure
+    assert not any(eng.nodes[n].gathers for n in eng.nodes)
+
+
+def test_controller_drives_flow_replay(lib_dir):
+    """End to end: the heartbeat deadline (not a manual call) triggers the
+    flow's re-route, through ElasticController._on_death."""
+    eng = _mk_flow(lib_dir)
+    inj = FaultInjector()
+    rt, fabs, ctxs = _mk_rt(lib_dir, names=())
+    fleet = FleetState(["dpu"], heartbeat_deadline=DEADLINE)
+    ec = ElasticController(rt, fleet, injector=inj, flow=eng,
+                           lib_dir=lib_dir, auto_poll=False)
+    ec.watch("dpu", eng.nodes["dpu"].fabric, eng.nodes["dpu"].ctx, now=0.0)
+    fut = eng.submit(_etl(candidates=("dpu",)), # compiler picks dpu...
+                     _blob([(7, 10), (100, 5), (7, 3)]))
+    # ...but the op list held both candidates for the re-route
+    eng._chains[fut.corr_id]["entry_ops"] = (
+        ("stage", "csd_decompress", "csd", None, 4096),
+        ("stage", "dpu_filter", ["dpu", "dpu2"],
+         {"mode": "kw", "key": "data", "static": {"threshold": 50}}, 4096),
+        ("stage", "host_aggregate", "agg", None, 4096))
+    inj.kill_peer("dpu")
+    t, dead = 0.0, []
+    while not dead:
+        t += 0.1
+        dead = ec.step(now=t)
+    assert dead == ["dpu"] and "dpu" not in eng.nodes
+    assert fut.result() == _ETL_OUT
+    assert eng.stats["replays"] == 1
